@@ -1,0 +1,64 @@
+"""Shared benchmark utilities: timing, the mini measurement model, rows."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import build_model
+
+
+def bench_model_config(d_model: int = 128, num_layers: int = 4,
+                       vocab: int = 512, dtype: str = "float32") -> ModelConfig:
+    """Llama2-family config scaled to CPU measurement size. The paper's
+    subject is Llama2; the *shape* of its overhead curves is what we
+    reproduce — absolute times are container-CPU times."""
+    return ModelConfig(
+        name="llama2-mini", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=4, num_kv_heads=4, head_dim=d_model // 4,
+        d_ff=4 * d_model, vocab_size=vocab, dtype=dtype,
+        parallel=ParallelConfig(remat="none"),
+    )
+
+
+def build_bench_model(seed: int = 0, **kw):
+    cfg = bench_model_config(**kw)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(seed))
+    return cfg, model, params
+
+
+def time_fn(fn: Callable[[], object], *, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (outputs block_until_ready'd)."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def emit(rows: List[Row]) -> List[Row]:
+    for r in rows:
+        print(r.csv(), flush=True)
+    return rows

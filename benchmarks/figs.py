@@ -1,0 +1,354 @@
+"""One benchmark per paper table/figure (DESIGN.md §6 index).
+
+Measured benchmarks exercise OUR confidential substrate for real on this
+CPU (crypto on the data path); modeled benchmarks evaluate the calibrated
+TEE overhead model. Every function returns (and prints) Row records:
+``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, build_bench_model, emit, time_fn
+from repro.core import PROFILES, RooflineTerms, TrustDomain, predict
+from repro.core.overheads import sweep_batch
+from repro.costs.model import (Workload, best_cpu_cost, crossover_batch,
+                               usd_per_mtok, vcpu_sweep)
+from repro.data.pipeline import synthetic_text
+from repro.models import layers
+from repro.quant import quantize_int8, qmatmul_ref
+from repro.rag.pipeline import RAGPipeline
+from repro.runtime.engine import Engine
+
+
+# ---------------------------------------------------------------------------
+# Fig 3: backend comparison (HF vs vLLM vs IPEX analogue)
+# ---------------------------------------------------------------------------
+
+def fig03_frameworks() -> List[Row]:
+    """Three inference backends for the same decode step:
+    naive-f32 (HF analogue), fused-scan (IPEX-bf16 analogue),
+    int8-weights (IPEX-int8/AMX analogue)."""
+    rows = []
+    cfg, model, params = build_bench_model(dtype="float32")
+    b, s = 4, 64
+    cache = model.init_cache(b, s + 8)
+    pf = {"tokens": jnp.ones((b, s), jnp.int32)}
+    _, cache = jax.jit(model.prefill)(params, pf, cache)
+    tok = jnp.ones((b, 1), jnp.int32)
+
+    # naive: python-loop layers (no scan), f32
+    naive_cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, scan_layers=False))
+    from repro.models import build_model as _bm
+    naive_model = _bm(naive_cfg)
+    naive_decode = jax.jit(naive_model.decode_step)   # jit once (bound-method
+    decode = jax.jit(model.decode_step)               # identity gotcha)
+    t_naive = time_fn(lambda: naive_decode(params, tok, cache))
+    t_fused = time_fn(lambda: decode(params, tok, cache))
+
+    # int8 weight path on the dominant matmuls (AMX analogue): time the
+    # MLP+attention projection GEMMs in int8 vs f32 at decode shapes
+    d, f = cfg.d_model, cfg.d_ff
+    x = jax.random.normal(jax.random.key(0), (b, d), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (d, f), jnp.float32)
+    wq = quantize_int8(w)
+    mm32 = jax.jit(lambda a, b_: a @ b_)
+    mm8 = jax.jit(qmatmul_ref)
+    t_f32_mm = time_fn(lambda: mm32(x, w))
+    t_int8_mm = time_fn(lambda: mm8(x, wq))
+
+    rows.append(Row("fig03/naive_f32_decode", t_naive * 1e6,
+                    f"tok_s={b / t_naive:.1f}"))
+    rows.append(Row("fig03/fused_scan_decode", t_fused * 1e6,
+                    f"tok_s={b / t_fused:.1f};speedup_vs_naive={t_naive / t_fused:.2f}x"))
+    rows.append(Row("fig03/gemm_f32", t_f32_mm * 1e6, "dominant decode GEMM"))
+    rows.append(Row("fig03/gemm_int8", t_int8_mm * 1e6,
+                    f"int8_vs_f32={t_f32_mm / t_int8_mm:.2f}x"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fig 4: TEE throughput/latency overheads (measured + modeled)
+# ---------------------------------------------------------------------------
+
+def fig04_tee_overheads() -> List[Row]:
+    rows = []
+    cfg, model, params = build_bench_model()
+
+    def serve(td_mode: str):
+        td = TrustDomain(td_mode)
+        if td.confidential:  # sealed-weights load path (the real crypto cost)
+            sealed = td.seal_params(params)
+            p = td.load_sealed(sealed, params)
+        else:
+            p = params
+        eng = Engine(model, p, max_slots=4, max_len=96, prefill_len=16,
+                     trust_domain=td)
+        t0 = time.monotonic()
+        for i in range(4):
+            eng.submit(np.full(16, i + 2, np.int32), max_new_tokens=8)
+        stats = eng.run()
+        wall = time.monotonic() - t0
+        return stats, wall
+
+    serve("none")  # warmup: populate the jit cache so both modes compare warm
+    s_plain, w_plain = serve("none")
+    s_tee, w_tee = serve("tdx")
+    thr_ov = w_tee / w_plain - 1
+    lat_ov = (s_tee.mean_latency_s / s_plain.mean_latency_s - 1
+              if s_plain.mean_latency_s else 0.0)
+    noise = "(within run-to-run noise)" if abs(thr_ov) < 0.1 else ""
+    rows.append(Row("fig04/measured_plain", w_plain * 1e6,
+                    f"thr={s_plain.throughput_tps:.1f}tok_s"))
+    rows.append(Row("fig04/measured_confidential", w_tee * 1e6,
+                    f"thr_overhead={thr_ov * 100:.1f}%{noise};"
+                    f"lat_overhead={lat_ov * 100:.1f}%"))
+
+    # modeled: paper's platforms at CPU-scale single-socket terms
+    terms = RooflineTerms(compute_s=0.012, memory_s=0.045, collective_s=0.002)
+    for prof in ("vm", "sgx", "tdx"):
+        ov = predict(terms, prof)
+        rows.append(Row(f"fig04/modeled_{prof}", ov.t_tee_s * 1e6,
+                        f"overhead={ov.overhead * 100:.2f}%"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Figs 5-6: NUMA / hugepages placement penalties (modeled)
+# ---------------------------------------------------------------------------
+
+def fig05_06_placement() -> List[Row]:
+    rows = []
+    terms = RooflineTerms(compute_s=0.012, memory_s=0.055, collective_s=0.008)
+    for prof in ("tdx", "sgx"):
+        good = predict(terms, prof)
+        bad_numa = predict(terms, prof, numa_bound=False)
+        rows.append(Row(f"fig05/{prof}_numa_bound", good.t_tee_s * 1e6,
+                        f"overhead={good.overhead * 100:.1f}%"))
+        rows.append(Row(f"fig05/{prof}_numa_broken", bad_numa.t_tee_s * 1e6,
+                        f"overhead={bad_numa.overhead * 100:.1f}%"))
+    no_huge = predict(terms, "tdx", hugepages_fixed=False)
+    rows.append(Row("fig06/tdx_no_1g_hugepages", no_huge.t_tee_s * 1e6,
+                    f"overhead={no_huge.overhead * 100:.1f}%"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fig 7: per-block decode breakdown (measured)
+# ---------------------------------------------------------------------------
+
+def fig07_per_block() -> List[Row]:
+    rows = []
+    cfg, model, params = build_bench_model(d_model=256, num_layers=2)
+    b, s = 4, 256
+    d, h, hd, f = cfg.d_model, cfg.num_heads, cfg.head_dim_, cfg.d_ff
+    lp = jax.tree.map(lambda x: x[0], params["layers"])["slot_0"]
+    x = jax.random.normal(jax.random.key(0), (b, s, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    from repro.models.transformer import _attn_cfg
+    acfg = _attn_cfg(cfg)
+
+    comps = {
+        "input_norm": jax.jit(lambda: layers.rmsnorm(lp["pre_norm"], x)),
+        "self_attention": jax.jit(lambda: layers.attention_forward(lp["attn"], acfg, x, pos)),
+        "post_norm": jax.jit(lambda: layers.rmsnorm(lp["post_norm"], x)),
+        "mlp_swiglu": jax.jit(lambda: layers.swiglu(lp["ffn"], x)),
+    }
+    times = {k: time_fn(v) for k, v in comps.items()}
+    total = sum(times.values())
+    for k, t in times.items():
+        rows.append(Row(f"fig07/{k}", t * 1e6, f"share={t / total * 100:.1f}%"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fig 8: AMX (int8/bf16 matrix units) vs none, across batch (measured)
+# ---------------------------------------------------------------------------
+
+def fig08_amx() -> List[Row]:
+    """int8-GEMM (AMX/MXU analogue) vs f32 GEMM across batch sizes: the
+    low-precision advantage grows with arithmetic intensity (Insight 8)."""
+    rows = []
+    d, f = 512, 2048
+    w = jax.random.normal(jax.random.key(1), (d, f), jnp.float32)
+    wq = quantize_int8(w)
+    mm32 = jax.jit(lambda a: a @ w)
+    mm8 = jax.jit(qmatmul_ref)
+    for batch in (1, 8, 32, 128):
+        x = jax.random.normal(jax.random.key(0), (batch, d), jnp.float32)
+        t32 = time_fn(lambda: mm32(x), iters=10)
+        t8 = time_fn(lambda: mm8(x, wq), iters=10)
+        rows.append(Row(f"fig08/batch{batch}", t8 * 1e6,
+                        f"int8_speedup={t32 / t8:.2f}x"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fig 9: overhead vs batch size (measured boundary crypto + modeled memcrypt)
+# ---------------------------------------------------------------------------
+
+def fig09_batch_scaling() -> List[Row]:
+    rows = []
+    cfg, model, params = build_bench_model()
+    for batch in (1, 2, 4, 8):
+        cache = model.init_cache(batch, 48)
+        pf = {"tokens": jnp.ones((batch, 16), jnp.int32)}
+        prefill = jax.jit(model.prefill)
+        _, cache0 = prefill(params, pf, cache)
+        decode = jax.jit(model.decode_step)
+        tok = jnp.ones((batch, 1), jnp.int32)
+        t_step = time_fn(lambda: decode(params, tok, cache0))
+        # measured boundary crypto for this batch (ingress+egress per request)
+        td = TrustDomain("tdx")
+        t0 = time.perf_counter()
+        for i in range(batch):
+            td.ingress(np.full(16, 3, np.int32))
+            td.egress(np.full(8, 4, np.int32))
+        t_crypto = time.perf_counter() - t0
+        per_tok_ov = t_crypto / (batch * 8) / t_step
+        modeled = sweep_batch("tdx", compute_per_token_s=t_step / batch / 4,
+                              memory_s=t_step * 0.75, batches=[batch])[batch]
+        rows.append(Row(f"fig09/batch{batch}", t_step * 1e6,
+                        f"measured_boundary_ov={per_tok_ov * 100:.2f}%;"
+                        f"modeled_tdx_ov={modeled * 100:.2f}%"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fig 10: overhead vs input size (measured)
+# ---------------------------------------------------------------------------
+
+def fig10_input_scaling() -> List[Row]:
+    rows = []
+    cfg, model, params = build_bench_model()
+    td = TrustDomain("tdx")
+    prefill = jax.jit(model.prefill, static_argnames=())
+    for s in (16, 64, 256):
+        cache = model.init_cache(2, s + 8)
+        pf = {"tokens": jnp.ones((2, s), jnp.int32)}
+        t_pref = time_fn(lambda: prefill(params, pf, cache))
+        t0 = time.perf_counter()
+        td.ingress(np.ones((2, s), np.int32))
+        t_crypto = time.perf_counter() - t0
+        ov = t_crypto / t_pref
+        rows.append(Row(f"fig10/input{s}", t_pref * 1e6,
+                        f"boundary_ov={ov * 100:.2f}%"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fig 11: cGPU overheads vs batch/input (modeled, calibrated)
+# ---------------------------------------------------------------------------
+
+def fig11_cgpu() -> List[Row]:
+    rows = []
+    # H100-scale decode step terms for llama2-7b: weight streaming at HBM
+    # roofline (13.4 GB @ 3.9 TB/s = 3.4 ms/step) + batch-scaled compute.
+    memory_s = 13.4e9 / 3.9e12
+    for batch in (1, 16, 64, 256):
+        compute_s = 2 * 6.7e9 * batch / 990e12
+        terms = RooflineTerms(compute_s=compute_s, memory_s=memory_s)
+        ov = predict(terms, "cgpu")
+        rows.append(Row(f"fig11/batch{batch}", ov.t_tee_s * 1e6,
+                        f"cgpu_overhead={ov.overhead * 100:.2f}%"))
+    for in_len in (128, 1024, 8192):
+        # prefill-ish: compute grows ~quadratically via attention
+        compute_s = (2 * 6.7e9 * 4 * in_len + 4 * 4096 * in_len ** 2 * 32) / 990e12
+        terms = RooflineTerms(compute_s=compute_s, memory_s=memory_s)
+        ov = predict(terms, "cgpu")
+        rows.append(Row(f"fig11/input{in_len}", ov.t_tee_s * 1e6,
+                        f"cgpu_overhead={ov.overhead * 100:.2f}%"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Figs 12-13: cost model
+# ---------------------------------------------------------------------------
+
+def fig12_13_cost() -> List[Row]:
+    rows = []
+    w = Workload(n_params=6.7e9, batch=1, in_tokens=128, out_tokens=128)
+    for v, d in vcpu_sweep(dataclasses.replace(w, batch=64), "emr-amx-tdx",
+                           [8, 16, 32, 64]).items():
+        rows.append(Row(f"fig12/vcpu{v}", 1e6 / max(d["tokens_per_s"], 1e-9),
+                        f"usd_per_mtok={d['usd_per_mtok']:.2f}"))
+    for b in (1, 4, 16, 64, 128, 256):
+        wb = dataclasses.replace(w, batch=b)
+        cpu = best_cpu_cost(wb, "emr-amx-tdx")
+        gpu = usd_per_mtok(wb, "h100-cc")
+        tpu = usd_per_mtok(wb, "v5e-cc")
+        rows.append(Row(f"fig12/batch{b}", 0.0,
+                        f"cpu=${cpu:.2f};cgpu=${gpu:.2f};v5e_cc=${tpu:.2f};"
+                        f"cpu_adv={(gpu / cpu - 1) * 100:.0f}%"))
+    x = crossover_batch(w, "emr-amx-tdx", "h100-cc",
+                        [1, 2, 4, 8, 16, 32, 64, 128, 256, 512])
+    rows.append(Row("fig12/crossover_batch", 0.0,
+                    f"batch={x};paper_reports~128"))
+    for s in (128, 256, 512, 1024):
+        ws = dataclasses.replace(w, batch=4, in_tokens=s)
+        rows.append(Row(f"fig13/input{s}", 0.0,
+                        f"cpu=${best_cpu_cost(ws, 'emr-amx-tdx'):.2f};"
+                        f"cgpu=${usd_per_mtok(ws, 'h100-cc'):.2f}"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Fig 14: RAG pipelines in the TEE (measured)
+# ---------------------------------------------------------------------------
+
+def fig14_rag() -> List[Row]:
+    """Mean evaluation time per query, plain vs TDX, three retrieval modes.
+    The paper's BEIR runs are batch evaluations: boundary crypto amortizes
+    over the batch, leaving the TEE overhead in single digits."""
+    rows = []
+    docs = {f"d{i}": synthetic_text(i, 30) for i in range(200)}
+    docs["hit"] = "confidential enclave attestation llama inference " * 5
+    queries = ["confidential enclave attestation", "decode throughput batch",
+               "memory encryption keystream", "expert shard pipeline"] * 4
+    for mode in ("bm25", "bm25+rerank", "dense"):
+        times = {}
+        for tee in ("none", "tdx"):
+            p = RAGPipeline(docs, mode=mode, trust_domain=TrustDomain(tee))
+            for q in queries[:2]:
+                p.retrieve(q)  # warmup (jit, caches)
+            td = p.td
+            t0 = time.perf_counter()
+            # batch evaluation: one boundary crossing for the whole query set
+            blob = "\n".join(queries).encode()
+            clear = bytes(td.ingress(np.frombuffer(blob, np.uint8))).decode()
+            for q in clear.split("\n"):
+                p.retrieve(q)
+            times[tee] = (time.perf_counter() - t0) / len(queries)
+        ov = times["tdx"] / times["none"] - 1
+        rows.append(Row(f"fig14/{mode}", times["tdx"] * 1e6,
+                        f"tee_overhead={ov * 100:.1f}%"))
+    return emit(rows)
+
+
+# ---------------------------------------------------------------------------
+# Table I: summary matrix
+# ---------------------------------------------------------------------------
+
+def table1_summary() -> List[Row]:
+    rows = []
+    terms = RooflineTerms(compute_s=0.012, memory_s=0.045, collective_s=0.002)
+    for name, prof in PROFILES.items():
+        ov = predict(terms, name)
+        rows.append(Row(f"table1/{name}", ov.t_tee_s * 1e6,
+                        f"single_resource_ov={ov.overhead * 100:.1f}%;"
+                        f"mem_tax={prof.mem_tax};link_tax={prof.link_tax};"
+                        f"boundary_us={prof.fixed_boundary_s * 1e6:.0f}"))
+    return emit(rows)
+
+
+ALL = [fig03_frameworks, fig04_tee_overheads, fig05_06_placement,
+       fig07_per_block, fig08_amx, fig09_batch_scaling, fig10_input_scaling,
+       fig11_cgpu, fig12_13_cost, fig14_rag, table1_summary]

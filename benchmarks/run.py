@@ -1,0 +1,31 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Measured rows run OUR
+confidential substrate on this CPU; modeled rows evaluate the calibrated TEE
+overhead model (DESIGN.md §2 'measured vs modeled').
+
+    PYTHONPATH=src python -m benchmarks.run [fig03 fig09 ...]
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import figs
+
+    names = sys.argv[1:]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for fn in figs.ALL:
+        if names and not any(fn.__name__.startswith(n) for n in names):
+            continue
+        try:
+            fn()
+        except Exception as e:  # report, keep going
+            print(f"{fn.__name__}/ERROR,0,{type(e).__name__}:{str(e)[:120]}")
+    print(f"# total_wall_s={time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Confidential RAG (paper §VI): the corpus, index, retrieval, and generation
+all live inside the trust domain; queries arrive encrypted.
+
+    PYTHONPATH=src python examples/rag_confidential.py
+"""
+
+import jax
+
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.data.pipeline import synthetic_text
+from repro.models import build_model
+from repro.rag.pipeline import RAGPipeline
+from repro.runtime.engine import Engine
+
+
+def main():
+    docs = {f"doc{i}": synthetic_text(i, 10) for i in range(25)}
+    docs["policy"] = ("confidential enclave attestation protects llama "
+                      "inference and patient record throughput")
+
+    td = TrustDomain("tdx")
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    engine = Engine(model, params, max_slots=2, max_len=96, prefill_len=16,
+                    trust_domain=td)
+
+    for mode in ("bm25", "bm25+rerank"):
+        rag = RAGPipeline(docs, mode=mode, engine=engine, trust_domain=td)
+        res = rag.query("which enclave protects patient records?",
+                        top_k=2, max_new_tokens=8)
+        print(f"[{mode}] top docs: {[d for d, _ in res.retrieved]} "
+              f"(retrieval {res.retrieval_s * 1e3:.1f}ms, "
+              f"generation {res.generation_s * 1e3:.0f}ms)")
+    print(f"boundary traffic: {td.channel.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Train a small LM end to end with the full fault-tolerance stack:
+sealed checkpoints every N steps, an injected failure, and a restart that
+resumes to the bitwise-identical loss curve.
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 60] [--d-model 128]
+    (--d-model 512 --layers 12 approximates the ~100M-param configuration;
+     defaults are CPU-demo sized)
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import TrustDomain
+from repro.data.pipeline import PackedLMDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.distributed.fault_tolerance import FailureInjector, run_with_restarts
+from repro.models import build_model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="train-tiny", family="dense", num_layers=args.layers,
+        d_model=args.d_model, num_heads=4, num_kv_heads=4,
+        head_dim=args.d_model // 4, d_ff=4 * args.d_model,
+        vocab_size=ByteTokenizer.vocab_size, dtype="float32",
+        parallel=ParallelConfig(remat="none"))
+    model = build_model(cfg)
+    total, _ = cfg.params_count()
+    print(f"model: {total / 1e6:.1f}M params, {args.steps} steps")
+
+    opt = AdamWConfig(lr=3e-4, warmup_steps=10, total_steps=args.steps)
+    state = init_train_state(model, opt, jax.random.key(0))
+    step_fn = make_train_step(model, opt, microbatches=2)
+
+    def data_factory(cursor):
+        ds = PackedLMDataset(batch_size=args.batch, seq_len=args.seq, seed=0)
+        it = iter(ds)
+        for _ in range(cursor):
+            next(it)
+        return it
+
+    td = TrustDomain("tdx")  # sealed checkpoints
+    mgr = CheckpointManager(args.ckpt_dir, keep_n=2, trust_domain=td)
+    injector = FailureInjector(fail_at={args.steps // 2})
+
+    t0 = time.monotonic()
+    state, losses, restarts = run_with_restarts(
+        state=state, train_step=step_fn, data_factory=data_factory,
+        num_steps=args.steps, manager=mgr, checkpoint_every=10,
+        injector=injector)
+    wall = time.monotonic() - t0
+
+    print(f"survived {restarts} injected failure(s); {wall:.1f}s total")
+    for i in range(0, len(losses), max(1, len(losses) // 10)):
+        print(f"  step {i:4d}  loss {losses[i]:.4f}")
+    print(f"  final loss {losses[-1]:.4f} "
+          f"(start {losses[0]:.4f} -> {'improved' if losses[-1] < losses[0] else 'check'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Confidential-computing core: the paper's contribution as a framework layer.
+
+TrustDomain (confidential.py) composes sealing (encrypted weights, Pallas
+unseal kernel), attestation (measurement/quote/key-release), encrypted token
+I/O (bounce.py), and the calibrated TEE overhead model (overheads.py).
+"""
+
+from repro.core.confidential import TrustDomain
+from repro.core.sealing import (
+    SealingKey, SealedTensor, IntegrityError,
+    seal_tensor, unseal_tensor, seal_tree, unseal_tree, tree_digest,
+)
+from repro.core.attestation import (
+    Quote, HardwareRoot, Verifier, AttestationError, measurement, measure_code,
+)
+from repro.core.bounce import BounceBuffer
+from repro.core.overheads import RooflineTerms, TEEProfile, PROFILES, predict
+
+__all__ = [
+    "TrustDomain", "SealingKey", "SealedTensor", "IntegrityError",
+    "seal_tensor", "unseal_tensor", "seal_tree", "unseal_tree", "tree_digest",
+    "Quote", "HardwareRoot", "Verifier", "AttestationError", "measurement",
+    "measure_code", "BounceBuffer", "RooflineTerms", "TEEProfile", "PROFILES",
+    "predict",
+]

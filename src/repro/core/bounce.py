@@ -1,0 +1,72 @@
+"""Encrypted bounce buffer for host<->device token I/O.
+
+NVIDIA cGPUs route every PCIe transfer through an encrypted+authenticated
+bounce buffer (paper §V-A) — the main cGPU overhead source, amortized by
+batch/input size (Insight 10). We implement the same structure for the
+host<->TPU boundary: prompts enter and tokens leave the trust domain only as
+ciphertext; the device side unseals with the ChaCha20 Pallas kernel.
+
+The channel keeps byte/crypto counters so benchmarks can attribute boundary
+costs exactly (fig04/fig11 harnesses).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.sealing import SealingKey, SealedTensor, seal_tensor, unseal_tensor
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    messages_in: int = 0
+    messages_out: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+
+    def reset(self):
+        self.messages_in = self.messages_out = 0
+        self.bytes_in = self.bytes_out = 0
+
+
+class BounceBuffer:
+    """Symmetric encrypted channel. ``host_*`` runs outside the trust domain,
+    ``device_*`` inside. Sequence numbers make each message's nonce unique."""
+
+    def __init__(self, key: SealingKey):
+        self.key = key
+        self.stats = ChannelStats()
+        self._seq_in = 0
+        self._seq_out = 0
+
+    # host -> device
+    def host_send(self, tokens: np.ndarray) -> SealedTensor:
+        name = f"ingress/{self._seq_in}"
+        self._seq_in += 1
+        sealed = seal_tensor(self.key, name, tokens)
+        self.stats.messages_in += 1
+        self.stats.bytes_in += sealed.n_bytes
+        return sealed
+
+    def device_recv(self, sealed: SealedTensor) -> np.ndarray:
+        return np.asarray(unseal_tensor(self.key, sealed))
+
+    # device -> host
+    def device_send(self, tokens: np.ndarray) -> SealedTensor:
+        name = f"egress/{self._seq_out}"
+        self._seq_out += 1
+        sealed = seal_tensor(self.key, name, tokens)
+        self.stats.messages_out += 1
+        self.stats.bytes_out += sealed.n_bytes
+        return sealed
+
+    def host_recv(self, sealed: SealedTensor) -> np.ndarray:
+        return np.asarray(unseal_tensor(self.key, sealed))
+
+    def roundtrip(self, tokens: np.ndarray) -> Tuple[np.ndarray, SealedTensor]:
+        """Convenience: host->device one message (tests/benchmarks)."""
+        sealed = self.host_send(tokens)
+        return self.device_recv(sealed), sealed

@@ -1,0 +1,121 @@
+"""TrustDomain — the paper's contribution as a first-class framework feature.
+
+A :class:`TrustDomain` is the deployment-level object that turns a plain
+JAX inference/training stack into a *confidential* one (cLLM):
+
+  1. models are loaded only from sealed checkpoints (ChaCha20 + HMAC,
+     on-device unseal kernel),
+  2. the domain attests itself (measurement -> quote) and the client-side
+     :class:`~repro.core.attestation.Verifier` releases the sealing key only
+     on a valid quote,
+  3. prompt/response token I/O crosses the boundary through an encrypted
+     :class:`~repro.core.bounce.BounceBuffer`,
+  4. every boundary crossing is recorded in an audit log, and the calibrated
+     overhead model prices the configuration for capacity planning.
+
+Modes mirror the paper's platforms: "none" (bare), "vm", "sgx", "tdx",
+"cgpu", "tpu_cc". Crypto is real in all confidential modes; the mode selects
+the overhead profile used for modeled numbers and which boundary mechanisms
+are active.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import attestation, bounce, overheads, sealing
+
+Params = Any
+
+
+@dataclasses.dataclass
+class AuditEvent:
+    ts: float
+    kind: str
+    detail: str
+
+
+class TrustDomain:
+    def __init__(self, mode: str = "tdx",
+                 sealing_key: Optional[sealing.SealingKey] = None,
+                 io_key: Optional[sealing.SealingKey] = None,
+                 platform_secret: Optional[bytes] = None):
+        if mode != "none" and mode not in overheads.PROFILES:
+            raise ValueError(f"unknown TEE mode '{mode}'")
+        self.mode = mode
+        self.confidential = mode != "none"
+        self.sealing_key = sealing_key or sealing.SealingKey.generate()
+        self.io_key = io_key or sealing.SealingKey.generate()
+        self.channel = bounce.BounceBuffer(self.io_key)
+        self.root = attestation.HardwareRoot(mode if self.confidential else "none",
+                                             platform_secret)
+        self.audit: List[AuditEvent] = []
+        self._model_digest = ""
+        self._code_hash: Optional[str] = None
+
+    # -- audit ---------------------------------------------------------------
+    def _log(self, kind: str, detail: str = ""):
+        self.audit.append(AuditEvent(time.monotonic(), kind, detail))
+
+    # -- sealing -------------------------------------------------------------
+    def seal_params(self, params: Params, prefix: str = "params") -> Dict[str, sealing.SealedTensor]:
+        sealed = sealing.seal_tree(self.sealing_key, params, prefix)
+        self._model_digest = sealing.tree_digest(sealed)
+        self._log("seal", f"{len(sealed)} tensors, digest={self._model_digest[:12]}")
+        return sealed
+
+    def load_sealed(self, sealed: Dict[str, sealing.SealedTensor],
+                    treedef_like: Params, prefix: str = "params") -> Params:
+        if not self.confidential:
+            raise RuntimeError("load_sealed requires a confidential mode")
+        params = sealing.unseal_tree(self.sealing_key, sealed, treedef_like, prefix)
+        self._model_digest = sealing.tree_digest(sealed)
+        self._log("unseal", f"{len(sealed)} tensors")
+        return params
+
+    # -- attestation ---------------------------------------------------------
+    def measurement(self, config_repr: str = "") -> str:
+        if self._code_hash is None:
+            self._code_hash = attestation.measure_code()
+        return attestation.measurement(self._code_hash, config_repr,
+                                       self._model_digest)
+
+    def quote(self, nonce: str, config_repr: str = "") -> attestation.Quote:
+        q = self.root.quote(self.measurement(config_repr), nonce)
+        self._log("quote", f"nonce={nonce[:8]}")
+        return q
+
+    def make_verifier(self, config_repr: str = "") -> attestation.Verifier:
+        """Client-side verifier pinned to this domain's current measurement."""
+        return attestation.Verifier(self.root, self.measurement(config_repr))
+
+    # -- boundary I/O ----------------------------------------------------------
+    def ingress(self, tokens: np.ndarray) -> np.ndarray:
+        """Host -> trust domain. Encrypted in confidential modes."""
+        if not self.confidential:
+            return tokens
+        sealed = self.channel.host_send(tokens)
+        out = self.channel.device_recv(sealed)
+        self._log("ingress", f"{sealed.n_bytes}B")
+        return out
+
+    def egress(self, tokens: np.ndarray) -> np.ndarray:
+        """Trust domain -> host."""
+        if not self.confidential:
+            return tokens
+        sealed = self.channel.device_send(tokens)
+        out = self.channel.host_recv(sealed)
+        self._log("egress", f"{sealed.n_bytes}B")
+        return out
+
+    # -- overhead model -----------------------------------------------------
+    def predict_overhead(self, terms: overheads.RooflineTerms,
+                         **kw) -> Optional[overheads.OverheadBreakdown]:
+        if not self.confidential:
+            return None
+        return overheads.predict(terms, self.mode, **kw)

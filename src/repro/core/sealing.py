@@ -1,0 +1,132 @@
+"""Sealed tensors: encrypt-then-MAC at rest, Pallas-kernel decrypt on device.
+
+The TPU-native analogue of TDX/SGX inline memory encryption (DESIGN.md §2):
+model weights and KV pages are stored/moved as ChaCha20 ciphertext in the
+kernel-friendly blocked layout and XOR-decrypted on the way into compute by
+``kernels/chacha20.py``. Integrity is encrypt-then-MAC with HMAC-SHA256 over
+(header || ciphertext) — a flipped ciphertext bit fails verification before
+any plaintext is produced (the integrity property HE schemes lack, §II).
+
+Nonces are derived per-tensor from (key id, tensor name) so no (key, nonce)
+pair is ever reused across tensors; the block counter spans within a tensor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import hmac
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+Params = Any
+
+
+class IntegrityError(Exception):
+    """MAC verification failed — ciphertext or header was tampered with."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SealingKey:
+    key: bytes          # 32-byte ChaCha20 key
+    mac_key: bytes      # 32-byte HMAC key (independent)
+
+    @classmethod
+    def generate(cls, seed: bytes | None = None) -> "SealingKey":
+        if seed is not None:
+            k = hashlib.sha256(b"seal" + seed).digest()
+            m = hashlib.sha256(b"mac" + seed).digest()
+            return cls(k, m)
+        return cls(os.urandom(32), os.urandom(32))
+
+    @property
+    def key_words(self) -> jax.Array:
+        return jnp.asarray(np.frombuffer(self.key, np.uint32))
+
+    def key_id(self) -> str:
+        return hashlib.sha256(self.key).hexdigest()[:16]
+
+
+def _nonce_for(key: SealingKey, name: str) -> bytes:
+    return hashlib.sha256(key.key_id().encode() + b"|" + name.encode()).digest()[:12]
+
+
+@dataclasses.dataclass
+class SealedTensor:
+    name: str
+    ciphertext: jax.Array    # uint32 [16, N] blocked layout
+    mac: bytes
+    shape: Tuple[int, ...]
+    dtype: str
+    n_bytes: int
+
+    def header(self) -> bytes:
+        return f"{self.name}|{self.shape}|{self.dtype}|{self.n_bytes}".encode()
+
+
+def _mac(key: SealingKey, sealed_header: bytes, ciphertext: jax.Array) -> bytes:
+    h = hmac.new(key.mac_key, sealed_header, hashlib.sha256)
+    h.update(np.asarray(ciphertext).tobytes())
+    return h.digest()
+
+
+def seal_tensor(key: SealingKey, name: str, array: jax.Array) -> SealedTensor:
+    arr = np.asarray(array)
+    raw = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+    blocked, n_bytes = ops.pack_u32(raw)
+    nonce = jnp.asarray(np.frombuffer(_nonce_for(key, name), np.uint32))
+    ciphertext = ops.seal_u32(key.key_words, nonce, blocked)
+    st = SealedTensor(name=name, ciphertext=ciphertext, mac=b"",
+                      shape=tuple(arr.shape), dtype=str(arr.dtype),
+                      n_bytes=n_bytes)
+    st.mac = _mac(key, st.header(), ciphertext)
+    return st
+
+
+def unseal_tensor(key: SealingKey, sealed: SealedTensor) -> jax.Array:
+    expect = _mac(key, sealed.header(), sealed.ciphertext)
+    if not hmac.compare_digest(expect, sealed.mac):
+        raise IntegrityError(f"MAC mismatch for tensor '{sealed.name}'")
+    nonce = jnp.asarray(np.frombuffer(_nonce_for(key, sealed.name), np.uint32))
+    blocked = ops.unseal_u32(key.key_words, nonce, sealed.ciphertext)
+    raw = ops.unpack_u32(blocked, sealed.n_bytes)
+    arr = raw.view(np.dtype(sealed.dtype)).reshape(sealed.shape)
+    return jnp.asarray(arr)
+
+
+# ---------------------------------------------------------------------------
+# pytrees
+# ---------------------------------------------------------------------------
+
+def seal_tree(key: SealingKey, tree: Params, prefix: str = "params") -> Dict[str, SealedTensor]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        name = prefix + jax.tree_util.keystr(path)
+        out[name] = seal_tensor(key, name, leaf)
+    return out
+
+
+def unseal_tree(key: SealingKey, sealed: Dict[str, SealedTensor],
+                treedef_like: Params, prefix: str = "params") -> Params:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(treedef_like)
+    leaves = []
+    for path, _ in flat:
+        name = prefix + jax.tree_util.keystr(path)
+        leaves.append(unseal_tensor(key, sealed[name]))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_digest(sealed: Dict[str, SealedTensor]) -> str:
+    """Stable digest over all MACs — bound into the attestation measurement."""
+    h = hashlib.sha256()
+    for name in sorted(sealed):
+        h.update(name.encode())
+        h.update(sealed[name].mac)
+    return h.hexdigest()

@@ -1,0 +1,10 @@
+"""Distributed layer: sharding rules, overlap collectives, pipeline, gradient
+compression, fault tolerance. See DESIGN.md §4."""
+
+from repro.distributed import sharding
+from repro.distributed.compression import (
+    make_grad_compressor, init_compression_state, compressed_bytes,
+)
+from repro.distributed.fault_tolerance import (
+    FailureInjector, SimulatedFailure, run_with_restarts, reshard_state,
+)

@@ -1,0 +1,77 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Cuts cross-pod (DCN) gradient bytes 4x for the multi-pod data axis — the
+distributed-optimization trick the 1000-node posture needs where the paper's
+platforms pay a 12x host-routed-link penalty (§V-D4): when the link is the
+bottleneck, shrink the bytes.
+
+Error feedback keeps the scheme convergent: the quantization residual is
+carried into the next step (Seide et al. / EF-SGD), so compression noise is
+zero-mean over time. Property-tested in tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class CompressionState(NamedTuple):
+    error: Params  # residual feedback, f32, same structure as grads
+
+
+def init_compression_state(params: Params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One leaf: add residual, quantize to int8 (what would cross the wire),
+    dequantize, and compute the new residual."""
+    gf = g.astype(jnp.float32) + err
+    q, scale = _q8(gf)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), gf - deq
+
+
+def make_grad_compressor(state: Optional[CompressionState] = None):
+    """Returns (transform(grads) -> grads', get_state()) pair for wiring into
+    make_train_step's grad_transform. Stateless-in-jit: the error term is
+    threaded through a host-side cell updated each call."""
+    cell = {"state": state}
+
+    @jax.jit
+    def _apply(grads: Params, error: Params):
+        pairs = jax.tree.map(compress_decompress, grads, error)
+        deq = jax.tree.map(lambda pr: pr[0], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return deq, new_err
+
+    def transform(grads: Params) -> Params:
+        if cell["state"] is None:
+            cell["state"] = init_compression_state(grads)
+        deq, new_err = _apply(grads, cell["state"].error)
+        cell["state"] = CompressionState(new_err)
+        return deq
+
+    return transform, lambda: cell["state"]
+
+
+def compressed_bytes(grads: Params) -> Tuple[int, int]:
+    """(raw_bytes, wire_bytes) for reporting the DCN savings."""
+    raw = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(grads))
+    wire = sum(l.size * 1 + 4 for l in jax.tree.leaves(grads))  # int8 + scale
+    return raw, wire

@@ -1,0 +1,89 @@
+"""Fault tolerance: failure injection, restart-with-resume, elastic rescale.
+
+The runnability contract for 1000+ nodes (system brief): any step may die;
+the job must resume from the latest good checkpoint, possibly on a
+*different* device count (elastic), with stragglers detected and handled.
+
+  * :class:`FailureInjector` — deterministic failure schedule for tests and
+    the fault-tolerance example (stands in for preemptions/hardware faults).
+  * :func:`run_with_restarts` — crash-looping driver: run -> on failure,
+    restore latest checkpoint + data-cursor -> continue. Test-proven to
+    produce the bitwise-identical loss curve to an uninterrupted run.
+  * :func:`reshard_state` — elastic rescale: move a host-logical state tree
+    onto a new mesh's shardings (save on mesh A, resume on mesh B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional, Set
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+
+Params = Any
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises SimulatedFailure at the given global step numbers (once each)."""
+    fail_at: Set[int]
+    fired: Set[int] = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def run_with_restarts(*, state: Params, train_step: Callable,
+                      data_factory: Callable[[int], Iterable],
+                      num_steps: int, manager: CheckpointManager,
+                      checkpoint_every: int,
+                      injector: Optional[FailureInjector] = None,
+                      max_restarts: int = 10):
+    """Crash-looping training driver.
+
+    ``data_factory(cursor)`` must return a deterministic iterator positioned
+    at ``cursor`` batches consumed — checkpointing stores (state, cursor) so
+    the resumed run sees exactly the batches the lost run would have.
+    Returns (final_state, losses, restarts).
+    """
+    abstract = jax.eval_shape(lambda: state)
+    step_fn = jax.jit(train_step)
+    losses = {}
+    restarts = 0
+    start_step = 0
+
+    while True:
+        try:
+            data = iter(data_factory(start_step))
+            cur = state
+            for step in range(start_step, num_steps):
+                if injector is not None:
+                    injector.check(step)
+                batch = next(data)
+                cur, metrics = step_fn(cur, batch)
+                losses[step] = float(metrics["loss"])
+                if (step + 1) % checkpoint_every == 0:
+                    manager.save(step + 1, cur)
+            return cur, [losses[i] for i in range(num_steps)], restarts
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            resumed_step, resumed = manager.resume(abstract)
+            if resumed is None:
+                start_step, state = 0, state
+            else:
+                start_step, state = resumed_step, resumed
+
+
+def reshard_state(state: Params, shardings: Params) -> Params:
+    """Elastic rescale: place a state tree onto new shardings (new mesh)."""
+    return jax.tree.map(jax.device_put, state, shardings)

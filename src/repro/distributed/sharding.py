@@ -1,0 +1,257 @@
+"""Sharding rules: map every param/activation/cache leaf to a PartitionSpec.
+
+Strategy (DESIGN.md §4):
+  * TP over ``model``: attention heads, MLP hidden, MoE experts, vocab;
+  * FSDP over ``data`` for the replicated remainder when cfg.parallel.fsdp
+    (the embed/d_model dims), all-gathered at use inside the layer scan;
+  * DP over ``data`` (x ``pod`` when multi-pod) for the batch;
+  * SP for long decode: KV/latent cache *sequence* dim over ``model`` when
+    the KV-head count does not divide the model axis.
+
+Rules are structural — matched by leaf name + enclosing module path — so the
+same table covers all 10 architectures. Any dim that does not divide its
+mesh axes falls back to replication (keeps tiny smoke configs lowerable).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+# spec symbols
+M = "model"     # tensor-parallel axis
+F = "__fsdp__"  # data axis iff cfg.parallel.fsdp else None
+N = None
+
+# top-level keys whose subtrees are layer-stacked (leading scan dim)
+STACKED = {"layers", "moe_layers", "dense_layers", "groups",
+           "enc_layers", "dec_layers"}
+
+# (context key, leaf name) -> base spec (no stacking dim). Context "" matches
+# any. First match wins; contexts are checked innermost-first.
+RULES: Dict[Tuple[str, str], Tuple] = {
+    # embedding / unembedding
+    ("", "table"): (M, F),
+    # attention (attn / self_attn / cross_attn share leaf names)
+    ("", "wq"): (F, M, N),
+    ("", "wk"): (F, M, N),
+    ("", "wv"): (F, M, N),
+    ("", "wo"): (M, N, F),
+    # swiglu / shared experts
+    ("", "w_gate"): (F, M),
+    ("", "w_up"): (F, M),
+    ("", "w_down"): (M, F),
+    # gelu mlp
+    ("", "w_in"): (F, M),
+    ("", "b_in"): (M,),
+    ("", "w_out"): (M, F),
+    ("", "b_out"): (N,),
+    # moe
+    ("", "router"): (N, N),
+    ("experts", "w_gate"): (M, F, N),
+    ("experts", "w_up"): (M, F, N),
+    ("experts", "w_down"): (M, N, F),
+    # mla
+    ("mla", "w_dq"): (F, N),
+    ("mla", "w_uq"): (N, M, N),
+    ("mla", "w_dkv"): (F, N),
+    ("mla", "w_uk"): (N, M, N),
+    ("mla", "w_uv"): (N, M, N),
+    ("mla", "wo"): (M, N, F),
+    # mamba
+    ("mamba", "w_in"): (F, M),
+    ("mamba", "conv_w"): (N, M),
+    ("mamba", "conv_b"): (M,),
+    ("mamba", "w_bcdt"): (M, N),
+    ("mamba", "w_dt"): (N, M),
+    ("mamba", "dt_bias"): (M,),
+    ("mamba", "a_log"): (M, N),
+    ("mamba", "d_skip"): (M,),
+    ("mamba", "w_out"): (M, F),
+    # rwkv time mix
+    ("tmix", "w_r"): (N, M),
+    ("tmix", "w_k"): (N, M),
+    ("tmix", "w_v"): (N, M),
+    ("tmix", "w_g"): (N, M),
+    ("tmix", "w_o"): (M, N),
+    ("decay_lora", "a"): (N, N),
+    ("decay_lora", "b"): (N, M),
+    ("tmix", "decay_base"): (M,),
+    # rwkv channel mix
+    ("cmix", "w_k"): (N, M),
+    ("cmix", "w_v"): (M, N),
+    ("cmix", "w_r"): (N, M),
+}
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape: Tuple[int, ...], spec: Tuple) -> P:
+    """Replace any axis that does not evenly divide its dim with None."""
+    fitted = []
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            fitted.append(axis)
+        else:
+            fitted.append(None)
+    return P(*fitted)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    return tuple(names)
+
+
+def _base_spec(names: Tuple[str, ...]) -> Optional[Tuple]:
+    leaf = names[-1]
+    context = names[:-1]
+    for ctx in reversed(context):
+        if (ctx, leaf) in RULES:
+            return RULES[(ctx, leaf)]
+    return RULES.get(("", leaf))
+
+
+def param_specs(cfg, abstract_params: Params, mesh: Mesh) -> Params:
+    """PartitionSpec pytree matching ``abstract_params``.
+
+    With ``dp_over_model`` (attention-free archs, §Perf): the model axis
+    joins data parallelism, so TP dims are dropped and FSDP over ``data`` is
+    forced — params shard over data, activations are fully local."""
+    dp_over_model = cfg.parallel.dp_over_model
+    fsdp_axis = "data" if (cfg.parallel.fsdp or dp_over_model) else None
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        stacked = bool(names) and names[0] in STACKED
+        base = _base_spec(names)
+        if base is None:
+            base = (N,) * (leaf.ndim - (1 if stacked else 0))
+        if dp_over_model:
+            base = tuple(None if a == M else a for a in base)
+        base = tuple(fsdp_axis if a == F else a for a in base)
+        full = ((None,) + base) if stacked else base
+        # pad/truncate defensively to leaf rank
+        full = (tuple(full) + (None,) * leaf.ndim)[:leaf.ndim]
+        return _fit(mesh, leaf.shape, full)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def state_specs(cfg, abstract_state, mesh: Mesh):
+    """TrainState(params, OptState(m, v, step)) -> spec tree (moments follow
+    their parameters; step is replicated).
+
+    With ``zero1``: params keep their (replicated/TP) layout but the
+    moments shard their leading dim over ``data`` — the ZeRO-1 dataflow
+    (reduce-scatter grads, update shard, all-gather params) without FSDP's
+    per-use gathers, which land inside sequential time scans for recurrent
+    archs (EXPERIMENTS.md §Perf cell C)."""
+    p_specs = param_specs(cfg, abstract_state.params, mesh)
+    if cfg.parallel.zero1:
+        def m_spec(pspec, leaf):
+            if leaf.ndim and leaf.shape[0] % mesh.shape["data"] == 0:
+                return P(*(("data",) + (None,) * (leaf.ndim - 1)))
+            return pspec
+        m_specs = jax.tree.map(m_spec, p_specs, abstract_state.opt.m)
+    else:
+        m_specs = p_specs
+    return type(abstract_state)(
+        params=p_specs,
+        opt=type(abstract_state.opt)(m=m_specs, v=m_specs, step=P()),
+    )
+
+
+def _batch_axis_for(cfg, mesh: Mesh, batch_dim: int):
+    """Pick the widest dp axis combo that divides the batch. With
+    dp_over_model the model axis joins DP (flat data parallelism)."""
+    dp = dp_axes(mesh)
+    candidates = ([dp + ("model",), ("data", "model"), dp, ("data",)]
+                  if cfg.parallel.dp_over_model else [dp, ("data",)])
+    for cand in candidates:
+        if all(a in mesh.axis_names for a in cand) \
+                and batch_dim % _axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def batch_specs(cfg, abstract_batch: Dict[str, Any], mesh: Mesh):
+    def spec_for(path, leaf):
+        axis = _batch_axis_for(cfg, mesh, leaf.shape[0])
+        base = (axis,) + (None,) * (leaf.ndim - 1)
+        return _fit(mesh, leaf.shape, base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_batch)
+
+
+# cache leaf name -> which dim (after [L, B]) is sequence
+_SEQ_LEAVES = {"k": 0, "v": 1, "ckv": 0, "krope": 1, "self_k": 0, "self_v": 1,
+               "cross_k": 0, "cross_v": 1}
+
+
+def cache_specs(cfg, abstract_cache: Params, mesh: Mesh) -> Params:
+    """Decode/prefill cache sharding.
+
+    Batch over dp; KV heads over ``model`` when they divide it, otherwise SP:
+    the sequence dim shards over ``model`` (distributed-softmax attention).
+    States (mamba/rwkv) shard their channel dim over ``model``.
+    """
+    model_size = mesh.shape.get("model", 1)
+    if cfg.parallel.dp_over_model:
+        model_size = 1  # model axis joins DP; no channel sharding
+
+    def spec_for(path, leaf):
+        names = _path_names(names_path := path)
+        leaf_name = names[-1]
+        if leaf_name == "pos":
+            dp = _batch_axis_for(cfg, mesh, leaf.shape[0])
+            return _fit(mesh, leaf.shape, (dp,))
+        dp = _batch_axis_for(cfg, mesh,
+                             leaf.shape[1] if leaf.ndim > 1 else leaf.shape[0])
+        M_ = None if cfg.parallel.dp_over_model else M
+        if leaf_name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            # [L, B, S, hk, hd]
+            hk = leaf.shape[3]
+            if model_size > 1 and hk % model_size == 0:
+                return _fit(mesh, leaf.shape, (None, dp, None, M_, None))
+            return _fit(mesh, leaf.shape, (None, dp, M_, None, None))
+        if leaf_name in ("ckv", "krope"):
+            # [L, B, S, r] — latent is per-token shared: SP over model
+            return _fit(mesh, leaf.shape, (None, dp, M_, None))
+        if leaf_name == "conv":      # [L, B, d_conv-1, d_inner]
+            return _fit(mesh, leaf.shape, (None, dp, None, M_))
+        if leaf_name == "ssm":       # [L, B, d_inner, d_state]
+            return _fit(mesh, leaf.shape, (None, dp, M_, None))
+        if leaf_name == "wkv":       # [L, B, h, k, v]
+            return _fit(mesh, leaf.shape, (None, dp, M_, None, None))
+        if leaf_name in ("tmix_x", "cmix_x"):  # [L, B, d]
+            return _fit(mesh, leaf.shape, (None, dp, None))
+        return _fit(mesh, leaf.shape, (None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_cache)
+
+
+def to_named(mesh: Mesh, spec_tree: Params) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

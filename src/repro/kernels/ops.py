@@ -1,0 +1,115 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding/packing so callers see natural shapes:
+  * seal_u32 / unseal_u32 — arbitrary tensors <-> blocked ciphertext layout
+  * qmm — bf16 activations x QTensor weights with auto-padding to tiles
+  * mha_flash — [b, s, h, d] attention with GQA head broadcast
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.chacha20 import BLOCKS_PER_TILE, chacha20_xor_blocked
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.qmatmul import qmatmul
+from repro.quant.quantize import QTensor
+
+# interpret=True everywhere in this container (CPU). On TPU deploys this flag
+# flips to False via the environment; the call sites are unchanged.
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# sealing: pack arbitrary arrays into the [16, N] blocked u32 layout
+# ---------------------------------------------------------------------------
+
+def pack_u32(raw: np.ndarray) -> Tuple[jax.Array, int]:
+    """uint8 bytes -> (uint32 [16, N] blocked layout, original byte length)."""
+    n_bytes = raw.size
+    block_bytes = 64 * BLOCKS_PER_TILE
+    padded = n_bytes + (-n_bytes) % block_bytes
+    buf = np.zeros(padded, np.uint8)
+    buf[:n_bytes] = raw
+    words = buf.view("<u4").reshape(-1, 16).T  # [16, N]
+    return jnp.asarray(np.ascontiguousarray(words)), n_bytes
+
+
+def unpack_u32(words: jax.Array, n_bytes: int) -> np.ndarray:
+    """Inverse of pack_u32 -> uint8[n_bytes]."""
+    out = np.asarray(words).T.astype("<u4").tobytes()
+    return np.frombuffer(out[:n_bytes], np.uint8).copy()
+
+
+def seal_u32(key_words: jax.Array, nonce_words: jax.Array,
+             blocked: jax.Array, counter_base: int = 0) -> jax.Array:
+    """XOR blocked data with the keystream (seal == unseal: involution)."""
+    return chacha20_xor_blocked(key_words, nonce_words, blocked,
+                                counter_base=counter_base, interpret=INTERPRET)
+
+
+unseal_u32 = seal_u32  # stream-cipher involution
+
+
+# ---------------------------------------------------------------------------
+# quantized matmul
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qmm(x: jax.Array, w: QTensor, *, bm: int = 128, bn: int = 128,
+        bk: int = 128) -> jax.Array:
+    """bf16 [M, K] x QTensor([K, N]) -> bf16 [M, N] via the int8 MXU kernel.
+
+    Dynamically quantizes activations per-tensor (AMX dataflow), folds the
+    activation scale into the per-channel weight scale, pads to tile
+    multiples, and un-pads the result.
+    """
+    m, kdim = x.shape
+    k2, n = w.values.shape
+    assert kdim == k2
+    xf = x.astype(jnp.float32)
+    xmax = jnp.max(jnp.abs(xf))
+    xscale = jnp.where(xmax > 0, xmax / 127.0, 1.0)
+    xq = jnp.clip(jnp.round(xf / xscale), -127, 127).astype(jnp.int8)
+
+    xq = _pad_to(_pad_to(xq, 0, bm), 1, bk)
+    wq = _pad_to(_pad_to(w.values, 0, bk), 1, bn)
+    scale = _pad_to(w.scale.reshape(1, n) * xscale, 1, bn)
+    out = qmatmul(xq, wq, scale, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return out[:m, :n].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, bq: int = 128,
+              bkv: int = 128) -> jax.Array:
+    """Causal attention, [b, s, h, d] layout with GQA broadcast."""
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    if hk != h:
+        rep = h // hk
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    bq_ = min(bq, s)
+    bkv_ = min(bkv, s)
+    out = flash_attention(qf, kf, vf, bq=bq_, bkv=bkv_, interpret=INTERPRET)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,11 @@
+"""Model zoo: dense/MoE/MLA/SSM/hybrid/enc-dec/VLM transformer families.
+
+All models are pure-functional JAX: ``init_params`` builds a pytree,
+``forward``/``prefill``/``decode_step`` are jit-able functions. Layer stacks
+are ``jax.lax.scan``-ed over stacked parameters so that compiled HLO stays
+compact for the 95-layer dry-run cells.
+"""
+
+from repro.models.model import build_model, Model
+
+__all__ = ["build_model", "Model"]

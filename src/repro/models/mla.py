@@ -1,0 +1,166 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are produced from low-rank latent compressions; the
+decode cache stores only the compressed KV latent + decoupled RoPE key:
+``kv_lora_rank + rope_dim`` floats per token instead of
+``2 * num_heads * head_dim`` — the long-context memory win that makes the
+500k-class cells feasible at all on real hardware.
+
+This is the reference jnp path used for training/prefill/decode and the
+dry-run. Cache layout: {"ckv": [b, max_len, kv_rank], "krope": [b, max_len, rope_dim]}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    num_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_dim: int = 64
+    nope_dim: int = 128      # per-head non-rope key/query dim
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    chunk: int = 0           # q-chunked attention (see layers.sdpa_chunked)
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        "w_dq": layers.dense_init(ks[0], (d, cfg.q_lora_rank), dtype=dtype),
+        "q_norm": layers.init_rmsnorm(cfg.q_lora_rank, dtype),
+        "w_uq": layers.dense_init(ks[1], (cfg.q_lora_rank, h, cfg.nope_dim + cfg.rope_dim),
+                                  in_axis_size=cfg.q_lora_rank, dtype=dtype),
+        "w_dkv": layers.dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.rope_dim), dtype=dtype),
+        "kv_norm": layers.init_rmsnorm(cfg.kv_lora_rank, dtype),
+        "w_uk": layers.dense_init(ks[3], (cfg.kv_lora_rank, h, cfg.nope_dim),
+                                  in_axis_size=cfg.kv_lora_rank, dtype=dtype),
+        "w_uv": layers.dense_init(ks[4], (cfg.kv_lora_rank, h, cfg.v_head_dim),
+                                  in_axis_size=cfg.kv_lora_rank, dtype=dtype),
+        "wo": layers.dense_init(ks[5], (h, cfg.v_head_dim, d),
+                                in_axis_size=h * cfg.v_head_dim, dtype=dtype),
+    }
+
+
+def _compress(params: Params, cfg: MLAConfig, x: jax.Array, positions: jax.Array):
+    """Produce per-token latent ckv [b,s,rank] and rotated shared key [b,s,rope]."""
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    ckv, krope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    ckv = layers.rmsnorm(params["kv_norm"], ckv)
+    krope = layers.apply_rope(krope, positions, cfg.rope_theta)
+    return ckv, krope
+
+
+def _queries(params: Params, cfg: MLAConfig, x: jax.Array, positions: jax.Array):
+    cq = layers.rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]))
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    q_nope, q_rope = jnp.split(q, [cfg.nope_dim], axis=-1)
+    q_rope = layers.apply_rope(q_rope.swapaxes(1, 2), positions[:, None, :],
+                               cfg.rope_theta).swapaxes(1, 2)
+    return q_nope, q_rope
+
+
+def _attend(params: Params, cfg: MLAConfig, q_nope, q_rope, ckv, krope,
+            q_positions, kv_valid_len=None):
+    """Attention over compressed latents (absorbed-weight formulation).
+
+    scores = q_nope . (W_uk ckv) + q_rope . krope ; values = W_uv ckv.
+    We absorb W_uk into the query so the per-key work is rank-dim, keeping the
+    latent as the only per-token state (the MLA trick).
+    """
+    # absorb: q_abs [b,s,h,rank] — bf16 inputs, f32 accumulation (no f32
+    # copies of the latent cache; §Perf iteration 1)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+    scale = 1.0 / np.sqrt(cfg.nope_dim + cfg.rope_dim)
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhk,bsk->bhqs", q_rope, krope,
+                           preferred_element_type=jnp.float32)) * scale
+    b, sq = q_nope.shape[:2]
+    skv = ckv.shape[1]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = kv_pos[:, None, :] <= q_positions[:, :, None]
+    if kv_valid_len is not None:
+        mask &= kv_pos[:, None, :] < kv_valid_len[:, None, None]
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # out latent then decompress with W_uv
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs.astype(ckv.dtype), ckv,
+                         preferred_element_type=jnp.float32)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat.astype(q_nope.dtype),
+                     params["w_uv"])
+    return jnp.einsum("bqhv,hvd->bqd", out, params["wo"])
+
+
+def _attend_maybe_chunked(params, cfg: MLAConfig, q_nope, q_rope, ckv, krope,
+                          positions):
+    """Full-sequence attention; q-chunked when cfg.chunk is set so the
+    [b, h, s, s] logits are never materialized (§Perf iteration)."""
+    s = q_nope.shape[1]
+    if not cfg.chunk or s <= cfg.chunk:
+        return _attend(params, cfg, q_nope, q_rope, ckv, krope, positions)
+    outs = []
+    for start in range(0, s, cfg.chunk):
+        end = min(start + cfg.chunk, s)
+        outs.append(_attend(params, cfg, q_nope[:, start:end],
+                            q_rope[:, start:end], ckv[:, :end], krope[:, :end],
+                            positions[:, start:end]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def mla_forward(params: Params, cfg: MLAConfig, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    ckv, krope = _compress(params, cfg, x, positions)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    return _attend_maybe_chunked(params, cfg, q_nope, q_rope, ckv, krope, positions)
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: MLAConfig, dtype=jnp.bfloat16) -> Params:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.rope_dim), dtype),
+    }
+
+
+def mla_prefill(params: Params, cfg: MLAConfig, x: jax.Array, cache: Params,
+                positions: jax.Array):
+    ckv, krope = _compress(params, cfg, x, positions)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+        "krope": jax.lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0)),
+    }
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    return _attend_maybe_chunked(params, cfg, q_nope, q_rope, ckv, krope,
+                                 positions), cache
+
+
+def mla_decode(params: Params, cfg: MLAConfig, x: jax.Array, cache: Params,
+               positions: jax.Array):
+    ckv, krope = _compress(params, cfg, x, positions)
+
+    def write(buf, new):
+        def upd(buf_b, new_b, pos_b):
+            return jax.lax.dynamic_update_slice(buf_b, new_b.astype(buf_b.dtype), (pos_b, 0))
+        return jax.vmap(upd)(buf, new, positions[:, 0])
+
+    cache = {"ckv": write(cache["ckv"], ckv), "krope": write(cache["krope"], krope)}
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    valid = positions[:, 0] + 1
+    out = _attend(params, cfg, q_nope, q_rope, cache["ckv"], cache["krope"],
+                  positions, kv_valid_len=valid)
+    return out, cache

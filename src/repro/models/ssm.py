@@ -1,0 +1,295 @@
+"""State-space sequence mixers: Mamba (selective SSM, for Jamba) and RWKV6.
+
+Both are attention-free: per-layer state is O(1) in sequence length, which is
+what qualifies jamba/rwkv6 for the ``long_500k`` cells (DESIGN.md §5).
+
+Mamba uses a *chunked* scan: a sequential ``lax.scan`` over chunks with an
+associative prefix inside each chunk. This bounds the materialized
+[b, chunk, d_inner, d_state] tensor (the naive associative-scan formulation
+materializes the full-sequence version, which is what blows up HBM at 4k+).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model/16)
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or max(1, (self.d_model + 15) // 16)
+
+
+def init_mamba(key, cfg: MambaConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 7)
+    di, ds, dr = cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    # S4D-real initialization for A
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, ds))
+    return {
+        "w_in": layers.dense_init(ks[0], (cfg.d_model, 2 * di), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                   / np.sqrt(cfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bcdt": layers.dense_init(ks[2], (di, 2 * ds + dr), dtype=dtype),
+        "w_dt": layers.dense_init(ks[3], (dr, di), in_axis_size=dr, dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": layers.dense_init(ks[4], (di, cfg.d_model), in_axis_size=di, dtype=dtype),
+    }
+
+
+def _selective_params(params: Params, cfg: MambaConfig, xi: jax.Array):
+    """xi: [b, s, d_inner] (post-conv). Returns dA [b,s,di,ds], dBx, C."""
+    ds, dr = cfg.d_state, cfg.dt_rank_
+    bcdt = jnp.einsum("bsd,de->bse", xi, params["w_bcdt"])
+    b_sel, c_sel, dt = jnp.split(bcdt, [ds, 2 * ds], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt, params["w_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])  # [b,s,di]
+    a = -jnp.exp(params["a_log"])  # [di,ds]
+    dA = jnp.exp(dt[..., None] * a[None, None])  # [b,s,di,ds]
+    dBx = (dt * xi.astype(jnp.float32))[..., None] * b_sel.astype(jnp.float32)[:, :, None, :]
+    return dA, dBx, c_sel.astype(jnp.float32)
+
+
+def _chunk_scan(dA, dBx, h0):
+    """Associative scan within a chunk given entry state h0 [b,di,ds]."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+    aA, bB = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = aA * h0[:, None] + bB  # [b,c,di,ds]
+    return h, h[:, -1]
+
+
+def _causal_conv(params: Params, cfg: MambaConfig, x: jax.Array,
+                 conv_state: jax.Array | None = None):
+    """Depthwise causal conv over time. x: [b,s,di]. conv_state: [b,d_conv-1,di]."""
+    pad = (jnp.zeros((x.shape[0], cfg.d_conv - 1, x.shape[-1]), x.dtype)
+           if conv_state is None else conv_state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    w = params["conv_w"]  # [d_conv, di]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(cfg.d_conv))
+    new_state = xp[:, -(cfg.d_conv - 1):] if cfg.d_conv > 1 else pad
+    return jax.nn.silu((out + params["conv_b"]).astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _mamba_seq(params: Params, cfg: MambaConfig, x: jax.Array,
+               conv_state: jax.Array | None, h0: jax.Array | None):
+    """Shared full-sequence path. Returns (y, new_conv_state, h_last)."""
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, new_conv = _causal_conv(params, cfg, xi, conv_state)
+
+    chunk = min(cfg.chunk, s)
+    nchunks = (s + chunk - 1) // chunk
+    pad_to = nchunks * chunk
+    xi_p = jnp.pad(xi, ((0, 0), (0, pad_to - s), (0, 0))) if pad_to != s else xi
+    dA, dBx, c_sel = _selective_params(params, cfg, xi_p)
+    if pad_to != s:
+        # padded positions must be identity steps (dA=1, dBx=0), else they
+        # decay the carried state and corrupt the prefill->decode handoff
+        valid = (jnp.arange(pad_to) < s)[None, :, None, None]
+        dA = jnp.where(valid, dA, 1.0)
+        dBx = jnp.where(valid, dBx, 0.0)
+    dA = dA.reshape(b, nchunks, chunk, cfg.d_inner, cfg.d_state).swapaxes(0, 1)
+    dBx = dBx.reshape(b, nchunks, chunk, cfg.d_inner, cfg.d_state).swapaxes(0, 1)
+
+    def step(h, inputs):
+        da, dbx = inputs
+        hs, h_last = _chunk_scan(da, dbx, h)
+        return h_last, hs
+
+    if h0 is None:
+        h0 = jnp.zeros((b, cfg.d_inner, cfg.d_state), jnp.float32)
+    h_last, hs = jax.lax.scan(step, h0, (dA, dBx))
+    hs = hs.swapaxes(0, 1).reshape(b, pad_to, cfg.d_inner, cfg.d_state)[:, :s]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_sel[:, :s])
+    y = y + params["d_skip"][None, None] * xi.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, params["w_out"]), new_conv, h_last
+
+
+def mamba_forward(params: Params, cfg: MambaConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence training pass. x: [b, s, d]."""
+    y, _, _ = _mamba_seq(params, cfg, x, None, None)
+    return y
+
+
+def mamba_prefill(params: Params, cfg: MambaConfig, x: jax.Array):
+    """Full-sequence pass that also returns the decode state."""
+    y, conv, h_last = _mamba_seq(params, cfg, x, None, None)
+    return y, {"conv": conv, "ssm": h_last}
+
+
+def init_mamba_state(batch: int, cfg: MambaConfig, dtype=jnp.bfloat16) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_step(params: Params, cfg: MambaConfig, x: jax.Array, state: Params):
+    """Single-token decode. x: [b, 1, d]."""
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(params, cfg, xi, state["conv"])
+    dA, dBx, c_sel = _selective_params(params, cfg, xi)
+    h = dA[:, 0] * state["ssm"] + dBx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, c_sel[:, 0])[:, None]
+    y = y + params["d_skip"][None, None] * xi.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"])
+    return out, {"conv": conv_state.astype(state["conv"].dtype), "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    lora_rank: int = 64
+    d_ff: int = 0  # channel-mix hidden
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def _lora_init(key, d: int, rank: int, out: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": layers.dense_init(k1, (d, rank), dtype=dtype),
+        "b": (jax.random.normal(k2, (rank, out), jnp.float32) * 0.01).astype(dtype),
+    }
+
+
+def _lora(p: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...r,re->...e", jnp.tanh(jnp.einsum("...d,dr->...r", x, p["a"])), p["b"])
+
+
+def init_rwkv6_time_mix(key, cfg: RWKV6Config, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    return {
+        "mix": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),  # r,k,v,w,g mixes
+        "w_r": layers.dense_init(ks[1], (d, d), dtype=dtype),
+        "w_k": layers.dense_init(ks[2], (d, d), dtype=dtype),
+        "w_v": layers.dense_init(ks[3], (d, d), dtype=dtype),
+        "w_g": layers.dense_init(ks[4], (d, d), dtype=dtype),
+        "w_o": layers.dense_init(ks[5], (d, d), dtype=dtype),
+        "decay_lora": _lora_init(ks[6], d, cfg.lora_rank, d, dtype),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "bonus": (jax.random.normal(ks[7], (cfg.num_heads, cfg.head_dim), jnp.float32) * 0.05),
+        "ln_out": layers.init_layernorm(d, dtype),
+    }
+
+
+def _rwkv_inputs(params: Params, cfg: RWKV6Config, x: jax.Array, x_prev: jax.Array):
+    """Token-shift mixes. x: [b,s,d]; x_prev: [b,s,d] (x shifted right by 1)."""
+    mix = params["mix"].astype(jnp.float32)
+    xf, xp = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    def mixed(i):
+        return (xf + (xp - xf) * mix[i][None, None]).astype(x.dtype)
+    r = jnp.einsum("bsd,de->bse", mixed(0), params["w_r"])
+    k = jnp.einsum("bsd,de->bse", mixed(1), params["w_k"])
+    v = jnp.einsum("bsd,de->bse", mixed(2), params["w_v"])
+    w = params["decay_base"] + _lora(params["decay_lora"], mixed(3)).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mixed(4), params["w_g"]).astype(jnp.float32))
+    decay = jnp.exp(-jnp.exp(w))  # data-dependent per-channel decay in (0,1)
+    return r, k, v, decay, g
+
+
+def _heads(x: jax.Array, h: int):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def rwkv6_time_mix(params: Params, cfg: RWKV6Config, x: jax.Array,
+                   x_prev_last: jax.Array, wkv_state: jax.Array):
+    """Full-sequence pass via scan over time.
+
+    x: [b,s,d]; x_prev_last: [b,d] last token of previous segment;
+    wkv_state: [b,h,k,v] running outer-product state.
+    Returns (out [b,s,d], new_x_last [b,d], new_state).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    r, k, v, decay, g = _rwkv_inputs(params, cfg, x, x_prev)
+    rh = _heads(r, h).astype(jnp.float32)
+    kh = _heads(k, h).astype(jnp.float32)
+    vh = _heads(v, h).astype(jnp.float32)
+    dh = _heads(decay, h)  # [b,s,h,hd]
+    u = params["bonus"]  # [h, hd]
+
+    def step(state, inputs):
+        rt, kt, vt, wt = inputs  # [b,h,hd] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        new_state = wt[..., None] * state + kv
+        return new_state, out
+
+    xs = (rh.swapaxes(0, 1), kh.swapaxes(0, 1), vh.swapaxes(0, 1),
+          dh.swapaxes(0, 1))
+    new_state, outs = jax.lax.scan(step, wkv_state, xs)
+    out = outs.swapaxes(0, 1).reshape(b, s, d)  # [b,s,h,v] -> [b,s,d]
+    out = layers.layernorm(params["ln_out"], out.astype(x.dtype))
+    out = (out.astype(jnp.float32) * g).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out, params["w_o"])
+    return out, x[:, -1], new_state
+
+
+def init_rwkv6_channel_mix(key, cfg: RWKV6Config, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix": jax.random.uniform(ks[0], (2, d), jnp.float32).astype(dtype),
+        "w_k": layers.dense_init(ks[1], (d, f), dtype=dtype),
+        "w_v": layers.dense_init(ks[2], (f, d), in_axis_size=f, dtype=dtype),
+        "w_r": layers.dense_init(jax.random.fold_in(key, 9), (d, d), dtype=dtype),
+    }
+
+
+def rwkv6_channel_mix(params: Params, cfg: RWKV6Config, x: jax.Array,
+                      x_prev_last: jax.Array):
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    mix = params["mix"].astype(jnp.float32)
+    xf, xp = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    xk = (xf + (xp - xf) * mix[0][None, None]).astype(x.dtype)
+    xr = (xf + (xp - xf) * mix[1][None, None]).astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, params["w_k"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["w_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["w_r"]).astype(jnp.float32))
+    return (rr * vv.astype(jnp.float32)).astype(x.dtype), x[:, -1]

@@ -1,0 +1,76 @@
+"""Dense retrieval: SBERT-style encoder + cosine similarity (paper §VI).
+
+The encoder is a small transformer (our own DecoderLM trunk with causal=off
+semantics approximated by mean pooling over token embeddings after the
+stack) — enough to exercise the *systems* path the paper measures: embed the
+corpus inside the TEE, keep the index sealed, score queries by cosine
+similarity on-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import build_model
+
+
+def encoder_config(d_model: int = 64, num_layers: int = 2) -> ModelConfig:
+    return ModelConfig(
+        name="sbert-tiny", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=4, num_kv_heads=4, head_dim=d_model // 4,
+        d_ff=4 * d_model, vocab_size=ByteTokenizer.vocab_size,
+        parallel=ParallelConfig(remat="none"),
+    )
+
+
+class DenseRetriever:
+    def __init__(self, cfg: ModelConfig | None = None, max_len: int = 64,
+                 seed: int = 0):
+        self.cfg = cfg or encoder_config()
+        self.model = build_model(self.cfg)
+        self.params = self.model.init_params(jax.random.key(seed))
+        self.tok = ByteTokenizer()
+        self.max_len = max_len
+        self.doc_ids: List[str] = []
+        self.embeddings: jnp.ndarray | None = None
+
+        @jax.jit
+        def _embed(params, tokens):
+            # mean-pooled hidden state as the sentence embedding
+            impl = self.model._impl
+            x = impl._embed(params, tokens)
+            for name, n, slots in impl.blocks:
+                x, _, _ = impl._run_block(name, slots, params[name], x,
+                                          jnp.broadcast_to(
+                                              jnp.arange(tokens.shape[1])[None],
+                                              tokens.shape), "train", None)
+            emb = jnp.mean(x.astype(jnp.float32), axis=1)
+            return emb / (jnp.linalg.norm(emb, axis=-1, keepdims=True) + 1e-9)
+
+        self._embed = _embed
+
+    def _encode(self, texts: List[str]) -> jnp.ndarray:
+        batch = np.zeros((len(texts), self.max_len), np.int32)
+        for i, t in enumerate(texts):
+            ids = self.tok.encode(t)[:self.max_len]
+            batch[i, :len(ids)] = ids
+        return self._embed(self.params, jnp.asarray(batch))
+
+    # -- index ---------------------------------------------------------------
+    def build(self, docs: Dict[str, str]) -> "DenseRetriever":
+        self.doc_ids = list(docs.keys())
+        self.embeddings = self._encode([docs[d] for d in self.doc_ids])
+        return self
+
+    def search(self, query: str, top_k: int = 10) -> List[Tuple[str, float]]:
+        q = self._encode([query])[0]
+        sims = jnp.einsum("d,nd->n", q, self.embeddings)
+        order = np.argsort(-np.asarray(sims))
+        return [(self.doc_ids[i], float(sims[i])) for i in order[:top_k]]

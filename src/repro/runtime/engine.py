@@ -1,0 +1,161 @@
+"""Inference engine: jitted prefill/decode with continuous batching, under an
+optional TrustDomain (the paper's end-to-end confidential inference pipeline).
+
+Dataflow per paper Fig 2's protected stack:
+  prompt --(encrypted bounce buffer)--> prefill(slot) --> batched decode loop
+  --> sampled tokens --(encrypted bounce buffer)--> client.
+
+All device compute is jitted once; decode donates the cache to keep a single
+in-place buffer. Finished slots are refilled without stopping decode
+(continuous batching).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.confidential import TrustDomain
+from repro.models.model import Model
+from repro.runtime import sampling
+from repro.runtime.kvcache import SlotState, extract_slot as kv_extract, insert_slot
+from repro.runtime.scheduler import Request, Scheduler, ServeStats
+
+Params = Any
+
+
+class Engine:
+    def __init__(self, model: Model, params: Params, *, max_slots: int = 4,
+                 max_len: int = 512, trust_domain: Optional[TrustDomain] = None,
+                 prefill_len: int = 64):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prefill_len = prefill_len
+        self.td = trust_domain or TrustDomain("none")
+        self.scheduler = Scheduler()
+        self.slots = SlotState.create(max_slots)
+        self.cache = model.init_cache(max_slots, max_len)
+        self._active_mask = np.zeros(max_slots, bool)
+        self._last_token = np.zeros(max_slots, np.int32)
+
+        cfg = model.cfg
+
+        def _prefill(params, tokens, cache):
+            return model.prefill(params, {"tokens": tokens}, cache)
+
+        def _decode(params, tokens, cache):
+            logits, cache = model.decode_step(params, tokens, cache)
+            return sampling.greedy(logits), cache
+
+        self._prefill_fn = jax.jit(_prefill)
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
+        self._vocab = cfg.vocab_size
+
+    # -- request admission ----------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> Request:
+        prompt = self.td.ingress(np.asarray(prompt, np.int32))
+        return self.scheduler.submit(prompt, max_new_tokens, eos_id)
+
+    def _try_admit(self) -> bool:
+        req = self.scheduler.next_waiting()
+        if req is None:
+            return False
+        slot = self.slots.acquire(req.rid)
+        if slot is None:
+            self.scheduler.queue.appendleft(req)
+            return False
+        # pad/truncate prompt to the static prefill length
+        p = req.prompt[-self.prefill_len:]
+        pad = self.prefill_len - len(p)
+        tokens = np.pad(p, (pad, 0))[None]  # left-pad -> static shape
+        single = self.model.init_cache(1, self.max_len)
+        logits, single = self._prefill_fn(self.params, jnp.asarray(tokens), single)
+        first = int(np.argmax(np.asarray(logits[0])))
+        self.cache = insert_slot(self.cache, single, jnp.int32(slot))
+        self.scheduler.start(slot, req)
+        self.scheduler.record_token(slot, first)
+        self._active_mask[slot] = True
+        self._last_token[slot] = first
+        return True
+
+    # -- serving loop ----------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit if possible, then one decode step.
+        Returns number of tokens produced."""
+        while self.slots.free and self.scheduler.queue:
+            self._try_admit()
+        if not self.slots.active:
+            return 0
+        tokens = jnp.asarray(self._last_token[:, None])
+        next_tokens, self.cache = self._decode_fn(self.params, tokens, self.cache)
+        next_np = np.asarray(next_tokens)
+        produced = 0
+        for slot in list(self.slots.active):
+            if not self._active_mask[slot]:
+                continue
+            tok = int(next_np[slot])
+            self.scheduler.record_token(slot, tok)
+            self._last_token[slot] = tok
+            produced += 1
+            req = self.scheduler.running[slot]
+            if req.done:
+                req.output = list(self.td.egress(np.asarray(req.output, np.int32)))
+                self.scheduler.finish(slot)
+                self.slots.release(slot)
+                self._active_mask[slot] = False
+        return produced
+
+    def run(self, max_steps: int = 10_000) -> ServeStats:
+        steps = 0
+        while not self.scheduler.idle and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.scheduler.stats()
+
+    # -- sealed KV preemption ----------------------------------------------------
+    # The KV cache holds user conversation state; when a slot is preempted
+    # (priority eviction, host maintenance) its pages must not land anywhere
+    # unencrypted — the at-rest property H100 HBM lacks (paper §V-D3). The
+    # slot cache is sealed with the domain key and can be restored later.
+
+    def seal_slot(self, slot: int):
+        """Evict a running slot: returns (sealed_cache_dict, request)."""
+        from repro.core.sealing import seal_tree
+        single = kv_extract(self.cache, jnp.int32(slot))
+        req = self.scheduler.running.pop(slot)
+        sealed = seal_tree(self.td.sealing_key, single,
+                           prefix=f"kvslot/{req.rid}")
+        self.td._log("seal_kv", f"slot={slot} rid={req.rid}")
+        self.slots.release(slot)
+        self._active_mask[slot] = False
+        return sealed, req
+
+    def restore_slot(self, sealed, req) -> int:
+        """Re-admit a sealed-out request into a free slot."""
+        from repro.core.sealing import unseal_tree
+        slot = self.slots.acquire(req.rid)
+        if slot is None:
+            raise RuntimeError("no free slot to restore into")
+        single_like = self.model.abstract_cache(1, self.max_len)
+        single = unseal_tree(self.td.sealing_key, sealed, single_like,
+                             prefix=f"kvslot/{req.rid}")
+        self.cache = insert_slot(self.cache, single, jnp.int32(slot))
+        self.scheduler.running[slot] = req
+        self._active_mask[slot] = True
+        self._last_token[slot] = req.output[-1] if req.output else 0
+        self.td._log("restore_kv", f"slot={slot} rid={req.rid}")
+        return slot
+
+    # -- convenience -----------------------------------------------------------
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 32) -> List[int]:
+        req = self.submit(prompt, max_new_tokens)
+        self.run()
+        return req.output

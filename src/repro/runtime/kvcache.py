@@ -1,0 +1,83 @@
+"""Slot-based KV cache management for continuous batching.
+
+Hardware-adaptation note (DESIGN.md): vLLM's paged KV cache is
+GPU-idiomatic — fine-grained gather over a page table suits GPU SMs. On TPU,
+serving stacks (JetStream-style) use *slot-based* dense caches: a fixed
+[max_slots, max_len, ...] buffer, one slot per in-flight sequence, because
+the MXU/VPU want contiguous reads and XLA wants static shapes. We therefore
+manage slots, not pages; the same role (bounded KV memory, admission
+control), the TPU-native layout.
+
+``insert_slot`` splices a freshly-prefilled single-sequence cache into the
+batched decode cache. Cache pytrees follow the model layout contract:
+top-level key "pos" is batch-major [b]; every other leaf is layer-stacked
+with batch at axis 1 ([L, b, ...]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+Cache = Any
+
+
+@dataclasses.dataclass
+class SlotState:
+    free: List[int]
+    active: dict  # slot -> request id
+
+    @classmethod
+    def create(cls, max_slots: int) -> "SlotState":
+        return cls(free=list(range(max_slots)), active={})
+
+    def acquire(self, request_id: int) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.pop(0)
+        self.active[slot] = request_id
+        return slot
+
+    def release(self, slot: int) -> None:
+        rid = self.active.pop(slot, None)
+        if rid is not None:
+            self.free.append(slot)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+
+def _is_pos(path) -> bool:
+    return any(getattr(k, "key", None) == "pos" for k in path[:1])
+
+
+@jax.jit
+def insert_slot(batched: Cache, single: Cache, slot: jax.Array) -> Cache:
+    """Write a b=1 cache into batch slot ``slot`` of the batched cache."""
+    def upd(path, big, small):
+        if _is_pos(path):
+            return big.at[slot].set(small[0])
+        # [L, 1, ...] into [L, B, ...] at axis 1
+        start = (jnp.int32(0), slot.astype(jnp.int32)) + (jnp.int32(0),) * (big.ndim - 2)
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), start)
+    return jax.tree_util.tree_map_with_path(upd, batched, single)
+
+
+@jax.jit
+def extract_slot(batched: Cache, slot: jax.Array) -> Cache:
+    """Inverse of insert_slot: pull slot ``slot`` out as a b=1 cache."""
+    def get(path, big):
+        if _is_pos(path):
+            return jax.lax.dynamic_slice(big, (slot.astype(jnp.int32),), (1,))
+        start = (jnp.int32(0), slot.astype(jnp.int32)) + (jnp.int32(0),) * (big.ndim - 2)
+        sizes = (big.shape[0], 1) + big.shape[2:]
+        return jax.lax.dynamic_slice(big, start, sizes)
+    return jax.tree_util.tree_map_with_path(get, batched)
+
+
+def cache_bytes(cache: Cache) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))

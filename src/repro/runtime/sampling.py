@@ -1,0 +1,22 @@
+"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits [b, v] -> token ids [b]."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits: jax.Array, key, temp: float = 1.0,
+                top_k: int = 0) -> jax.Array:
+    if temp <= 0:
+        return greedy(logits)
+    scaled = logits.astype(jnp.float32) / temp
+    if top_k > 0:
+        kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+        scaled = jnp.where(scaled >= kth, scaled, -1e30)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -1,0 +1,111 @@
+"""Continuous-batching scheduler: request queue, admission, completion.
+
+The serving pattern the paper measures (vLLM on cGPU, IPEX batched decode on
+CPU TEEs): requests arrive asynchronously, prefill claims a free slot,
+decode advances all active slots each step, finished sequences free their
+slot immediately for the next queued request. Tracks the two user-perceived
+metrics from §III-C: throughput (tokens/s) and next-token latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # int32 [prompt_len]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled during serving
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.eos_id is not None and self.output and self.output[-1] == self.eos_id:
+            return True
+        return len(self.output) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class ServeStats:
+    total_tokens: int = 0
+    total_requests: int = 0
+    wall_s: float = 0.0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def mean_latency_s(self) -> float:
+        return float(np.mean(self.latencies_s)) if self.latencies_s else 0.0
+
+    @property
+    def p99_latency_s(self) -> float:
+        return float(np.percentile(self.latencies_s, 99)) if self.latencies_s else 0.0
+
+
+class Scheduler:
+    def __init__(self):
+        self.queue: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}   # slot -> request
+        self.finished: List[Request] = []
+        self._next_rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id, t_submit=time.monotonic())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def next_waiting(self) -> Optional[Request]:
+        return self.queue.popleft() if self.queue else None
+
+    def start(self, slot: int, req: Request) -> None:
+        self.running[slot] = req
+
+    def record_token(self, slot: int, token: int) -> None:
+        req = self.running[slot]
+        now = time.monotonic()
+        if not req.output:
+            req.t_first_token = now
+        req.output.append(int(token))
+        req.token_times.append(now)
+
+    def finish(self, slot: int) -> Request:
+        req = self.running.pop(slot)
+        req.t_done = time.monotonic()
+        self.finished.append(req)
+        return req
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.running
+
+    def stats(self) -> ServeStats:
+        s = ServeStats()
+        if not self.finished:
+            return s
+        t0 = min(r.t_submit for r in self.finished)
+        t1 = max(r.t_done for r in self.finished)
+        s.wall_s = t1 - t0
+        s.total_requests = len(self.finished)
+        for r in self.finished:
+            s.total_tokens += len(r.output)
+            times = [r.t_first_token] + r.token_times
+            s.latencies_s.extend(float(b - a) for a, b in zip(times[:-1], times[1:]))
+        return s

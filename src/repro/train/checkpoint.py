@@ -1,0 +1,160 @@
+"""Fault-tolerant checkpointing: atomic, content-addressed, elastic, sealable.
+
+Properties the 1000-node posture needs (DESIGN.md §4):
+  * **atomic**: write to a temp dir, fsync manifest, rename — a crash
+    mid-save never corrupts the latest-good checkpoint;
+  * **verifiable**: every leaf carries a SHA-256; restore refuses silently
+    corrupted files;
+  * **elastic**: arrays are stored unsharded-logical (host numpy), so a
+    restore may target a *different* mesh — re-sharding happens at
+    device_put with the new sharding (tested save-on-A/load-on-B);
+  * **confidential**: with a TrustDomain, leaves are sealed (ChaCha20+HMAC)
+    so checkpoints at rest never expose weights (the paper's LUKS/protected
+    -FS requirement, Insight 2/§III-B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.confidential import TrustDomain
+from repro.core.sealing import SealedTensor, seal_tensor, unseal_tensor
+
+Params = Any
+
+
+def _leaf_paths(tree: Params):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(p) for p, _ in flat]
+    return names, [l for _, l in flat], treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Params, *,
+                    trust_domain: Optional[TrustDomain] = None) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f".tmp_step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    names, leaves, _ = _leaf_paths(tree)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "sealed": False}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        if trust_domain is not None and trust_domain.confidential:
+            st = seal_tensor(trust_domain.sealing_key, f"ckpt/{step}{name}", leaf)
+            np.save(tmp / fname, np.asarray(st.ciphertext))
+            manifest["sealed"] = True
+            entry = {"name": name, "file": fname, "shape": list(st.shape),
+                     "dtype": st.dtype, "n_bytes": st.n_bytes,
+                     "mac": st.mac.hex()}
+        else:
+            np.save(tmp / fname, arr)
+            entry = {"name": name, "file": fname, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype),
+                     "sha256": hashlib.sha256(arr.tobytes()).hexdigest()}
+        manifest["leaves"][str(i)] = entry
+    mpath = tmp / "manifest.json"
+    mpath.write_text(json.dumps(manifest))
+    with open(mpath) as f:
+        os.fsync(f.fileno())
+    final = directory / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    (directory / "LATEST.tmp").write_text(str(step))
+    (directory / "LATEST.tmp").rename(directory / "LATEST")
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    p = Path(directory) / "LATEST"
+    if not p.exists():
+        return None
+    step = int(p.read_text())
+    return step if (Path(directory) / f"step_{step}").exists() else None
+
+
+class CorruptCheckpoint(Exception):
+    pass
+
+
+def restore_checkpoint(directory: str | Path, step: int, treedef_like: Params, *,
+                       trust_domain: Optional[TrustDomain] = None,
+                       shardings: Optional[Params] = None) -> Params:
+    """Restore into the structure of ``treedef_like``. ``shardings`` (a pytree
+    of NamedSharding matching the leaves) enables elastic re-shard on load."""
+    d = Path(directory) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    names, like_leaves, treedef = _leaf_paths(treedef_like)
+    if len(names) != len(manifest["leaves"]):
+        raise CorruptCheckpoint(
+            f"leaf count mismatch: {len(names)} vs {len(manifest['leaves'])}")
+    leaves = []
+    for i, name in enumerate(names):
+        entry = manifest["leaves"][str(i)]
+        raw = np.load(d / entry["file"])
+        if manifest["sealed"]:
+            if trust_domain is None:
+                raise CorruptCheckpoint("sealed checkpoint requires a TrustDomain")
+            st = SealedTensor(name=f"ckpt/{step}{entry['name']}",
+                              ciphertext=jax.numpy.asarray(raw),
+                              mac=bytes.fromhex(entry["mac"]),
+                              shape=tuple(entry["shape"]), dtype=entry["dtype"],
+                              n_bytes=entry["n_bytes"])
+            arr = np.asarray(unseal_tensor(trust_domain.sealing_key, st))
+        else:
+            digest = hashlib.sha256(raw.tobytes()).hexdigest()
+            if digest != entry["sha256"]:
+                raise CorruptCheckpoint(f"digest mismatch for {entry['name']}")
+            arr = raw
+        leaves.append(arr)
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(shardings)
+        leaves = [jax.device_put(a, s) for a, s in zip(leaves, sh_leaves)]
+    else:
+        leaves = [jax.numpy.asarray(a) for a in leaves]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Restart-on-failure orchestration: keep_n retention + auto-resume."""
+    directory: Path
+    keep_n: int = 3
+    trust_domain: Optional[TrustDomain] = None
+
+    def __post_init__(self):
+        self.directory = Path(self.directory)
+
+    def save(self, step: int, tree: Params) -> Path:
+        path = save_checkpoint(self.directory, step, tree,
+                               trust_domain=self.trust_domain)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*"))
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(self.directory / f"step_{s}", ignore_errors=True)
+
+    def resume(self, treedef_like: Params,
+               shardings: Optional[Params] = None) -> Tuple[Optional[int], Optional[Params]]:
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        tree = restore_checkpoint(self.directory, step, treedef_like,
+                                  trust_domain=self.trust_domain,
+                                  shardings=shardings)
+        return step, tree

@@ -1,0 +1,150 @@
+"""Training loop: jitted train_step with microbatch gradient accumulation,
+optional gradient compression, and fault-tolerance hooks.
+
+``make_train_step`` builds the pjit-able step used by both the real trainer
+(examples/train_tiny.py) and the dry-run launcher (lowered with
+ShapeDtypeStructs on the production mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: OptState
+
+
+def init_train_state(model: Model, opt_cfg: AdamWConfig, key) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params, init_opt_state(opt_cfg, params))
+
+
+def abstract_train_state(model: Model, opt_cfg: AdamWConfig) -> TrainState:
+    return jax.eval_shape(
+        lambda: init_train_state(model, opt_cfg, jax.random.key(0)))
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, unroll_microbatches: bool = False,
+                    grad_transform: Optional[Callable[[Params], Params]] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 accumulates gradients over the batch shards
+    (activation memory / global-batch decoupling) — a lax.scan by default,
+    or a concrete python loop with ``unroll_microbatches`` (the dry-run's
+    cost analysis counts scan bodies once, so analysis lowerings unroll).
+    ``grad_transform`` hooks gradient compression between accumulation and
+    the optimizer.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def reshape(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(reshape, batch)
+
+            def acc_body(carry, mbatch):
+                (loss_a, grads_a) = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mbatch)
+                grads_a = jax.tree.map(jnp.add, grads_a, grads)
+                return (loss_a + loss, grads_a), metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            carry = (jnp.zeros((), jnp.float32), zeros)
+            if unroll_microbatches:
+                for i in range(microbatches):
+                    carry, metrics = acc_body(
+                        carry, jax.tree.map(lambda x: x[i], mb))
+                loss, grads = carry
+            else:
+                (loss, grads), metrics = jax.lax.scan(acc_body, carry, mb)
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Per-step deadline tracking — the straggler-mitigation hook.
+
+    On real fleets, ``on_straggle`` triggers rebalancing (shrink microbatch,
+    exclude slow host from the next allocation, or checkpoint-and-restart on
+    a healthy slice). Here it records and (optionally) calls back.
+    """
+    deadline_s: float
+    on_straggle: Optional[Callable[[int, float], None]] = None
+    history: list = dataclasses.field(default_factory=list)
+    straggles: int = 0
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        self.history.append(duration_s)
+        if duration_s > self.deadline_s:
+            self.straggles += 1
+            if self.on_straggle:
+                self.on_straggle(step, duration_s)
+            return True
+        return False
+
+    @property
+    def median_s(self) -> float:
+        h = sorted(self.history)
+        return h[len(h) // 2] if h else 0.0
+
+
+def train_loop(model: Model, state: TrainState, train_step, data_iter, *,
+               num_steps: int, log_every: int = 10,
+               checkpoint_cb: Optional[Callable[[int, TrainState], None]] = None,
+               checkpoint_every: int = 0,
+               monitor: Optional[StragglerMonitor] = None,
+               donate: bool = False):
+    """Host-side loop: metrics, straggler observation, periodic checkpoints.
+
+    ``donate=True`` donates the state buffers each step (halves peak memory;
+    the caller's input state becomes invalid)."""
+    history = []
+    step_fn = jax.jit(train_step, donate_argnums=(0,) if donate else ())
+    for step in range(num_steps):
+        t0 = time.monotonic()
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.monotonic() - t0
+        if monitor is not None:
+            monitor.observe(step, dt)
+        metrics["step_s"] = dt
+        history.append(metrics)
+        if checkpoint_every and checkpoint_cb and (step + 1) % checkpoint_every == 0:
+            checkpoint_cb(step + 1, state)
+    return state, history

@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+sys.path.insert(0, str(SRC))
+
+# tests must see exactly 1 device (the dry-run sets its own flags in-process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 520) -> str:
+    """Run a python snippet with N forced host devices (for multi-device
+    tests, which must not pollute this process's jax device state)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

@@ -1,0 +1,58 @@
+"""Cost model: reproduces the paper's Figs 12-13 structure."""
+
+import dataclasses
+
+import pytest
+
+from repro.costs.model import (Workload, best_cpu_cost, crossover_batch,
+                               tokens_per_second, usd_per_mtok, vcpu_sweep)
+from repro.costs.pricing import SKUS
+
+
+@pytest.fixture
+def w7b():
+    return Workload(n_params=6.7e9, batch=1, in_tokens=128, out_tokens=128)
+
+
+class TestCostModel:
+    def test_cpu_tee_cheaper_at_batch_1(self, w7b):
+        """Fig 12: CPU TEEs ~2x cheaper than cGPU at batch 1."""
+        cpu = best_cpu_cost(w7b, "emr-amx-tdx")
+        gpu = usd_per_mtok(w7b, "h100-cc")
+        assert gpu / cpu > 1.5
+
+    def test_crossover_exists_and_in_band(self, w7b):
+        """Fig 12: cGPU wins somewhere in the tens-to-hundreds batch range."""
+        x = crossover_batch(w7b, "emr-amx-tdx", "h100-cc",
+                            [1, 2, 4, 8, 16, 32, 64, 128, 256, 512])
+        assert x is not None and 16 <= x <= 256
+
+    def test_vcpu_throughput_plateaus(self, w7b):
+        """Fig 12: memory-bound beyond ~32 cores -> diminishing returns."""
+        w = dataclasses.replace(w7b, batch=64)
+        sweep = vcpu_sweep(w, "emr-amx-tdx", [8, 16, 32, 64])
+        gain_8_16 = sweep[16]["tokens_per_s"] / sweep[8]["tokens_per_s"]
+        gain_32_64 = sweep[64]["tokens_per_s"] / sweep[32]["tokens_per_s"]
+        assert gain_8_16 > gain_32_64
+
+    def test_tee_costs_more_than_plain(self, w7b):
+        assert (usd_per_mtok(w7b, "emr-amx-tdx", 32)
+                > usd_per_mtok(w7b, "emr-amx", 32))
+        assert usd_per_mtok(w7b, "h100-cc") >= usd_per_mtok(w7b, "h100")
+
+    def test_input_scaling_erodes_cpu_advantage(self, w7b):
+        """Fig 13: larger inputs help the GPU more than the CPU."""
+        adv = {}
+        for s in [128, 4096]:
+            w = dataclasses.replace(w7b, batch=4, in_tokens=s)
+            adv[s] = usd_per_mtok(w, "h100-cc") / best_cpu_cost(w, "emr-amx-tdx")
+        assert adv[4096] < adv[128] * 1.5  # advantage does not explode with input
+
+    def test_throughput_monotone_in_batch(self, w7b):
+        tps = [tokens_per_second(dataclasses.replace(w7b, batch=b), SKUS["h100-cc"])
+               for b in [1, 8, 64]]
+        assert tps[0] < tps[1] < tps[2]
+
+    def test_tpu_rows_present(self, w7b):
+        """Our platform extension: v5e-cc prices a confidential deployment."""
+        assert usd_per_mtok(w7b, "v5e-cc") > usd_per_mtok(w7b, "v5e") > 0

@@ -1,0 +1,220 @@
+"""Per-architecture smoke + correctness tests.
+
+Every assigned arch instantiates a reduced same-family config, runs one
+forward/train step (shapes + no NaNs), and passes the prefill->decode parity
+check: decoding token s after prefilling [0, s) must reproduce the
+teacher-forced forward logits at position s (the state/cache handoff is
+where most serving bugs live)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs, smoke_config
+from repro.configs.base import shape_applicable
+from repro.models import build_model
+
+ASSIGNED = [
+    "whisper-small", "deepseek-7b", "qwen3-32b", "deepseek-67b",
+    "mistral-nemo-12b", "dbrx-132b", "deepseek-v3-671b", "jamba-v0.1-52b",
+    "rwkv6-3b", "chameleon-34b",
+]
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = smoke_config(name)
+            model = build_model(cfg)
+            params = model.init_params(jax.random.key(0))
+            cache[name] = (cfg, model, params)
+        return cache[name]
+
+    return get
+
+
+def _batch(cfg, model, b=2, s=16, key=None):
+    key = key or jax.random.key(1)
+    if model.is_encdec:
+        return {
+            "frames": jax.random.normal(key, (b, s, cfg.d_model), cfg.jnp_dtype),
+            "tokens": jax.random.randint(key, (b, cfg.max_target_len), 0,
+                                         cfg.vocab_size, jnp.int32),
+            "labels": jax.random.randint(key, (b, cfg.max_target_len), 0,
+                                         cfg.vocab_size, jnp.int32),
+        }
+    return {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size, jnp.int32),
+    }
+
+
+class TestRegistry:
+    def test_all_assigned_registered(self):
+        for a in ASSIGNED:
+            assert a in list_configs()
+
+    def test_configs_match_assignment(self):
+        """Spot-check exact assigned hyperparameters."""
+        c = get_config("deepseek-67b")
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (95, 8192, 64, 8, 22016, 102400)
+        c = get_config("qwen3-32b")
+        assert c.qk_norm and c.num_kv_heads == 8 and c.vocab_size == 151936
+        c = get_config("deepseek-v3-671b")
+        assert c.moe.num_experts == 256 and c.moe.top_k == 8 and c.mla
+        c = get_config("jamba-v0.1-52b")
+        assert c.attn_period == 8 and c.moe.num_experts == 16 and c.moe.top_k == 2
+        c = get_config("rwkv6-3b")
+        assert c.family == "ssm" and c.d_model == 2560 and c.sub_quadratic
+        c = get_config("whisper-small")
+        assert c.encoder_layers == 12 and c.vocab_size == 51865
+
+    def test_param_counts_near_nameplate(self):
+        """Total params should be within ~35% of the model's nameplate size."""
+        expect = {"deepseek-7b": 7e9, "deepseek-67b": 67e9, "qwen3-32b": 32e9,
+                  "mistral-nemo-12b": 12e9, "dbrx-132b": 132e9,
+                  "deepseek-v3-671b": 671e9, "jamba-v0.1-52b": 52e9,
+                  "rwkv6-3b": 3e9, "chameleon-34b": 34e9}
+        for name, nominal in expect.items():
+            total, active = get_config(name).params_count()
+            assert 0.65 * nominal < total < 1.45 * nominal, (name, total)
+            assert active <= total
+
+    def test_long_500k_applicability(self):
+        runs = [a for a in ASSIGNED
+                if shape_applicable(get_config(a), SHAPES["long_500k"])[0]]
+        assert sorted(runs) == ["jamba-v0.1-52b", "rwkv6-3b"]
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+class TestArchSmoke:
+    def test_train_step_shapes_and_finite(self, built, name):
+        cfg, model, params = built(name)
+        batch = _batch(cfg, model)
+        loss, metrics = jax.jit(model.loss)(params, batch)
+        assert np.isfinite(float(loss))
+        assert np.isfinite(float(metrics["ce_loss"]))
+        grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+        for leaf in jax.tree.leaves(grads):
+            assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+    def test_prefill_decode_parity(self, built, name):
+        cfg, model, params = built(name)
+        b, s = 2, 12
+        batch = _batch(cfg, model, b=b, s=s)
+        # teacher-forced logits
+        if model.is_encdec:
+            logits_all, _ = model._impl.forward(params, batch["frames"],
+                                                batch["tokens"])
+        else:
+            logits_all, _ = model._impl.forward(params, batch["tokens"])
+        # prefill on [:-1], then decode the final token's predecessor
+        cache = model.init_cache(b, (cfg.max_target_len if model.is_encdec else s) + 4)
+        if model.is_encdec:
+            pf = {"frames": batch["frames"], "tokens": batch["tokens"][:, :-1]}
+            last = batch["tokens"][:, -1:]
+        else:
+            pf = {"tokens": batch["tokens"][:, :-1]}
+            last = batch["tokens"][:, -1:]
+        logits_pf, cache = jax.jit(model.prefill)(params, pf, cache)
+        np.testing.assert_allclose(np.asarray(logits_pf),
+                                   np.asarray(logits_all[:, -2]),
+                                   atol=2e-3, rtol=2e-3)
+        logits_dec, cache = jax.jit(model.decode_step)(params, last, cache)
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_all[:, -1]),
+                                   atol=2e-3, rtol=2e-3)
+
+    def test_decode_is_deterministic(self, built, name):
+        cfg, model, params = built(name)
+        b = 2
+        batch = _batch(cfg, model, b=b, s=8)
+        cache = model.init_cache(b, (cfg.max_target_len if model.is_encdec else 8) + 8)
+        pf = ({"frames": batch["frames"], "tokens": batch["tokens"][:, :4]}
+              if model.is_encdec else {"tokens": batch["tokens"][:, :4]})
+        _, c1 = jax.jit(model.prefill)(params, pf, cache)
+        tok = jnp.ones((b, 1), jnp.int32)
+        l1, _ = jax.jit(model.decode_step)(params, tok, c1)
+        l2, _ = jax.jit(model.decode_step)(params, tok, c1)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+class TestMoEDispatch:
+    def test_sorted_dispatch_matches_per_token_loop(self):
+        """Sort-based MoE == explicit per-token expert loop (oracle)."""
+        from repro.models import moe as moe_mod
+        cfg = moe_mod.MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                                capacity_factor=10.0)  # no drops
+        params = moe_mod.init_moe(jax.random.key(0), 16, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (10, 16), jnp.float32)
+        out, _ = moe_mod.moe_ffn_tokens(params, cfg, x)
+        w, idx, _ = moe_mod.route(params, cfg, x)
+        expect = np.zeros((10, 16), np.float32)
+        we = params["experts"]
+        for t in range(10):
+            for j in range(cfg.top_k):
+                e = int(idx[t, j])
+                g = x[t] @ we["w_gate"][e]
+                u = x[t] @ we["w_up"][e]
+                y = (jax.nn.silu(g) * u) @ we["w_down"][e]
+                expect[t] += float(w[t, j]) * np.asarray(y)
+        np.testing.assert_allclose(np.asarray(out), expect, atol=1e-4, rtol=1e-4)
+
+    def test_capacity_drops_tokens(self):
+        from repro.models import moe as moe_mod
+        cfg = moe_mod.MoEConfig(num_experts=2, top_k=1, d_ff_expert=8,
+                                capacity_factor=0.1)
+        params = moe_mod.init_moe(jax.random.key(0), 8, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (40, 8), jnp.float32)
+        out, _ = moe_mod.moe_ffn_tokens(params, cfg, x)
+        # capacity = 0.1*40/2 = 2 slots per expert -> most tokens dropped (zero rows)
+        zero_rows = int(jnp.sum(jnp.all(out == 0, axis=-1)))
+        assert zero_rows >= 30
+
+
+class TestLayerOracles:
+    def test_gqa_equals_repeated_mha(self):
+        from repro.models import layers
+        b, s, h, hk, hd = 2, 16, 8, 2, 8
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hk, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hk, hd), jnp.float32)
+        out = layers.sdpa(q, k, v, causal=True)
+        out2 = layers.sdpa(q, jnp.repeat(k, h // hk, 2), jnp.repeat(v, h // hk, 2),
+                           causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)
+
+    def test_rope_relative_property(self):
+        """RoPE: <q_m, k_n> depends only on (m - n)."""
+        from repro.models import layers
+        d = 32
+        q = jax.random.normal(jax.random.key(0), (1, 1, d))
+        k = jax.random.normal(jax.random.key(1), (1, 1, d))
+        def dot_at(m, n):
+            qm = layers.apply_rope(q, jnp.array([[m]]))
+            kn = layers.apply_rope(k, jnp.array([[n]]))
+            return float(jnp.sum(qm * kn))
+        assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+        assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-6  # but changes with gap
+
+    def test_mamba_chunked_scan_matches_sequential(self):
+        from repro.models import ssm
+        cfg = ssm.MambaConfig(d_model=16, d_state=4, d_conv=4, expand=2, chunk=8)
+        params = ssm.init_mamba(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 20, 16), jnp.float32)
+        y_full = ssm.mamba_forward(params, cfg, x)
+        # sequential single-token stepping must agree
+        state = ssm.init_mamba_state(2, cfg, jnp.float32)
+        outs = []
+        for t in range(20):
+            y, state = ssm.mamba_step(params, cfg, x[:, t:t + 1], state)
+            outs.append(y)
+        y_seq = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_seq),
+                                   atol=1e-4, rtol=1e-4)

@@ -1,0 +1,123 @@
+"""Roofline extraction: HLO collective parsing, term math, dry-run path."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.overheads import RooflineTerms
+from repro.roofline.analysis import (CellRoofline, HBM_BW, PEAK_FLOPS,
+                                     _shape_bytes, model_flops_for,
+                                     parse_collectives)
+from repro.configs import SHAPES, get_config
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+class TestHLOParsing:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[32,256]") == 32 * 256 * 4
+        assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+        assert _shape_bytes("(f32[4,4], bf16[2,2])") == 64 + 8
+        assert _shape_bytes("pred[16]") == 16
+
+    def test_parse_synthetic_hlo(self):
+        hlo = """
+  %all-reduce.1 = f32[32,256]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[64,64]{1,0} all-gather(%x), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  %rs = f32[8,8]{1,0} reduce-scatter(%y), channel_id=3, replica_groups=[1,8]<=[8], to_apply=%add
+  %cp = f32[16]{0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1}}
+"""
+        ops = parse_collectives(hlo)
+        kinds = {o.kind for o in ops}
+        assert kinds == {"all-reduce", "all-gather", "reduce-scatter",
+                         "collective-permute"}
+        ar = next(o for o in ops if o.kind == "all-reduce")
+        assert ar.group_size == 4
+        assert ar.moved_bytes == 32 * 256 * 4 * 2 * 3 / 4  # 2(s-1)/s factor
+        rs = next(o for o in ops if o.kind == "reduce-scatter")
+        assert rs.moved_bytes == 8 * 8 * 4 * 7  # (s-1) * result
+
+    def test_done_ops_not_double_counted(self):
+        hlo = """
+  %ag0 = bf16[64]{0} all-gather-start(%x), channel_id=1, replica_groups=[4,2]<=[8]
+  %ag1 = bf16[64]{0} all-gather-done(%ag0)
+"""
+        ops = parse_collectives(hlo)
+        assert len(ops) == 1
+
+
+class TestTermMath:
+    def _cell(self, **kw):
+        base = dict(arch="a", shape="s", mesh="16x16", n_chips=256,
+                    flops_per_dev=1e12, bytes_per_dev=1e9,
+                    collective_bytes_per_dev=1e8, collective_breakdown={},
+                    arg_bytes=10**9, temp_bytes=10**9, out_bytes=0,
+                    model_flops=2e14)
+        base.update(kw)
+        return CellRoofline(**base)
+
+    def test_terms(self):
+        c = self._cell()
+        assert abs(c.compute_s - 1e12 / PEAK_FLOPS) < 1e-12
+        assert abs(c.memory_s - 1e9 / HBM_BW) < 1e-12
+        assert c.bound == "compute"
+        assert 0 < c.roofline_fraction <= 1.0
+
+    def test_fits_hbm(self):
+        assert self._cell().fits_hbm
+        assert not self._cell(temp_bytes=17 * 1024**3).fits_hbm
+
+    def test_bw_fraction_decode_metric(self):
+        c = self._cell(flops_per_dev=1e9, bytes_per_dev=2e9, arg_bytes=10**9)
+        assert 0 < c.bw_fraction <= 1.0
+
+
+class TestModelFlops:
+    def test_train_vs_decode_scale(self):
+        cfg = get_config("deepseek-7b")
+        tr = model_flops_for(cfg, SHAPES["train_4k"])
+        de = model_flops_for(cfg, SHAPES["decode_32k"])
+        # train: 6*N*B*S; decode: 2*N*B  -> ratio 3*S*(256/128)
+        assert tr / de == pytest.approx(3 * 4096 * 256 / 128, rel=0.01)
+
+    def test_moe_uses_active_params(self):
+        cfg = get_config("deepseek-v3-671b")
+        total, active = cfg.params_count()
+        assert active < 0.1 * total  # 37B active of 671B
+        assert model_flops_for(cfg, SHAPES["decode_32k"]) == 2.0 * active * 128
+
+
+@pytest.mark.skipif(not (RESULTS / "dryrun_single_pod.json").exists(),
+                    reason="dry-run results not generated")
+class TestDryRunResults:
+    """Validates the committed dry-run sweeps (deliverable e)."""
+
+    def _load(self, name):
+        return json.loads((RESULTS / name).read_text())
+
+    @pytest.mark.parametrize("fname", ["dryrun_single_pod.json",
+                                       "dryrun_multi_pod.json"])
+    def test_all_cells_compiled(self, fname):
+        recs = self._load(fname)
+        archs = {r["arch"] for r in recs}
+        assert len(archs) == 10
+        assert sum(1 for r in recs if "error" in r) == 0
+        # 40 cells: 32 lowered + 8 documented skips
+        assert len(recs) == 40
+        skips = [r for r in recs if r.get("skipped")]
+        assert len(skips) == 8
+        assert all(r["shape"] == "long_500k" for r in skips)
+
+    def test_multi_pod_uses_512_chips(self):
+        recs = self._load("dryrun_multi_pod.json")
+        lowered = [r for r in recs if not r.get("skipped")]
+        assert all(r["n_chips"] == 512 for r in lowered)
+
+    def test_terms_present_and_positive(self):
+        recs = self._load("dryrun_single_pod.json")
+        for r in recs:
+            if r.get("skipped"):
+                continue
+            assert r["compute_s"] > 0 and r["memory_s"] > 0
+            assert r["bound"] in ("compute", "memory", "collective")

@@ -1,0 +1,165 @@
+"""Serving runtime: engine, continuous batching, slots, sampling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.models import build_model
+from repro.runtime import sampling
+from repro.runtime.engine import Engine
+from repro.runtime.kvcache import SlotState
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+class TestEngine:
+    def test_batched_equals_sequential(self, small_model):
+        cfg, model, params = small_model
+        prompts = [np.arange(1, 9, dtype=np.int32),
+                   np.arange(9, 1, -1, dtype=np.int32),
+                   np.full(8, 5, np.int32)]
+        eng = Engine(model, params, max_slots=3, max_len=64, prefill_len=8)
+        reqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        eng.run()
+        batched = [r.output for r in reqs]
+        sequential = []
+        for p in prompts:
+            e = Engine(model, params, max_slots=1, max_len=64, prefill_len=8)
+            sequential.append(e.generate(p, 5))
+        assert batched == sequential
+
+    def test_continuous_refill(self, small_model):
+        """More requests than slots: all finish, slots recycled."""
+        cfg, model, params = small_model
+        eng = Engine(model, params, max_slots=2, max_len=64, prefill_len=8)
+        reqs = [eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=3)
+                for i in range(5)]
+        stats = eng.run()
+        assert stats.total_requests == 5
+        assert all(len(r.output) == 3 for r in reqs)
+
+    def test_confidential_engine_same_tokens(self, small_model):
+        """TEE mode must not change results — only protect them."""
+        cfg, model, params = small_model
+        p = np.arange(2, 10, dtype=np.int32)
+        plain = Engine(model, params, max_slots=1, max_len=64,
+                       prefill_len=8).generate(p, 5)
+        conf_eng = Engine(model, params, max_slots=1, max_len=64, prefill_len=8,
+                          trust_domain=TrustDomain("tdx"))
+        conf = conf_eng.generate(p, 5)
+        assert plain == conf
+        assert conf_eng.td.channel.stats.messages_in == 1
+        assert conf_eng.td.channel.stats.messages_out == 1
+
+    def test_throughput_latency_stats(self, small_model):
+        cfg, model, params = small_model
+        eng = Engine(model, params, max_slots=2, max_len=64, prefill_len=8)
+        for i in range(3):
+            eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=4)
+        stats = eng.run()
+        assert stats.total_tokens == 12
+        assert stats.throughput_tps > 0
+        assert stats.mean_latency_s > 0
+        assert stats.p99_latency_s >= stats.mean_latency_s
+
+
+class TestSlots:
+    def test_acquire_release(self):
+        s = SlotState.create(2)
+        a = s.acquire(100)
+        b = s.acquire(101)
+        assert {a, b} == {0, 1}
+        assert s.acquire(102) is None
+        s.release(a)
+        assert s.acquire(102) == a
+
+    @given(ops=st.lists(st.tuples(st.booleans(), st.integers(0, 3)),
+                        max_size=40))
+    @settings(max_examples=25, deadline=None)
+    def test_no_double_assignment_property(self, ops):
+        s = SlotState.create(4)
+        held = set()
+        rid = 0
+        for is_acquire, slot_hint in ops:
+            if is_acquire:
+                got = s.acquire(rid)
+                rid += 1
+                if got is not None:
+                    assert got not in held
+                    held.add(got)
+                else:
+                    assert len(held) == 4
+            elif held:
+                victim = sorted(held)[slot_hint % len(held)]
+                s.release(victim)
+                held.remove(victim)
+        assert s.num_active == len(held)
+
+
+class TestSampling:
+    def test_greedy(self):
+        logits = jnp.asarray([[0.0, 5.0, 1.0], [9.0, 0.0, 0.0]])
+        assert sampling.greedy(logits).tolist() == [1, 0]
+
+    def test_temperature_zero_is_greedy(self):
+        logits = jax.random.normal(jax.random.key(0), (4, 16))
+        t0 = sampling.temperature(logits, jax.random.key(1), temp=0.0)
+        assert t0.tolist() == sampling.greedy(logits).tolist()
+
+    def test_top_k_restricts_support(self):
+        logits = jnp.asarray([[10.0, 9.0, -5.0, -6.0]] * 64)
+        keys = jax.random.split(jax.random.key(2), 64)
+        toks = jnp.stack([sampling.temperature(logits[i:i + 1], keys[i], 1.0, top_k=2)[0]
+                          for i in range(64)])
+        assert set(np.asarray(toks).tolist()) <= {0, 1}
+
+
+class TestSealedPreemption:
+    def test_seal_restore_slot_preserves_generation(self, small_model):
+        """Preempt a running request (sealed KV eviction), restore it, and
+        the final output must equal the uninterrupted run."""
+        cfg, model, params = small_model
+        from repro.core import TrustDomain
+        prompt = np.arange(1, 9, dtype=np.int32)
+        # uninterrupted reference
+        ref = Engine(model, params, max_slots=1, max_len=64,
+                     prefill_len=8).generate(prompt, 8)
+        # interrupted run: 3 tokens, seal out, restore, finish
+        eng = Engine(model, params, max_slots=1, max_len=64, prefill_len=8,
+                     trust_domain=TrustDomain("tdx"))
+        req = eng.submit(prompt, max_new_tokens=8)
+        for _ in range(3):
+            eng.step()
+        sealed, evicted = eng.seal_slot(0)
+        assert eng.slots.num_active == 0
+        eng.restore_slot(sealed, evicted)
+        eng.run()
+        out = list(eng.td.egress(np.asarray(req.output, np.int32)))
+        # outputs recorded pre-egress are plaintext already in this path
+        assert req.output == ref
+
+    def test_sealed_slot_rejects_tampering(self, small_model):
+        cfg, model, params = small_model
+        from repro.core import TrustDomain
+        from repro.core.sealing import IntegrityError
+        eng = Engine(model, params, max_slots=1, max_len=64, prefill_len=8,
+                     trust_domain=TrustDomain("tdx"))
+        req = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=6)
+        eng.step()
+        sealed, evicted = eng.seal_slot(0)
+        victim = next(iter(sealed.values()))
+        ct = np.asarray(victim.ciphertext).copy()
+        ct[0, 0] ^= 1
+        victim.ciphertext = jnp.asarray(ct)
+        with pytest.raises(IntegrityError):
+            eng.restore_slot(sealed, evicted)

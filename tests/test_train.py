@@ -1,0 +1,163 @@
+"""Training substrate: optimizer, loop, checkpointing, fault tolerance."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.data.pipeline import PackedLMDataset
+from repro.models import build_model
+from repro.train.checkpoint import (CheckpointManager, CorruptCheckpoint,
+                                    restore_checkpoint, save_checkpoint)
+from repro.train.optimizer import (AdamWConfig, adamw_update, init_opt_state,
+                                   lr_schedule, global_norm)
+from repro.train.train_loop import (StragglerMonitor, init_train_state,
+                                    make_train_step, train_loop)
+from repro.distributed.fault_tolerance import (FailureInjector,
+                                               run_with_restarts)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    state = init_train_state(model, opt, jax.random.key(0))
+    return cfg, model, opt, state
+
+
+def data_iter(batch_size=4, seq_len=32, seed=0):
+    return iter(PackedLMDataset(batch_size=batch_size, seq_len=seq_len, seed=seed))
+
+
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=100)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = init_opt_state(cfg, params)
+        for _ in range(60):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = adamw_update(cfg, params, grads, state)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+    def test_lr_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        assert float(lr_schedule(cfg, jnp.asarray(0))) == 0.0
+        assert abs(float(lr_schedule(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+        assert abs(float(lr_schedule(cfg, jnp.asarray(100))) - 0.1) < 1e-3
+
+    def test_grad_clip_bounds_update_norm(self):
+        cfg = AdamWConfig(lr=1e-3, grad_clip=1.0)
+        params = {"w": jnp.zeros((10,))}
+        state = init_opt_state(cfg, params)
+        big = {"w": jnp.full((10,), 1e6)}
+        _, _, metrics = adamw_update(cfg, params, big, state)
+        assert float(metrics["grad_norm"]) > 1e6  # reported pre-clip
+
+    def test_bf16_moments(self):
+        cfg = AdamWConfig(moment_dtype="bfloat16")
+        state = init_opt_state(cfg, {"w": jnp.zeros((4,), jnp.float32)})
+        assert state.m["w"].dtype == jnp.bfloat16
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self, setup):
+        cfg, model, opt, state = setup
+        step = make_train_step(model, opt)
+        state2, hist = train_loop(model, state, step, data_iter(), num_steps=8)
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_microbatching_matches_full_batch_loss(self, setup):
+        """Grad accumulation: same data -> nearly identical first-step loss."""
+        cfg, model, opt, state = setup
+        batch = next(data_iter(batch_size=4))
+        s1, m1 = jax.jit(make_train_step(model, opt))(state, batch)
+        s2, m2 = jax.jit(make_train_step(model, opt, microbatches=2))(state, batch)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-2
+        # params should end up close
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)))
+        assert d < 5e-2
+
+    def test_straggler_monitor(self):
+        mon = StragglerMonitor(deadline_s=0.1)
+        assert not mon.observe(0, 0.05)
+        assert mon.observe(1, 0.5)
+        assert mon.straggles == 1
+
+
+class TestCheckpoint:
+    def test_atomic_save_restore(self, setup, tmp_path):
+        cfg, model, opt, state = setup
+        save_checkpoint(tmp_path, 3, state)
+        back = restore_checkpoint(tmp_path, 3, jax.eval_shape(lambda: state))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            assert bool(jnp.all(a == b))
+
+    def test_corruption_detected(self, setup, tmp_path):
+        cfg, model, opt, state = setup
+        path = save_checkpoint(tmp_path, 1, state)
+        victim = sorted(path.glob("leaf_*.npy"))[2]
+        raw = np.load(victim)
+        flat = raw.reshape(-1).copy()
+        flat[0] += 1
+        np.save(victim, flat.reshape(raw.shape))
+        with pytest.raises(CorruptCheckpoint):
+            restore_checkpoint(tmp_path, 1, jax.eval_shape(lambda: state))
+
+    def test_sealed_checkpoint_roundtrip_and_key_binding(self, setup, tmp_path):
+        cfg, model, opt, state = setup
+        td = TrustDomain("tdx")
+        mgr = CheckpointManager(tmp_path, trust_domain=td)
+        mgr.save(5, state)
+        step, back = mgr.resume(jax.eval_shape(lambda: state))
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            assert bool(jnp.all(a == b))
+        # wrong trust domain key -> integrity failure
+        from repro.core.sealing import IntegrityError
+        bad = CheckpointManager(tmp_path, trust_domain=TrustDomain("tdx"))
+        with pytest.raises(IntegrityError):
+            bad.resume(jax.eval_shape(lambda: state))
+
+    def test_retention_gc(self, setup, tmp_path):
+        cfg, model, opt, state = setup
+        mgr = CheckpointManager(tmp_path, keep_n=2)
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, {"x": jnp.ones((2,))})
+        kept = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert kept == ["step_3", "step_4"]
+
+
+class TestFaultTolerance:
+    def test_restart_resume_bitwise_identical(self, setup, tmp_path):
+        """Interrupted-and-resumed run == uninterrupted run, loss for loss."""
+        cfg, model, opt, state = setup
+        step = make_train_step(model, opt)
+
+        def data_factory(cursor):
+            ds = PackedLMDataset(batch_size=4, seq_len=32, seed=0)
+            it = iter(ds)
+            for _ in range(cursor):
+                next(it)
+            return it
+
+        mgr1 = CheckpointManager(tmp_path / "a")
+        _, losses_clean, r0 = run_with_restarts(
+            state=state, train_step=step, data_factory=data_factory,
+            num_steps=8, manager=mgr1, checkpoint_every=2, injector=None)
+        assert r0 == 0
+
+        mgr2 = CheckpointManager(tmp_path / "b")
+        inj = FailureInjector(fail_at={3, 6})
+        _, losses_faulty, r = run_with_restarts(
+            state=state, train_step=step, data_factory=data_factory,
+            num_steps=8, manager=mgr2, checkpoint_every=2, injector=inj)
+        assert r == 2
+        np.testing.assert_allclose(losses_clean, losses_faulty, rtol=1e-6)
