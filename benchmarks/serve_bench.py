@@ -1,0 +1,94 @@
+"""Serving benchmark: v1-style static prefill vs v2 bucketed batched prefill.
+
+Measures the paper's two user-perceived serving metrics (§III-C) —
+throughput (tokens/s) and next-token latency — plus time-to-first-token and
+the boundary-crossing counts that drive the cgpu fixed-cost model
+(Insight 10), for two engine configurations over the same mixed-length
+workload:
+
+  v1-style : one static prefill bucket, one request per prefill call
+             (the seed engine's shape; long prompts now chunk instead of
+             silently truncating, so outputs are comparable)
+  v2       : power-of-two prefill buckets, same-bucket requests batched
+             into one jitted prefill call
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py [--requests 12] [--tee tdx]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import build_bench_model
+from repro.core import TrustDomain
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import stats_from_requests
+
+
+def make_workload(n: int, vocab: int, seed: int = 7):
+    """Mixed prompt lengths spanning the bucket range (8..100 tokens)."""
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(8, 100, size=n)
+    return [rng.integers(1, vocab, size=int(l)).astype(np.int32)
+            for l in lengths]
+
+
+def run_config(label: str, model, params, prompts, *, max_new_tokens: int,
+               tee: str, buckets, batch_prefill: bool, max_slots: int):
+    td = TrustDomain(tee)
+    eng = Engine(model, params, max_slots=max_slots, max_len=256,
+                 trust_domain=td, prefill_buckets=buckets,
+                 batch_prefill=batch_prefill)
+    # warmup wave: pays every (rows, bucket) prefill compilation once, so the
+    # measured wave reports steady-state serving numbers.
+    for p in prompts:
+        eng.submit(p, max_new_tokens)
+    eng.run(max_steps=100_000)
+    td.channel.stats.reset()
+
+    t0 = time.monotonic()
+    reqs = [eng.submit(p, max_new_tokens) for p in prompts]
+    eng.run(max_steps=100_000)
+    wall = time.monotonic() - t0
+    assert all(r.finished for r in reqs)
+    stats = stats_from_requests(reqs)
+    frames = td.channel.stats.messages_out if td.confidential else 0
+    print(f"{label:8s} {stats.total_tokens:6d} tok  {wall:6.2f}s  "
+          f"{stats.throughput_tps:8.1f} tok/s  "
+          f"TTFT mean {stats.mean_ttft_s * 1e3:7.1f}ms p99 {stats.p99_ttft_s * 1e3:7.1f}ms  "
+          f"step mean {stats.mean_latency_s * 1e3:6.1f}ms  "
+          f"egress frames {frames}")
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--tee", default="tdx",
+                    choices=["none", "vm", "sgx", "tdx", "cgpu", "tpu_cc"])
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg, model, params = build_bench_model(d_model=args.d_model,
+                                           num_layers=args.layers)
+    prompts = make_workload(args.requests, cfg.vocab_size)
+    print(f"workload: {args.requests} requests, prompt lens "
+          f"{min(map(len, prompts))}-{max(map(len, prompts))}, "
+          f"{args.max_new_tokens} new tokens each, tee={args.tee}\n")
+
+    common = dict(max_new_tokens=args.max_new_tokens, tee=args.tee,
+                  max_slots=args.max_slots)
+    run_config("v1-style", model, params, prompts,
+               buckets=(64,), batch_prefill=False, **common)
+    run_config("v2", model, params, prompts,
+               buckets=(16, 32, 64, 128), batch_prefill=True, **common)
+
+
+if __name__ == "__main__":
+    main()

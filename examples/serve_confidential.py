@@ -1,11 +1,17 @@
 """End-to-end confidential serving driver (the paper's measured scenario).
 
 Loads a small model from a sealed checkpoint, attests, then serves a stream
-of batched requests with continuous batching, reporting the paper's two
-user-perceived metrics (throughput, next-token latency) plus the modeled
-overhead of running the same deployment on each TEE platform.
+of batched requests with continuous batching — engine v2: bucketed batched
+prefill (no prompt truncation), priority admission with sealed-KV
+preemption, and per-token streaming egress: every sampled token leaves the
+trust domain immediately as its own encrypted frame (the boundary-crossing
+pattern the paper's cgpu overhead model prices, Insight 10).
 
-    PYTHONPATH=src python examples/serve_confidential.py [--requests 8]
+Reports the paper's user-perceived metrics (throughput, next-token latency,
+TTFT) plus the modeled overhead of running the same deployment on each TEE
+platform.
+
+    PYTHONPATH=src:. python examples/serve_confidential.py [--requests 8]
 """
 
 import argparse
@@ -43,13 +49,21 @@ def main():
         v.verify(td_quote)
         print(f"[attested {args.tee}] digest={td_quote.measurement[:16]}...")
 
-    engine = Engine(model, params, max_slots=4, max_len=128, prefill_len=16,
-                    trust_domain=td)
+    engine = Engine(model, params, max_slots=4, max_len=256,
+                    prefill_buckets=(16, 32, 64, 128), trust_domain=td)
 
+    # one interactive high-priority request streams token-by-token while the
+    # background batch (lower priority) shares the decode loop; if slots run
+    # out, a background request is sealed out (encrypted KV) and restored.
     prompts = [f"confidential inference request number {i}" for i in
                range(args.requests)]
     t0 = time.monotonic()
     reqs = [engine.submit(tok.encode(p), args.max_new_tokens) for p in prompts]
+    print("streaming (priority=5): ", end="", flush=True)
+    for t in engine.stream(tok.encode("interactive confidential session"),
+                           args.max_new_tokens, priority=5):
+        print(t, end=" ", flush=True)
+    print()
     stats = engine.run()
     wall = time.monotonic() - t0
 
@@ -57,9 +71,14 @@ def main():
           f"{stats.total_tokens} tokens in {wall:.2f}s")
     print(f"throughput: {stats.throughput_tps:.1f} tok/s   "
           f"next-token latency: mean {stats.mean_latency_s * 1e3:.1f}ms "
-          f"p99 {stats.p99_latency_s * 1e3:.1f}ms")
+          f"p99 {stats.p99_latency_s * 1e3:.1f}ms   "
+          f"TTFT: mean {stats.mean_ttft_s * 1e3:.1f}ms")
+    preempted = sum(r.n_preemptions for r in reqs)
+    if preempted:
+        print(f"sealed-KV preemptions: {preempted}")
     if td.confidential:
-        print(f"boundary traffic: {td.channel.stats}")
+        print(f"boundary traffic (one egress frame per token): "
+              f"{td.channel.stats}")
         # what this deployment would cost on each platform (modeled)
         step = stats.mean_latency_s or 1e-3
         terms = RooflineTerms(compute_s=0.25 * step, memory_s=0.7 * step,

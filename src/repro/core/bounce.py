@@ -13,11 +13,12 @@ costs exactly (fig04/fig11 harnesses).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.core.sealing import SealingKey, SealedTensor, seal_tensor, unseal_tensor
+from repro.core.sealing import (IntegrityError, SealingKey, SealedTensor,
+                                seal_tensor, unseal_tensor)
 
 
 @dataclasses.dataclass
@@ -32,6 +33,25 @@ class ChannelStats:
         self.bytes_in = self.bytes_out = 0
 
 
+@dataclasses.dataclass
+class TokenFrame:
+    """One streamed egress message: the tokens a request produced this step.
+
+    Frames are the unit the paper's cGPU fixed cost is paid per (Insight 10):
+    streaming one token per frame maximizes boundary crossings, which is
+    exactly what ``ChannelStats`` must see to price the deployment honestly.
+    ``(stream_id, seq)`` is bound into the sealed tensor's name, so the nonce
+    is unique per frame and the host side can detect replay or reordering.
+    """
+    stream_id: int
+    seq: int
+    sealed: SealedTensor
+
+    @staticmethod
+    def frame_name(stream_id: int, seq: int) -> str:
+        return f"egress/s{stream_id}/{seq}"
+
+
 class BounceBuffer:
     """Symmetric encrypted channel. ``host_*`` runs outside the trust domain,
     ``device_*`` inside. Sequence numbers make each message's nonce unique."""
@@ -41,6 +61,16 @@ class BounceBuffer:
         self.stats = ChannelStats()
         self._seq_in = 0
         self._seq_out = 0
+        self._stream_seq: Dict[int, int] = {}   # stream id -> next send seq
+        self._stream_recv: Dict[int, int] = {}  # stream id -> next expected seq
+        self._next_stream = 0                   # ids never reused (nonce safety)
+        # closed streams, compact: ids below the watermark are closed;
+        # out-of-order closures wait in the set until it advances. The set
+        # stays small while streams close roughly in open order — one
+        # never-closed stream pins the watermark and the set tracks every
+        # later closure, so abandon streams with close_stream, not silence.
+        self._closed_lo = 0
+        self._closed_set: set = set()
 
     # host -> device
     def host_send(self, tokens: np.ndarray) -> SealedTensor:
@@ -65,6 +95,67 @@ class BounceBuffer:
 
     def host_recv(self, sealed: SealedTensor) -> np.ndarray:
         return np.asarray(unseal_tensor(self.key, sealed))
+
+    def open_stream(self) -> int:
+        """Allocate a channel-global stream id. The channel — not the caller —
+        owns the namespace: per-engine request ids restart at 0, and two
+        engines sharing one TrustDomain must never land on the same
+        ``egress/sN/M`` name (ChaCha20 nonce reuse)."""
+        sid = self._next_stream
+        self._next_stream += 1
+        return sid
+
+    def _stream_closed(self, stream_id: int) -> bool:
+        return stream_id < self._closed_lo or stream_id in self._closed_set
+
+    # device -> host, streaming: one frame per sampled token (per step)
+    def device_send_frame(self, stream_id: int, tokens: np.ndarray) -> TokenFrame:
+        if self._stream_closed(stream_id):
+            raise IntegrityError(
+                f"stream {stream_id} is closed; sending would restart its "
+                f"seq at 0 and reuse a nonce")
+        seq = self._stream_seq.get(stream_id, 0)
+        self._stream_seq[stream_id] = seq + 1
+        name = TokenFrame.frame_name(stream_id, seq)
+        sealed = seal_tensor(self.key, name, np.asarray(tokens, np.int32))
+        self.stats.messages_out += 1
+        self.stats.bytes_out += sealed.n_bytes
+        return TokenFrame(stream_id, seq, sealed)
+
+    def host_recv_frame(self, frame: TokenFrame) -> np.ndarray:
+        if self._stream_closed(frame.stream_id):
+            raise IntegrityError(
+                f"stream {frame.stream_id} is closed "
+                f"(replayed frame from a finished request)")
+        expect = TokenFrame.frame_name(frame.stream_id, frame.seq)
+        if frame.sealed.name != expect:
+            raise IntegrityError(
+                f"frame name mismatch: got '{frame.sealed.name}', "
+                f"expected '{expect}'")
+        # strict in-order receive per stream: a verbatim-replayed or
+        # reordered frame carries a stale seq and is rejected even though
+        # its MAC verifies.
+        want = self._stream_recv.get(frame.stream_id, 0)
+        if frame.seq != want:
+            raise IntegrityError(
+                f"stream {frame.stream_id}: got frame seq {frame.seq}, "
+                f"expected {want} (replayed or reordered frame)")
+        out = np.asarray(unseal_tensor(self.key, frame.sealed))
+        # advance only after the MAC verified: a forged frame must not burn
+        # the seq and lock out the authentic one behind it.
+        self._stream_recv[frame.stream_id] = want + 1
+        return out
+
+    def close_stream(self, stream_id: int) -> None:
+        """Retire a finished stream: its per-stream seq state is dropped
+        (bounded memory in a long-running server) while the closed-watermark
+        keeps its frames permanently unreplayable and its id unsendable."""
+        self._stream_seq.pop(stream_id, None)
+        self._stream_recv.pop(stream_id, None)
+        self._closed_set.add(stream_id)
+        while self._closed_lo in self._closed_set:
+            self._closed_set.discard(self._closed_lo)
+            self._closed_lo += 1
 
     def roundtrip(self, tokens: np.ndarray) -> Tuple[np.ndarray, SealedTensor]:
         """Convenience: host->device one message (tests/benchmarks)."""

@@ -113,6 +113,30 @@ class TrustDomain:
         self._log("egress", f"{sealed.n_bytes}B")
         return out
 
+    def egress_token(self, stream_id: int, token: int) -> int:
+        """Trust domain -> host, streaming: one encrypted frame per sampled
+        token (SecureChat-style per-token streaming). This is the
+        fixed-cost-per-crossing traffic pattern the cgpu profile's
+        ``fixed_boundary_s`` models — ``ChannelStats.messages_out`` now counts
+        generated tokens, not finished requests."""
+        if not self.confidential:
+            return int(token)
+        frame = self.channel.device_send_frame(
+            stream_id, np.asarray([token], np.int32))
+        out = self.channel.host_recv_frame(frame)
+        self._log("egress_frame",
+                  f"stream={stream_id} seq={frame.seq} {frame.sealed.n_bytes}B")
+        return int(out[0])
+
+    def open_stream(self) -> int:
+        """Allocate a never-reused egress stream id (see BounceBuffer)."""
+        return self.channel.open_stream()
+
+    def close_stream(self, stream_id: int) -> None:
+        """Release a finished request's per-stream channel state."""
+        if self.confidential:
+            self.channel.close_stream(stream_id)
+
     # -- overhead model -----------------------------------------------------
     def predict_overhead(self, terms: overheads.RooflineTerms,
                          **kw) -> Optional[overheads.OverheadBreakdown]:

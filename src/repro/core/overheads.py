@@ -128,7 +128,9 @@ def predict(terms: RooflineTerms, profile: str | TEEProfile,
     d_fixed = p.fixed_boundary_s * steps
     t_plain = terms.total_s * steps
     t_tee = t_plain + (d_comp + d_mem + d_coll) * steps + d_fixed
-    total_delta = max(t_tee - t_plain, 1e-30)
+    # per_term fractions are normalized by t_plain (not by the delta), so
+    # they intentionally sum to `overhead` — each entry reads directly as
+    # "percentage points of slowdown attributable to this term".
     per_term = {
         "compute": d_comp * steps / t_plain,
         "memory": d_mem * steps / t_plain,

@@ -1,0 +1,55 @@
+"""Version-bridging shims for the jax SPMD APIs this repo uses.
+
+The codebase is written against the current jax surface (``jax.shard_map``
+with ``check_vma``, ``jax.make_mesh(..., axis_types=...)``), but deployment
+containers pin older jax releases where ``shard_map`` still lives in
+``jax.experimental`` (kwarg ``check_rep``) and ``make_mesh`` has no
+``axis_types``. Importing from here gives every caller — library code and
+test subprocesses alike — one spelling that works on both.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.6 style
+    from jax import shard_map as _shard_map
+except ImportError:  # pre-0.6: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+# the replication-check kwarg was renamed check_rep -> check_vma
+# independently of the experimental->public move; inspect, don't assume.
+_SHMAP_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg renamed as needed."""
+    kw = {_SHMAP_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              axis_types: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` dropping ``axis_types`` where unsupported (pre-0.5
+    jax has no explicit/auto axis distinction — everything is Auto)."""
+    if _MAKE_MESH_HAS_AXIS_TYPES:
+        if axis_types is None and hasattr(jax.sharding, "AxisType"):
+            axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def axis_size(axis_name) -> jax.Array:
+    """``jax.lax.axis_size`` fallback: pre-0.6 jax spells it psum(1, axis)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

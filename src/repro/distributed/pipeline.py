@@ -18,13 +18,13 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.distributed.compat import axis_size, shard_map
 
 Params = Any
 
 
 def _ring(axis_name: str):
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     return [(i, (i + 1) % n) for i in range(n)]
 
 
@@ -35,7 +35,7 @@ def gpipe_local(stage_fn: Callable[[Params, jax.Array], jax.Array],
     rank; only rank 0 consumes them). Returns [M, mb, ...] outputs valid on
     the LAST stage (zeros elsewhere).
     """
-    s = jax.lax.axis_size(axis_name)
+    s = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     m = microbatches.shape[0]
     carry = jnp.zeros_like(microbatches[0])

@@ -80,6 +80,17 @@ class RAGPipeline:
         if self.engine is not None:
             context = " ".join(self.docs[d][:200] for d, _ in hits)
             prompt = self.tok.encode(f"context: {context} question: {query_clear}")
+            # explicit context budget: the engine refuses prompts that cannot
+            # fit its KV cache, so trim the context head (the question sits at
+            # the tail) rather than overflow.
+            limit = self.engine.prompt_budget(max_new_tokens)
+            if limit <= 0:
+                raise ValueError(
+                    f"engine (max_len={self.engine.max_len}, buckets="
+                    f"{self.engine.prefill_buckets}) cannot serve "
+                    f"{max_new_tokens} new tokens for any prompt")
+            if len(prompt) > limit:
+                prompt = prompt[-limit:]
             answer = self.engine.generate(prompt, max_new_tokens)
         t2 = time.monotonic()
         return RAGResult(query_clear, hits, answer, t1 - t0, t2 - t1)

@@ -1,20 +1,43 @@
-"""Inference engine: jitted prefill/decode with continuous batching, under an
-optional TrustDomain (the paper's end-to-end confidential inference pipeline).
+"""Inference engine v2: streaming, bucketed batched prefill, sealed preemption.
 
 Dataflow per paper Fig 2's protected stack:
-  prompt --(encrypted bounce buffer)--> prefill(slot) --> batched decode loop
-  --> sampled tokens --(encrypted bounce buffer)--> client.
+  prompt --(encrypted bounce buffer)--> bucketed batched prefill(slots)
+  --> batched decode loop --> each sampled token --(one encrypted frame per
+  token through the bounce buffer)--> client, immediately.
 
-All device compute is jitted once; decode donates the cache to keep a single
-in-place buffer. Finished slots are refilled without stopping decode
-(continuous batching).
+Three serving-path upgrades over v1:
+
+  * **Streaming egress** — every sampled token leaves the trust domain the
+    moment it exists, as a per-token encrypted frame with a per-request
+    stream id and a session-sequenced nonce (``BounceBuffer.device_send_frame``).
+    ``ChannelStats`` therefore measures the fixed-cost-dominated boundary
+    traffic the paper's cgpu profile models (Insight 10), and clients get
+    tokens at next-token latency instead of at request completion.
+
+  * **Bucketed batched prefill** — instead of one static ``prefill_len``
+    (which silently truncated longer prompts), prompts are rounded up to a
+    small set of power-of-two buckets; same-bucket waiting requests are
+    prefixed together in one jitted prefill call (recompilation bounded by
+    |buckets| x log2(max_slots) shapes). A prompt longer than its bucket is
+    *chunked*: the first ``bucket`` tokens go through prefill, the tail rides
+    the batched decode loop one token per step (decode-aligned prefill), so
+    nothing is ever dropped.
+
+  * **Priority admission + sealed-KV preemption** — the scheduler pops the
+    highest-priority waiting request; when no slot is free, a strictly
+    lower-priority running request is evicted through ``seal_slot`` (its KV
+    pages leave the domain only as ChaCha20+HMAC ciphertext, paper §V-D3)
+    and transparently restored via ``restore_slot`` when capacity returns.
+
+All device compute is jitted once per shape; decode donates the cache to
+keep a single in-place buffer. Finished slots are refilled without stopping
+decode (continuous batching).
 """
 
 from __future__ import annotations
 
-import time
-from functools import partial
-from typing import Any, Dict, List, Optional
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,27 +46,59 @@ import numpy as np
 from repro.core.confidential import TrustDomain
 from repro.models.model import Model
 from repro.runtime import sampling
-from repro.runtime.kvcache import SlotState, extract_slot as kv_extract, insert_slot
-from repro.runtime.scheduler import Request, Scheduler, ServeStats
+from repro.runtime.kvcache import (SlotState, extract_slot as kv_extract,
+                                   insert_rows, insert_slot)
+from repro.runtime.scheduler import Request, Scheduler, ServeStats, TokenCallback
 
 Params = Any
+
+
+@dataclasses.dataclass
+class PreemptedRequest:
+    """A sealed-out request waiting for a slot: KV pages as ciphertext only."""
+    sealed: Dict[str, Any]
+    req: Request
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class Engine:
     def __init__(self, model: Model, params: Params, *, max_slots: int = 4,
                  max_len: int = 512, trust_domain: Optional[TrustDomain] = None,
-                 prefill_len: int = 64):
+                 prefill_len: int = 64,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 batch_prefill: bool = True):
+        """``prefill_buckets`` supersedes the v1 single static ``prefill_len``
+        (kept as the default one-bucket config for compatibility). Buckets
+        should be powers of two; each distinct (rows, bucket) prefill shape
+        compiles once. ``batch_prefill=False`` restores v1's one-request-per-
+        prefill-call behavior (the serve_bench baseline)."""
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_len = prefill_len
+        if prefill_buckets is None:
+            prefill_buckets = (prefill_len,)
+        self.prefill_buckets = tuple(sorted({int(b) for b in prefill_buckets}))
+        if not self.prefill_buckets or min(self.prefill_buckets) < 1:
+            raise ValueError(f"bad prefill buckets {self.prefill_buckets}")
+        if max(self.prefill_buckets) >= max_len:
+            raise ValueError("largest prefill bucket must leave decode room "
+                             f"({self.prefill_buckets} vs max_len={max_len})")
+        self.batch_prefill = batch_prefill
         self.td = trust_domain or TrustDomain("none")
         self.scheduler = Scheduler()
         self.slots = SlotState.create(max_slots)
         self.cache = model.init_cache(max_slots, max_len)
         self._active_mask = np.zeros(max_slots, bool)
         self._last_token = np.zeros(max_slots, np.int32)
+        self._preempted: List[PreemptedRequest] = []
 
         cfg = model.cfg
 
@@ -60,40 +115,178 @@ class Engine:
 
     # -- request admission ----------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> Request:
-        prompt = self.td.ingress(np.asarray(prompt, np.int32))
-        return self.scheduler.submit(prompt, max_new_tokens, eos_id)
+               eos_id: Optional[int] = None, *, priority: int = 0,
+               on_token: Optional[TokenCallback] = None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        if max_new_tokens < 1:
+            # the prefill-produced first token always exists; a request that
+            # asked for zero would still emit (and egress) it.
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        # worst-case KV positions: the padded prefill bucket (or the full
+        # prompt when chunked past it) plus one per decode *input* — the
+        # final sampled token is emitted but never fed back, so it writes no
+        # KV. Past max_len, dynamic_update_slice would clamp onto the last
+        # cache row and silently corrupt the sequence — reject up front,
+        # BEFORE the prompt crosses the boundary (a rejected request must
+        # not skew ChannelStats).
+        need = (max(self._bucket_for(len(prompt)), len(prompt))
+                + max_new_tokens - 1)
+        if need > self.max_len:
+            raise ValueError(
+                f"request needs up to {need} KV positions "
+                f"(prompt {len(prompt)} + {max_new_tokens} new) "
+                f"but max_len={self.max_len}; shorten the prompt or "
+                f"raise max_len")
+        prompt = self.td.ingress(prompt)
+        req = self.scheduler.submit(prompt, max_new_tokens, eos_id,
+                                    priority=priority, on_token=on_token)
+        req.stream_id = self.td.open_stream()
+        return req
 
-    def _try_admit(self) -> bool:
-        req = self.scheduler.next_waiting()
-        if req is None:
+    def prompt_budget(self, max_new_tokens: int) -> int:
+        """Longest prompt submit() will accept for ``max_new_tokens``.
+        Accounts for bucket padding: a short prompt still occupies its whole
+        (left-padded) prefill bucket in the KV cache."""
+        cand = self.max_len - max_new_tokens + 1   # last token writes no KV
+        if cand >= self.prefill_buckets[-1]:
+            return cand
+        fits = [b for b in self.prefill_buckets if b <= cand]
+        return fits[-1] if fits else 0
+
+    def _bucket_for(self, prompt_len: int) -> int:
+        """Smallest bucket that fits the prompt, else the largest bucket
+        (the tail past it is chunked through decode steps)."""
+        for b in self.prefill_buckets:
+            if prompt_len <= b:
+                return b
+        return self.prefill_buckets[-1]
+
+    def _emit_token(self, slot: int, tok: int) -> bool:
+        """Record one sampled token: per-token encrypted egress frame, stream
+        callback, termination check. Returns True if the request finished."""
+        req = self.scheduler.running[slot]
+        tok = self.td.egress_token(req.stream_id, tok)
+        self.scheduler.record_token(slot, tok)
+        self._last_token[slot] = tok
+        if req.done:
+            # check immediately after recording: a max_new_tokens=1 request
+            # (or EOS as the very first token) releases its slot without
+            # paying for a wasted decode step (v1 off-by-one).
+            self.scheduler.finish(slot)
+            self.slots.release(slot)
+            self._active_mask[slot] = False
+            self.td.close_stream(req.stream_id)
+            return True
+        return False
+
+    def _admit_batch(self) -> int:
+        """Pop waiting requests sharing the head's prefill bucket (bounded by
+        free slots) and prefill them in one jitted call."""
+        head = self.scheduler.peek_waiting()
+        if head is None or not self.slots.free:
+            return 0
+        bucket = self._bucket_for(len(head.prompt))
+        group: List[Request] = [self.scheduler.next_waiting()]
+        if self.batch_prefill:
+            # group-mates must not jump the restore queue: a sealed-out
+            # request with priority >= theirs gets the free slot first
+            # (the head itself already outranked every sealed request, or
+            # _admit_ready would have taken the restore branch).
+            best_sealed = max((p.req.priority for p in self._preempted),
+                              default=None)
+            while len(group) < len(self.slots.free):
+                nxt = self.scheduler.peek_waiting()
+                if nxt is None or self._bucket_for(len(nxt.prompt)) != bucket:
+                    break
+                if best_sealed is not None and nxt.priority <= best_sealed:
+                    break
+                group.append(self.scheduler.next_waiting())
+
+        # rows padded to a power of two so compiled prefill shapes stay
+        # bounded: |buckets| x log2(max_slots) variants, not one per batch.
+        rows = _next_pow2(len(group))
+        tokens = np.zeros((rows, bucket), np.int32)
+        for i, req in enumerate(group):
+            chunk = req.prompt[:bucket]
+            tokens[i, bucket - len(chunk):] = chunk   # left-pad short prompts
+        fresh = self.model.init_cache(rows, self.max_len)
+        logits, prefilled = self._prefill_fn(self.params, jnp.asarray(tokens),
+                                             fresh)
+        first_np = np.argmax(np.asarray(logits), axis=-1)
+
+        slots = [self.slots.acquire(req.rid) for req in group]
+        assert None not in slots, "admission raced free-slot accounting"
+        # one donated scatter for the whole group (not k full-cache copies)
+        self.cache = insert_rows(self.cache, prefilled,
+                                 jnp.asarray(slots, jnp.int32))
+        for i, req in enumerate(group):
+            slot = slots[i]
+            self.scheduler.start(slot, req)
+            self._active_mask[slot] = True
+            if len(req.prompt) > bucket:
+                # chunked prefill: the tail is fed through the decode loop,
+                # one token per step, before any sampling counts as output.
+                req.pending_input = [int(t) for t in req.prompt[bucket:]]
+                self._last_token[slot] = 0   # unused until the tail drains
+            else:
+                self._emit_token(slot, int(first_np[i]))
+        return len(group)
+
+    def _preempt_lowest(self, incoming: Request) -> bool:
+        """Seal out the lowest-priority running slot if ``incoming`` strictly
+        outranks it. Returns True if a slot was freed."""
+        if not self.scheduler.running:
             return False
-        slot = self.slots.acquire(req.rid)
-        if slot is None:
-            self.scheduler.queue.appendleft(req)
+        victim_slot = min(self.scheduler.running,
+                          key=lambda s: (self.scheduler.running[s].priority,
+                                         -self.scheduler.running[s].rid))
+        victim = self.scheduler.running[victim_slot]
+        if victim.priority >= incoming.priority:
             return False
-        # pad/truncate prompt to the static prefill length
-        p = req.prompt[-self.prefill_len:]
-        pad = self.prefill_len - len(p)
-        tokens = np.pad(p, (pad, 0))[None]  # left-pad -> static shape
-        single = self.model.init_cache(1, self.max_len)
-        logits, single = self._prefill_fn(self.params, jnp.asarray(tokens), single)
-        first = int(np.argmax(np.asarray(logits[0])))
-        self.cache = insert_slot(self.cache, single, jnp.int32(slot))
-        self.scheduler.start(slot, req)
-        self.scheduler.record_token(slot, first)
-        self._active_mask[slot] = True
-        self._last_token[slot] = first
+        sealed, vreq = self.seal_slot(victim_slot)
+        vreq.n_preemptions += 1
+        self._preempted.append(PreemptedRequest(sealed, vreq))
         return True
+
+    def _admit_ready(self) -> None:
+        """Admission policy, run at the top of every step:
+        1. restore sealed-out requests while no waiting request outranks them,
+        2. batch-admit waiting requests into free slots (bucket-grouped),
+        3. preempt a strictly lower-priority running request when the waiting
+           head cannot get a slot otherwise (preempted requests never trigger
+           further preemption — bounded, no thrash)."""
+        while True:
+            if self._preempted and self.slots.free:
+                best = max(self._preempted,
+                           key=lambda p: (p.req.priority, -p.req.rid))
+                head = self.scheduler.peek_waiting()
+                if head is None or head.priority <= best.req.priority:
+                    self._preempted.remove(best)
+                    self.restore_slot(best.sealed, best.req)
+                    continue
+            if self.scheduler.queue and self.slots.free:
+                self._admit_batch()
+                continue
+            head = self.scheduler.peek_waiting()
+            if (head is not None and not self.slots.free
+                    and self._preempt_lowest(head)):
+                continue
+            return
 
     # -- serving loop ----------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit if possible, then one decode step.
-        Returns number of tokens produced."""
-        while self.slots.free and self.scheduler.queue:
-            self._try_admit()
+        """One engine iteration: admission/restoration/preemption, then one
+        batched decode step. Returns number of *output* tokens produced
+        (prompt-chunk feeding steps count zero)."""
+        self._admit_ready()
         if not self.slots.active:
             return 0
+        feeding_prompt = {}   # slot -> tail still pending after this step?
+        for slot in self.slots.active:
+            req = self.scheduler.running.get(slot)
+            if req is not None and req.pending_input:
+                self._last_token[slot] = req.pending_input.pop(0)
+                feeding_prompt[slot] = bool(req.pending_input)
         tokens = jnp.asarray(self._last_token[:, None])
         next_tokens, self.cache = self._decode_fn(self.params, tokens, self.cache)
         next_np = np.asarray(next_tokens)
@@ -101,21 +294,19 @@ class Engine:
         for slot in list(self.slots.active):
             if not self._active_mask[slot]:
                 continue
-            tok = int(next_np[slot])
-            self.scheduler.record_token(slot, tok)
-            self._last_token[slot] = tok
+            if feeding_prompt.get(slot, False):
+                continue   # mid-prompt chunk: this step's sample is discarded
+            self._emit_token(slot, int(next_np[slot]))
             produced += 1
-            req = self.scheduler.running[slot]
-            if req.done:
-                req.output = list(self.td.egress(np.asarray(req.output, np.int32)))
-                self.scheduler.finish(slot)
-                self.slots.release(slot)
-                self._active_mask[slot] = False
         return produced
+
+    @property
+    def idle(self) -> bool:
+        return self.scheduler.idle and not self._preempted
 
     def run(self, max_steps: int = 10_000) -> ServeStats:
         steps = 0
-        while not self.scheduler.idle and steps < max_steps:
+        while not self.idle and steps < max_steps:
             self.step()
             steps += 1
         return self.scheduler.stats()
@@ -126,19 +317,28 @@ class Engine:
     # unencrypted — the at-rest property H100 HBM lacks (paper §V-D3). The
     # slot cache is sealed with the domain key and can be restored later.
 
-    def seal_slot(self, slot: int):
-        """Evict a running slot: returns (sealed_cache_dict, request)."""
+    def seal_slot(self, slot: int) -> Tuple[Dict[str, Any], Request]:
+        """Evict a running slot: returns (sealed_cache_dict, request). Any
+        not-yet-prefilled prompt tail travels on ``request.pending_input``."""
         from repro.core.sealing import seal_tree
         single = kv_extract(self.cache, jnp.int32(slot))
         req = self.scheduler.running.pop(slot)
+        # the nonce-deriving name must be unique across every seal the domain
+        # ever performs: the channel-global stream id (never reused, unlike
+        # per-engine rids) plus a per-request seal epoch — a request
+        # preempted twice holds different KV contents each time, and a
+        # stream cipher must never encrypt two plaintexts under one nonce.
         sealed = seal_tree(self.td.sealing_key, single,
-                           prefix=f"kvslot/{req.rid}")
-        self.td._log("seal_kv", f"slot={slot} rid={req.rid}")
+                           prefix=f"kvslot/{req.stream_id}/{req.seal_epoch}")
+        req.seal_epoch += 1
+        self.td._log("seal_kv",
+                     f"slot={slot} rid={req.rid} stream={req.stream_id} "
+                     f"epoch={req.seal_epoch - 1}")
         self.slots.release(slot)
         self._active_mask[slot] = False
         return sealed, req
 
-    def restore_slot(self, sealed, req) -> int:
+    def restore_slot(self, sealed, req: Request) -> int:
         """Re-admit a sealed-out request into a free slot."""
         from repro.core.sealing import unseal_tree
         slot = self.slots.acquire(req.rid)
@@ -146,16 +346,45 @@ class Engine:
             raise RuntimeError("no free slot to restore into")
         single_like = self.model.abstract_cache(1, self.max_len)
         single = unseal_tree(self.td.sealing_key, sealed, single_like,
-                             prefix=f"kvslot/{req.rid}")
+                             prefix=f"kvslot/{req.stream_id}/{req.seal_epoch - 1}")
         self.cache = insert_slot(self.cache, single, jnp.int32(slot))
         self.scheduler.running[slot] = req
         self._active_mask[slot] = True
+        # next decode input: the prompt tail (if chunked prefill was cut
+        # short) takes precedence in step(); otherwise the last output token.
         self._last_token[slot] = req.output[-1] if req.output else 0
         self.td._log("restore_kv", f"slot={slot} rid={req.rid}")
         return slot
 
     # -- convenience -----------------------------------------------------------
-    def generate(self, prompt: np.ndarray, max_new_tokens: int = 32) -> List[int]:
-        req = self.submit(prompt, max_new_tokens)
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 32,
+                 eos_id: Optional[int] = None) -> List[int]:
+        req = self.submit(prompt, max_new_tokens, eos_id)
         self.run()
         return req.output
+
+    def stream(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None, *, priority: int = 0,
+               max_steps: int = 100_000) -> Iterator[int]:
+        """Yields this request's tokens as they cross the trust boundary —
+        each already egressed as its own encrypted frame. Other queued
+        requests keep advancing in the same decode batch. The request is
+        submitted eagerly (before the first token is pulled), so it joins
+        the batch even if the caller iterates later."""
+        buf: List[int] = []
+        req = self.submit(prompt, max_new_tokens, eos_id, priority=priority,
+                          on_token=lambda _r, t: buf.append(t))
+
+        def _drain() -> Iterator[int]:
+            steps = 0
+            while not req.finished:
+                if steps >= max_steps:
+                    raise RuntimeError(f"stream exceeded {max_steps} steps")
+                self.step()
+                steps += 1
+                while buf:
+                    yield buf.pop(0)
+            while buf:
+                yield buf.pop(0)
+
+        return _drain()

@@ -17,6 +17,7 @@ with batch at axis 1 ([L, b, ...]).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, List, Optional
 
 import jax
@@ -65,6 +66,21 @@ def insert_slot(batched: Cache, single: Cache, slot: jax.Array) -> Cache:
         start = (jnp.int32(0), slot.astype(jnp.int32)) + (jnp.int32(0),) * (big.ndim - 2)
         return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), start)
     return jax.tree_util.tree_map_with_path(upd, batched, single)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def insert_rows(batched: Cache, src: Cache, slots: jax.Array) -> Cache:
+    """Scatter the first k rows of a b>=k cache into batch slots ``slots``
+    (int32 [k], distinct) in ONE donated call — a batched prefill group
+    splices in with a single cache materialization instead of k full-cache
+    copies through repeated ``insert_slot``."""
+    k = slots.shape[0]
+    def upd(path, big, small):
+        if _is_pos(path):
+            return big.at[slots].set(small[:k])
+        # [L, k, ...] rows into [L, B, ...] at axis 1
+        return big.at[:, slots].set(small[:, :k].astype(big.dtype))
+    return jax.tree_util.tree_map_with_path(upd, batched, src)
 
 
 @jax.jit

@@ -1,20 +1,32 @@
-"""Continuous-batching scheduler: request queue, admission, completion.
+"""Continuous-batching scheduler: priority queue, admission, completion.
 
 The serving pattern the paper measures (vLLM on cGPU, IPEX batched decode on
 CPU TEEs): requests arrive asynchronously, prefill claims a free slot,
 decode advances all active slots each step, finished sequences free their
-slot immediately for the next queued request. Tracks the two user-perceived
-metrics from §III-C: throughput (tokens/s) and next-token latency.
+slot immediately for the next queued request. Tracks the user-perceived
+metrics from §III-C: throughput (tokens/s), next-token latency, and
+time-to-first-token.
+
+v2 additions:
+  * requests carry a ``priority`` — admission pops the highest-priority
+    waiting request (FIFO within a priority level), and the engine may
+    preempt a lower-priority running slot via sealed-KV eviction (§V-D3);
+  * ``on_token`` streaming callback — fired the moment a token is recorded,
+    i.e. right after it crossed the trust boundary as an encrypted frame;
+  * ``pending_input`` holds the not-yet-prefilled tail of a long prompt so
+    chunked prefill state travels with the request through seal/restore.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
+
+TokenCallback = Callable[["Request", int], None]
 
 
 @dataclasses.dataclass
@@ -23,18 +35,28 @@ class Request:
     prompt: np.ndarray                 # int32 [prompt_len]
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    priority: int = 0                  # higher = more important
+    on_token: Optional[TokenCallback] = None
     # filled during serving
     output: List[int] = dataclasses.field(default_factory=list)
+    pending_input: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)
+    n_preemptions: int = 0
+    seal_epoch: int = 0    # bumps on every sealed-KV eviction (nonce freshness)
+    stream_id: int = -1    # channel-global egress stream (set by the engine)
 
     @property
     def done(self) -> bool:
         if self.eos_id is not None and self.output and self.output[-1] == self.eos_id:
             return True
         return len(self.output) >= self.max_new_tokens
+
+    @property
+    def finished(self) -> bool:
+        return self.t_done > 0.0
 
 
 @dataclasses.dataclass
@@ -43,6 +65,7 @@ class ServeStats:
     total_requests: int = 0
     wall_s: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def throughput_tps(self) -> float:
@@ -56,24 +79,39 @@ class ServeStats:
     def p99_latency_s(self) -> float:
         return float(np.percentile(self.latencies_s, 99)) if self.latencies_s else 0.0
 
+    @property
+    def mean_ttft_s(self) -> float:
+        return float(np.mean(self.ttft_s)) if self.ttft_s else 0.0
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return float(np.percentile(self.ttft_s, 99)) if self.ttft_s else 0.0
+
 
 class Scheduler:
     def __init__(self):
-        self.queue: Deque[Request] = deque()
+        # waiting heap entries: (-priority, rid, Request) — rid ties keep
+        # submission order within a priority level, and survive requeueing.
+        self.queue: List[tuple] = []
         self.running: Dict[int, Request] = {}   # slot -> request
         self.finished: List[Request] = []
         self._next_rid = 0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None, *, priority: int = 0,
+               on_token: Optional[TokenCallback] = None) -> Request:
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id, t_submit=time.monotonic())
+                      max_new_tokens, eos_id, priority=priority,
+                      on_token=on_token, t_submit=time.monotonic())
         self._next_rid += 1
-        self.queue.append(req)
+        heapq.heappush(self.queue, (-req.priority, req.rid, req))
         return req
 
+    def peek_waiting(self) -> Optional[Request]:
+        return self.queue[0][2] if self.queue else None
+
     def next_waiting(self) -> Optional[Request]:
-        return self.queue.popleft() if self.queue else None
+        return heapq.heappop(self.queue)[2] if self.queue else None
 
     def start(self, slot: int, req: Request) -> None:
         self.running[slot] = req
@@ -85,6 +123,8 @@ class Scheduler:
             req.t_first_token = now
         req.output.append(int(token))
         req.token_times.append(now)
+        if req.on_token is not None:
+            req.on_token(req, int(token))
 
     def finish(self, slot: int) -> Request:
         req = self.running.pop(slot)
@@ -97,15 +137,26 @@ class Scheduler:
         return not self.queue and not self.running
 
     def stats(self) -> ServeStats:
-        s = ServeStats()
-        if not self.finished:
-            return s
-        t0 = min(r.t_submit for r in self.finished)
-        t1 = max(r.t_done for r in self.finished)
-        s.wall_s = t1 - t0
-        s.total_requests = len(self.finished)
-        for r in self.finished:
-            s.total_tokens += len(r.output)
-            times = [r.t_first_token] + r.token_times
-            s.latencies_s.extend(float(b - a) for a, b in zip(times[:-1], times[1:]))
+        return stats_from_requests(self.finished)
+
+
+def stats_from_requests(reqs: List[Request]) -> ServeStats:
+    """ServeStats over any set of finished requests (benchmarks measure a
+    warm wave this way, excluding an earlier compile-warmup wave)."""
+    s = ServeStats()
+    done = [r for r in reqs if r.finished]
+    if not done:
         return s
+    t0 = min(r.t_submit for r in done)
+    t1 = max(r.t_done for r in done)
+    s.wall_s = t1 - t0
+    s.total_requests = len(done)
+    for r in done:
+        s.total_tokens += len(r.output)
+        s.ttft_s.append(r.t_first_token - r.t_submit)
+        # inter-token gaps only: token_times[0] IS the first-token time, so
+        # prepending t_first_token would inject a spurious 0.0 latency that
+        # deflates the mean/p99 this repo exists to measure.
+        s.latencies_s.extend(float(b - a) for a, b in
+                             zip(r.token_times[:-1], r.token_times[1:]))
+    return s

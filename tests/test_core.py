@@ -5,7 +5,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import (
     AttestationError, BounceBuffer, IntegrityError, PROFILES, RooflineTerms,

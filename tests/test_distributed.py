@@ -6,7 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
+
+# the subprocess-based classes below each jit-compile in an 8-device
+# subprocess and carry pytest.mark.slow; TestCompression runs in-process
+# and stays in the fast tier.
+_slow = pytest.mark.slow
 
 from repro.distributed.compression import (compress_decompress,
                                            compressed_bytes,
@@ -45,6 +50,7 @@ class TestCompression:
 
 
 class TestShardingRules:
+    pytestmark = _slow
     def test_specs_cover_all_archs(self, subproc):
         out = subproc("""
 import jax
@@ -52,7 +58,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import smoke_config
 from repro.models import build_model
 from repro.distributed import sharding
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 for name in ["deepseek-7b", "qwen3-32b", "rwkv6-3b", "dbrx-132b",
              "deepseek-v3-671b", "jamba-v0.1-52b", "chameleon-34b",
              "whisper-small", "mistral-nemo-12b", "deepseek-67b"]:
@@ -74,7 +81,8 @@ from repro.models import build_model
 from repro.distributed import sharding
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_loop import init_train_state, make_train_step, abstract_train_state
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = smoke_config("qwen3-32b")
 m = build_model(cfg)
 opt = AdamWConfig(lr=1e-3)
@@ -99,13 +107,14 @@ print("OK")
 
 
 class TestOverlap:
+    pytestmark = _slow
     def test_ring_collective_matmuls(self, subproc):
         out = subproc("""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.distributed.compat import make_mesh, shard_map
 from repro.distributed.overlap import all_gather_matmul, matmul_reduce_scatter
-mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
 x = jax.random.normal(jax.random.key(1), (64, 32))
 w = jax.random.normal(jax.random.key(2), (32, 48))
 y = shard_map(lambda a, b: all_gather_matmul(a, b, "model"), mesh=mesh,
@@ -124,13 +133,15 @@ print("OK")
 
 
 class TestPipeline:
+    pytestmark = _slow
     def test_gpipe_matches_sequential_and_trains(self, subproc):
         out = subproc("""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed.pipeline import make_gpipe
 S, d = 4, 16
-mesh = jax.make_mesh((4, 2), ("pipe", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh
+mesh = make_mesh((4, 2), ("pipe", "data"))
 ws = jax.random.normal(jax.random.key(5), (S, d, d)) * 0.3
 stage = lambda w, x: jnp.tanh(x @ w)
 pipe = make_gpipe(mesh, "pipe", stage, P("pipe", None, None),
@@ -151,6 +162,7 @@ print("OK")
 
 
 class TestElastic:
+    pytestmark = _slow
     def test_save_mesh_a_restore_mesh_b(self, subproc, tmp_path):
         out = subproc(f"""
 import jax, jax.numpy as jnp
@@ -162,12 +174,13 @@ from repro.train.checkpoint import save_checkpoint, restore_checkpoint
 cfg = smoke_config("deepseek-7b")
 m = build_model(cfg)
 params = m.init_params(jax.random.key(0))
-mesh_a = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh
+mesh_a = make_mesh((2, 4), ("data", "model"))
 specs_a = sharding.to_named(mesh_a, sharding.param_specs(cfg, m.abstract_params(), mesh_a))
 pa = jax.tree.map(jax.device_put, params, specs_a)
 save_checkpoint(r"{tmp_path}", 1, pa)
 # "rescale": restore onto a differently-shaped mesh
-mesh_b = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = make_mesh((4, 2), ("data", "model"))
 specs_b = sharding.to_named(mesh_b, sharding.param_specs(cfg, m.abstract_params(), mesh_b))
 pb = restore_checkpoint(r"{tmp_path}", 1, jax.eval_shape(lambda: params), shardings=specs_b)
 for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(pb)):

@@ -15,6 +15,9 @@ from repro.configs import SHAPES, get_config, list_configs, smoke_config
 from repro.configs.base import shape_applicable
 from repro.models import build_model
 
+# jit-compiles every assigned architecture: the bulk of suite wall-time
+pytestmark = pytest.mark.slow
+
 ASSIGNED = [
     "whisper-small", "deepseek-7b", "qwen3-32b", "deepseek-67b",
     "mistral-nemo-12b", "dbrx-132b", "deepseek-v3-671b", "jamba-v0.1-52b",

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.configs import smoke_config
 from repro.core import TrustDomain
@@ -59,7 +59,8 @@ class TestEngine:
         conf = conf_eng.generate(p, 5)
         assert plain == conf
         assert conf_eng.td.channel.stats.messages_in == 1
-        assert conf_eng.td.channel.stats.messages_out == 1
+        # streaming egress: every sampled token leaves as its own frame
+        assert conf_eng.td.channel.stats.messages_out == 5
 
     def test_throughput_latency_stats(self, small_model):
         cfg, model, params = small_model

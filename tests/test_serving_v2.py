@@ -1,0 +1,335 @@
+"""Engine v2 serving path: streaming frames, bucketed/chunked prefill,
+priority preemption, and the termination edges the v1 engine got wrong."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.core.bounce import BounceBuffer
+from repro.core.sealing import IntegrityError, SealingKey, _nonce_for
+from repro.models import build_model
+from repro.runtime.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_len", 8)
+    return Engine(model, params, **kw)
+
+
+class TestTermination:
+    def test_max_new_tokens_one_yields_one_token(self, small_model):
+        """v1 recorded the prefill token AND one decode token for
+        max_new_tokens=1. v2 must stop at exactly one, releasing the slot
+        at admission without a wasted decode step."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        req = eng.submit(PROMPT, max_new_tokens=1)
+        produced = eng.step()
+        # the request finished inside admission: no decode tokens produced
+        assert produced == 0
+        assert req.finished
+        assert len(req.output) == 1
+        assert eng.slots.num_active == 0
+        assert eng.idle
+
+    def test_eos_as_first_token_stops_immediately(self, small_model):
+        cfg, model, params = small_model
+        ref = make_engine(model, params).generate(PROMPT, 1)
+        eng = make_engine(model, params)
+        out = eng.generate(PROMPT, max_new_tokens=5, eos_id=ref[0])
+        assert out == ref
+        assert len(out) == 1
+        assert eng.slots.num_active == 0
+
+    def test_eos_mid_stream_stops(self, small_model):
+        cfg, model, params = small_model
+        ref = make_engine(model, params).generate(PROMPT, 6)
+        eng = make_engine(model, params)
+        out = eng.generate(PROMPT, max_new_tokens=6, eos_id=ref[3])
+        assert out == ref[:4]
+
+
+class TestStreaming:
+    def test_one_encrypted_frame_per_token(self, small_model):
+        cfg, model, params = small_model
+        plain = make_engine(model, params).generate(PROMPT, 7)
+        eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
+        toks = list(eng.stream(PROMPT, max_new_tokens=7))
+        assert toks == plain
+        assert eng.td.channel.stats.messages_out == len(toks) == 7
+        frames = [e for e in eng.td.audit if e.kind == "egress_frame"]
+        assert len(frames) == 7
+
+    def test_stream_frames_are_session_sequenced(self, small_model):
+        """Two streamed requests on one domain: per-request stream ids,
+        monotonically sequenced frames on each."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
+        r0 = eng.submit(PROMPT, max_new_tokens=4)
+        r1 = eng.submit(PROMPT[::-1].copy(), max_new_tokens=4)
+        eng.run()
+        details = [e.detail for e in eng.td.audit if e.kind == "egress_frame"]
+        assert r0.stream_id != r1.stream_id
+        for sid in (r0.stream_id, r1.stream_id):
+            seqs = [int(d.split("seq=")[1].split()[0]) for d in details
+                    if f"stream={sid} " in d]
+            assert seqs == list(range(4))
+
+    def test_engines_sharing_a_domain_never_collide_streams(self, small_model):
+        """Stream ids are channel-allocated: two engines on one TrustDomain
+        (each with rids starting at 0) must produce distinct frame names —
+        a reused (stream, seq) name would reuse a ChaCha20 nonce."""
+        cfg, model, params = small_model
+        td = TrustDomain("tdx")
+        eng_a = make_engine(model, params, trust_domain=td)
+        eng_b = make_engine(model, params, trust_domain=td)
+        ra = eng_a.submit(PROMPT, max_new_tokens=3)
+        eng_a.run()
+        rb = eng_b.submit(PROMPT, max_new_tokens=3)
+        eng_b.run()
+        assert ra.rid == rb.rid == 0        # per-engine rids do collide
+        assert ra.stream_id != rb.stream_id  # channel stream ids must not
+        details = [e.detail for e in td.audit if e.kind == "egress_frame"]
+        names = [(d.split("stream=")[1].split()[0], d.split("seq=")[1].split()[0])
+                 for d in details]
+        assert len(set(names)) == len(names) == 6
+        assert ra.output == rb.output
+
+    def test_engines_sharing_a_domain_never_collide_seals(self, small_model):
+        """Sealed-KV names use the channel-global stream id, so two engines'
+        rid-0 requests seal under disjoint nonce namespaces."""
+        cfg, model, params = small_model
+        td = TrustDomain("tdx")
+        sealed_names = set()
+        for eng in (make_engine(model, params, trust_domain=td),
+                    make_engine(model, params, trust_domain=td)):
+            req = eng.submit(PROMPT, max_new_tokens=6)
+            eng.step()
+            sealed, _ = eng.seal_slot(0)
+            assert req.rid == 0
+            new = set(sealed)
+            assert not (sealed_names & new)
+            sealed_names |= new
+
+    def test_stream_submits_eagerly(self, small_model):
+        """stream() must enqueue the request at call time, not at first
+        next(): a caller that run()s before iterating still gets it served."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        gen = eng.stream(PROMPT, max_new_tokens=3)
+        stats = eng.run()
+        assert stats.total_requests == 1    # served by run(), not the iterator
+        assert list(gen) == eng.scheduler.finished[0].output
+
+    def test_frame_nonce_uniqueness_and_replay_detection(self):
+        key = SealingKey.generate(b"frames")
+        bb = BounceBuffer(key)
+        frames = [bb.device_send_frame(3, np.asarray([i], np.int32))
+                  for i in range(40)]
+        frames += [bb.device_send_frame(4, np.asarray([i], np.int32))
+                   for i in range(40)]
+        nonces = {_nonce_for(key, f.sealed.name) for f in frames}
+        assert len(nonces) == len(frames) == 80
+        assert bb.stats.messages_out == 80
+        for i, f in enumerate(frames):
+            assert int(bb.host_recv_frame(f)[0]) == i % 40
+        # a frame presented under another frame's (stream, seq) is rejected
+        forged = frames[1]
+        forged.seq = 2
+        with pytest.raises(IntegrityError):
+            bb.host_recv_frame(forged)
+        # a tampered frame must not burn the expected seq: send + forge a
+        # copy, reject it, then the authentic frame still decrypts
+        import dataclasses as _dc
+        nxt = bb.device_send_frame(5, np.asarray([9], np.int32))
+        bad = _dc.replace(nxt, sealed=_dc.replace(nxt.sealed, mac=b"\0" * 32))
+        with pytest.raises(IntegrityError):
+            bb.host_recv_frame(bad)
+        assert int(bb.host_recv_frame(nxt)[0]) == 9
+        # a verbatim replay (valid MAC, stale seq) is rejected too
+        with pytest.raises(IntegrityError):
+            bb.host_recv_frame(frames[5])
+        # a closed stream stays unreplayable and unsendable forever
+        bb.close_stream(3)
+        with pytest.raises(IntegrityError):
+            bb.host_recv_frame(frames[0])
+        with pytest.raises(IntegrityError):
+            bb.device_send_frame(3, np.asarray([1], np.int32))
+
+
+class TestBucketedPrefill:
+    def test_long_prompt_is_not_truncated(self, small_model):
+        """v1 silently kept only the last prefill_len tokens. v2 chunks the
+        tail through decode-aligned steps: the same 20-token prompt must give
+        the same output no matter how the prefill/decode boundary falls."""
+        cfg, model, params = small_model
+        prompt = np.arange(1, 21, dtype=np.int32)   # len 20 > any bucket
+        outs = []
+        for buckets in [(4,), (16,)]:
+            eng = make_engine(model, params, prefill_buckets=buckets)
+            req = eng.submit(prompt, max_new_tokens=5)
+            eng.run()
+            assert req.pending_input == []      # whole tail was consumed
+            assert len(req.output) == 5
+            outs.append(req.output)
+        assert outs[0] == outs[1]
+
+    def test_truncation_sensitivity(self, small_model):
+        """Flipping the FIRST prompt token changes the output — impossible
+        under v1's keep-the-last-prefill_len truncation."""
+        cfg, model, params = small_model
+        base = np.arange(1, 21, dtype=np.int32)
+        edited = base.copy()
+        edited[0] = 37
+        eng = make_engine(model, params, prefill_buckets=(8,), max_slots=2)
+        r0 = eng.submit(base, max_new_tokens=6)
+        r1 = eng.submit(edited, max_new_tokens=6)
+        eng.run()
+        assert r0.output != r1.output
+
+    def test_bucket_grouping_matches_sequential(self, small_model):
+        """Mixed prompt lengths land in different buckets; batched admission
+        must not change any request's tokens."""
+        cfg, model, params = small_model
+        prompts = [np.arange(1, 4, dtype=np.int32),        # bucket 4
+                   np.full(3, 9, np.int32),                # bucket 4
+                   np.arange(2, 14, dtype=np.int32),       # bucket 16
+                   np.arange(5, 25, dtype=np.int32)]       # bucket 16 + tail
+        buckets = (4, 16)
+        eng = make_engine(model, params, max_slots=4, prefill_buckets=buckets)
+        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        for p, r in zip(prompts, reqs):
+            solo = make_engine(model, params, max_slots=1,
+                               prefill_buckets=buckets, batch_prefill=False)
+            assert r.output == solo.generate(p, 4)
+
+
+class TestPriorityPreemption:
+    def test_high_priority_preempts_and_victim_resumes_identically(self, small_model):
+        cfg, model, params = small_model
+        ref = make_engine(model, params, max_slots=1).generate(PROMPT, 10)
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        low = eng.submit(PROMPT, max_new_tokens=10, priority=0)
+        for _ in range(3):
+            eng.step()
+        # step 1 = admission (prefill token) + decode token, then 1/step
+        assert len(low.output) == 4
+        high = eng.submit(np.full(8, 7, np.int32), max_new_tokens=4, priority=5)
+        eng.run()
+        assert high.finished and low.finished
+        assert high.t_done <= low.t_done
+        assert low.n_preemptions == 1
+        # sealed-KV round trip must be invisible to the victim's tokens
+        assert low.output == ref
+        assert [e.kind for e in eng.td.audit].count("seal_kv") == 1
+
+    def test_preemption_mid_prompt_chunking(self, small_model):
+        """Evict a request whose prompt tail is still being fed; the pending
+        tail must travel with the sealed request and resume exactly."""
+        cfg, model, params = small_model
+        prompt = np.arange(1, 21, dtype=np.int32)
+        ref_eng = make_engine(model, params, max_slots=1, prefill_buckets=(8,))
+        ref = ref_eng.generate(prompt, 5)
+        eng = make_engine(model, params, max_slots=1, prefill_buckets=(8,))
+        low = eng.submit(prompt, max_new_tokens=5, priority=0)
+        eng.step()                      # prefill 8, feed 1 tail token
+        assert low.pending_input        # still consuming the prompt
+        high = eng.submit(PROMPT, max_new_tokens=2, priority=9)
+        eng.run()
+        assert low.output == ref
+        assert high.finished
+
+    def test_double_preemption_uses_fresh_seal_nonces(self, small_model):
+        """A request sealed twice holds different KV each time; the sealed
+        tensor names (which derive the ChaCha20 nonces) must differ."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params, max_slots=1).generate(PROMPT, 8)
+        eng = make_engine(model, params, max_slots=1)
+        low = eng.submit(PROMPT, max_new_tokens=8, priority=0)
+        eng.step()
+        eng.submit(np.full(8, 2, np.int32), max_new_tokens=1, priority=5)
+        eng.step()                      # preempt #1 (+ restore on finish)
+        eng.submit(np.full(8, 4, np.int32), max_new_tokens=1, priority=5)
+        eng.run()
+        assert low.n_preemptions == 2
+        assert low.seal_epoch == 2      # two distinct nonce namespaces
+        assert low.output == ref
+
+    def test_overflowing_request_is_rejected(self, small_model):
+        """KV positions past max_len would silently clamp onto the last
+        cache row; submit must refuse instead."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_len=32, prefill_buckets=(8,),
+                          trust_domain=TrustDomain("tdx"))
+        with pytest.raises(ValueError, match="KV positions"):
+            eng.submit(np.arange(1, 41, dtype=np.int32), max_new_tokens=4)
+        with pytest.raises(ValueError, match="KV positions"):
+            eng.submit(PROMPT, max_new_tokens=30)
+        # rejected requests never crossed the boundary: stats stay exact
+        assert eng.td.channel.stats.messages_in == 0
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(PROMPT, max_new_tokens=0)
+        assert eng.generate(PROMPT, 4)  # in-budget requests still serve
+
+    def test_prompt_budget_is_submit_boundary(self, small_model):
+        """prompt_budget accounts for bucket padding: a budget-length prompt
+        is accepted, one token more is refused."""
+        cfg, model, params = small_model
+        for buckets, mnt in [((8, 16), 4), ((8, 16), 20), ((16,), 12)]:
+            eng = make_engine(model, params, max_len=32,
+                              prefill_buckets=buckets)
+            budget = eng.prompt_budget(mnt)
+            assert budget > 0
+            eng.submit(np.ones(budget, np.int32), mnt)        # accepted
+            with pytest.raises(ValueError, match="KV positions"):
+                eng.submit(np.ones(budget + 1, np.int32), mnt)
+        # no bucket fits: budget is 0 (engine cannot serve that request)
+        eng = make_engine(model, params, max_len=32, prefill_buckets=(16,))
+        assert eng.prompt_budget(30) == 0
+
+    def test_finished_streams_release_channel_state(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
+        for i in range(3):
+            eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=3)
+        eng.run()
+        # per-stream seq state is dropped as each request finishes
+        assert eng.td.channel._stream_seq == {}
+        assert eng.td.channel._stream_recv == {}
+
+    def test_equal_priority_never_preempts(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=1)
+        a = eng.submit(PROMPT, max_new_tokens=4, priority=1)
+        eng.step()
+        b = eng.submit(np.full(8, 3, np.int32), max_new_tokens=4, priority=1)
+        eng.run()
+        assert a.n_preemptions == 0
+        assert a.t_done <= b.t_done     # FIFO within a priority level
+
+    def test_stats_include_ttft(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        for i in range(3):
+            eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=3)
+        stats = eng.run()
+        assert len(stats.ttft_s) == 3
+        assert stats.mean_ttft_s > 0
+        assert stats.p99_ttft_s >= stats.mean_ttft_s
