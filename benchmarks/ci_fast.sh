@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Fast CI gate (minutes): the "not slow" test tier plus a one-request smoke
+# of the serving launcher, so the CLI path can't silently rot again — the
+# launcher exercises the full seal -> attest -> key-release -> encrypted
+# serving pipeline with the v3 flags (buckets, coalescing, seeded sampling).
+#
+#   bash benchmarks/ci_fast.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q -m "not slow"
+
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
+    --requests 1 --max-new-tokens 4 --prefill-buckets 8,16 \
+    --coalesce 2 --sample-temp 0.7 --top-k 8 --seed 0
+
+echo "ci_fast OK"

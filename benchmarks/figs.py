@@ -25,7 +25,7 @@ from repro.data.pipeline import synthetic_text
 from repro.models import layers
 from repro.quant import quantize_int8, qmatmul_ref
 from repro.rag.pipeline import RAGPipeline
-from repro.runtime.engine import Engine
+from repro.runtime import Engine, GenerationRequest
 
 
 # ---------------------------------------------------------------------------
@@ -94,7 +94,8 @@ def fig04_tee_overheads() -> List[Row]:
                      trust_domain=td)
         t0 = time.monotonic()
         for i in range(4):
-            eng.submit(np.full(16, i + 2, np.int32), max_new_tokens=8)
+            eng.submit(GenerationRequest(prompt=np.full(16, i + 2, np.int32),
+                                         max_new_tokens=8))
         stats = eng.run()
         wall = time.monotonic() - t0
         return stats, wall

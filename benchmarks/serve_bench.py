@@ -1,4 +1,5 @@
-"""Serving benchmark: v1-style static prefill vs v2 bucketed batched prefill.
+"""Serving benchmark: v1-style static prefill vs v2 bucketed batched prefill,
+plus the v3 frame-coalescing sweep (Insight-10 fixed-cost amortization).
 
 Measures the paper's two user-perceived serving metrics (§III-C) —
 throughput (tokens/s) and next-token latency — plus time-to-first-token and
@@ -12,6 +13,13 @@ workload:
   v2       : power-of-two prefill buckets, same-bucket requests batched
              into one jitted prefill call
 
+The coalescing sweep then serves the same workload with FramePolicy
+coalesce ∈ {1, 4, 16}: decoded output must be unchanged while boundary
+crossings per token fall as 1/N — the amortization curve behind the paper's
+observation that cGPU overhead is fixed-cost-per-crossing dominated. The
+modeled column prices each point with the cgpu profile's
+``fixed_boundary_s``.
+
     PYTHONPATH=src:. python benchmarks/serve_bench.py [--requests 12] [--tee tdx]
 """
 
@@ -24,8 +32,9 @@ import numpy as np
 
 from benchmarks.common import build_bench_model
 from repro.core import TrustDomain
-from repro.runtime.engine import Engine
-from repro.runtime.scheduler import stats_from_requests
+from repro.core.overheads import PROFILES
+from repro.runtime import (Engine, FramePolicy, GenerationRequest,
+                           stats_from_requests)
 
 
 def make_workload(n: int, vocab: int, seed: int = 7):
@@ -36,21 +45,28 @@ def make_workload(n: int, vocab: int, seed: int = 7):
             for l in lengths]
 
 
+def reqs_for(prompts, max_new_tokens: int, coalesce: int = 1):
+    return [GenerationRequest(prompt=p, max_new_tokens=max_new_tokens,
+                              frame=FramePolicy(coalesce=coalesce))
+            for p in prompts]
+
+
 def run_config(label: str, model, params, prompts, *, max_new_tokens: int,
-               tee: str, buckets, batch_prefill: bool, max_slots: int):
+               tee: str, buckets, batch_prefill: bool, max_slots: int,
+               coalesce: int = 1):
     td = TrustDomain(tee)
     eng = Engine(model, params, max_slots=max_slots, max_len=256,
                  trust_domain=td, prefill_buckets=buckets,
                  batch_prefill=batch_prefill)
     # warmup wave: pays every (rows, bucket) prefill compilation once, so the
     # measured wave reports steady-state serving numbers.
-    for p in prompts:
-        eng.submit(p, max_new_tokens)
+    for r in reqs_for(prompts, max_new_tokens, coalesce):
+        eng.submit(r)
     eng.run(max_steps=100_000)
     td.channel.stats.reset()
 
     t0 = time.monotonic()
-    reqs = [eng.submit(p, max_new_tokens) for p in prompts]
+    reqs = [eng.submit(r) for r in reqs_for(prompts, max_new_tokens, coalesce)]
     eng.run(max_steps=100_000)
     wall = time.monotonic() - t0
     assert all(r.finished for r in reqs)
@@ -61,7 +77,43 @@ def run_config(label: str, model, params, prompts, *, max_new_tokens: int,
           f"TTFT mean {stats.mean_ttft_s * 1e3:7.1f}ms p99 {stats.p99_ttft_s * 1e3:7.1f}ms  "
           f"step mean {stats.mean_latency_s * 1e3:6.1f}ms  "
           f"egress frames {frames}")
-    return stats
+    return stats, reqs, td.channel.stats
+
+
+def coalesce_sweep(model, params, prompts, *, max_new_tokens: int, tee: str,
+                   max_slots: int, windows=(1, 4, 16)):
+    """Serve the identical workload at each coalesce window; verify output
+    invariance and monotonically decreasing crossings/token, and price each
+    point with the cgpu fixed per-crossing cost (Insight 10)."""
+    print(f"\nframe-coalescing sweep (coalesce ∈ {list(windows)}, tee={tee}):")
+    fixed_s = PROFILES["cgpu"].fixed_boundary_s
+    outputs, curve, expected = [], [], []
+    for w in windows:
+        _, reqs, ch = run_config(f"N={w}", model, params, prompts,
+                                 max_new_tokens=max_new_tokens, tee=tee,
+                                 buckets=(16, 32, 64, 128), batch_prefill=True,
+                                 max_slots=max_slots, coalesce=w)
+        outputs.append([r.output for r in reqs])
+        want = sum(-(-len(r.output) // w) for r in reqs)   # sum of ceil(t/w)
+        assert ch.messages_out == want, \
+            f"coalesce={w}: {ch.messages_out} frames, expected {want}"
+        expected.append(want)
+        cpt = ch.crossings_per_token if ch.tokens_out else 0.0
+        curve.append(cpt)
+        print(f"         -> {ch.messages_out} frames / {ch.tokens_out} tokens"
+              f" = {cpt:.3f} crossings/token | modeled cgpu fixed cost "
+              f"{cpt * fixed_s * 1e6:.1f} us/token")
+    assert all(o == outputs[0] for o in outputs[1:]), \
+        "coalescing changed decoded output"
+    # strictly fewer crossings whenever a wider window can actually pack
+    # more tokens per frame; ties are only legal when even the expected
+    # frame counts tie (every request shorter than both windows).
+    for (a, b), (ea, eb) in zip(zip(curve, curve[1:]),
+                                zip(expected, expected[1:])):
+        assert b < a or (b == a and eb == ea), \
+            f"crossings/token must fall monotonically with coalesce, got {curve}"
+    print("coalescing sweep OK: identical tokens, "
+          f"crossings/token {' >= '.join(f'{c:.3f}' for c in curve)}")
 
 
 def main():
@@ -73,6 +125,8 @@ def main():
                     choices=["none", "vm", "sgx", "tdx", "cgpu", "tpu_cc"])
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--skip-sweep", action="store_true",
+                    help="only run the v1/v2 comparison")
     args = ap.parse_args()
 
     cfg, model, params = build_bench_model(d_model=args.d_model,
@@ -88,6 +142,10 @@ def main():
                buckets=(64,), batch_prefill=False, **common)
     run_config("v2", model, params, prompts,
                buckets=(16, 32, 64, 128), batch_prefill=True, **common)
+    if not args.skip_sweep:
+        sweep_tee = args.tee if args.tee != "none" else "cgpu"
+        coalesce_sweep(model, params, prompts, tee=sweep_tee, **{
+            k: v for k, v in common.items() if k != "tee"})
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core import TrustDomain
 from repro.models import build_model
-from repro.runtime.engine import Engine
+from repro.runtime import Engine, GenerationRequest
 
 def main():
     # 1. model
@@ -36,8 +36,10 @@ def main():
     # 4. serve — prompts cross the boundary encrypted
     engine = Engine(model, params_in_domain, max_slots=2, max_len=64,
                     prefill_len=8, trust_domain=td)
-    out = engine.generate(np.arange(1, 9, dtype=np.int32), max_new_tokens=8)
-    print(f"generated tokens: {out}")
+    out = engine.generate(GenerationRequest(
+        prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=8))
+    print(f"generated tokens: {out.tokens} ({out.finish_reason}, "
+          f"{out.egress_frames} egress frames)")
     print(f"boundary traffic: {td.channel.stats}")
     print(f"audit log: {[e.kind for e in td.audit]}")
 

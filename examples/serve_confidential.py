@@ -1,11 +1,37 @@
 """End-to-end confidential serving driver (the paper's measured scenario).
 
 Loads a small model from a sealed checkpoint, attests, then serves a stream
-of batched requests with continuous batching — engine v2: bucketed batched
-prefill (no prompt truncation), priority admission with sealed-KV
-preemption, and per-token streaming egress: every sampled token leaves the
-trust domain immediately as its own encrypted frame (the boundary-crossing
-pattern the paper's cgpu overhead model prices, Insight 10).
+of batched requests with continuous batching — engine v3 on the
+request-object API: bucketed batched prefill (no prompt truncation),
+priority admission with sealed-KV preemption, per-request sampling, and
+streaming egress whose frame granularity is a per-request policy.
+
+API in one glance (``repro.runtime``)::
+
+    from repro.runtime import (Engine, GenerationRequest, SamplingParams,
+                               FramePolicy, RequestOutput)
+
+    req = engine.submit(GenerationRequest(
+        prompt=tok.encode("confidential inference"),
+        max_new_tokens=32,
+        priority=5,                                  # preempts lower classes
+        params=SamplingParams(temperature=0.8,       # 0.0 = greedy default
+                              top_k=40, seed=7),     # seeded => reproducible,
+                                                     #  even across preemption
+        frame=FramePolicy(coalesce=4),               # 4 tokens per encrypted
+                                                     #  egress frame (Insight 10)
+        deadline_s=2.0, on_deadline="drop"))         # SLO: drop if still
+                                                     #  queued at +2s
+    engine.run()
+    out: RequestOutput = req.result()
+    out.tokens, out.finish_reason        # "length" | "stop" | "dropped"
+    out.ttft_s, out.e2e_s                # per-request timing
+    out.egress_frames, out.egress_tokens # boundary crossings this request paid
+
+``engine.stream(request)`` yields tokens as they cross the trust boundary
+(in bursts of ``coalesce``); ``engine.run()`` returns ``ServeStats`` with
+p50/mean/p99 latency + TTFT and the SLO counters (dropped_requests,
+deadline_misses, preemptions).
 
 Reports the paper's user-perceived metrics (throughput, next-token latency,
 TTFT) plus the modeled overhead of running the same deployment on each TEE
@@ -23,7 +49,8 @@ import numpy as np
 from repro.core import RooflineTerms, TrustDomain
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import build_model
-from repro.runtime.engine import Engine
+from repro.runtime import (Engine, FramePolicy, GenerationRequest,
+                           SamplingParams)
 from benchmarks.common import bench_model_config
 
 
@@ -31,6 +58,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--coalesce", type=int, default=4,
+                    help="tokens per encrypted egress frame for the batch")
     ap.add_argument("--tee", default="tdx",
                     choices=["none", "vm", "sgx", "tdx", "cgpu", "tpu_cc"])
     args = ap.parse_args()
@@ -52,16 +81,23 @@ def main():
     engine = Engine(model, params, max_slots=4, max_len=256,
                     prefill_buckets=(16, 32, 64, 128), trust_domain=td)
 
-    # one interactive high-priority request streams token-by-token while the
-    # background batch (lower priority) shares the decode loop; if slots run
-    # out, a background request is sealed out (encrypted KV) and restored.
+    # background batch: low priority, coalesced egress frames, seeded sampling
     prompts = [f"confidential inference request number {i}" for i in
                range(args.requests)]
     t0 = time.monotonic()
-    reqs = [engine.submit(tok.encode(p), args.max_new_tokens) for p in prompts]
+    reqs = [engine.submit(GenerationRequest(
+                prompt=tok.encode(p), max_new_tokens=args.max_new_tokens,
+                params=SamplingParams(temperature=0.7, top_k=40, seed=100 + i),
+                frame=FramePolicy(coalesce=args.coalesce)))
+            for i, p in enumerate(prompts)]
+    # one interactive high-priority request streams token-by-token (its own
+    # FramePolicy: per-token frames) while the batch shares the decode loop;
+    # if slots run out, a background request is sealed out (encrypted KV)
+    # and transparently restored.
     print("streaming (priority=5): ", end="", flush=True)
-    for t in engine.stream(tok.encode("interactive confidential session"),
-                           args.max_new_tokens, priority=5):
+    for t in engine.stream(GenerationRequest(
+            prompt=tok.encode("interactive confidential session"),
+            max_new_tokens=args.max_new_tokens, priority=5)):
         print(t, end=" ", flush=True)
     print()
     stats = engine.run()
@@ -70,15 +106,21 @@ def main():
     print(f"\nserved {stats.total_requests} requests / "
           f"{stats.total_tokens} tokens in {wall:.2f}s")
     print(f"throughput: {stats.throughput_tps:.1f} tok/s   "
-          f"next-token latency: mean {stats.mean_latency_s * 1e3:.1f}ms "
+          f"next-token latency: p50 {stats.p50_latency_s * 1e3:.1f}ms "
+          f"mean {stats.mean_latency_s * 1e3:.1f}ms "
           f"p99 {stats.p99_latency_s * 1e3:.1f}ms   "
           f"TTFT: mean {stats.mean_ttft_s * 1e3:.1f}ms")
-    preempted = sum(r.n_preemptions for r in reqs)
-    if preempted:
-        print(f"sealed-KV preemptions: {preempted}")
+    outs = [r.result() for r in reqs]
+    if stats.preemptions:
+        print(f"sealed-KV preemptions: {stats.preemptions} "
+              f"(outputs unchanged; seeded sampling survives restore)")
     if td.confidential:
-        print(f"boundary traffic (one egress frame per token): "
-              f"{td.channel.stats}")
+        ch = td.channel.stats
+        print(f"boundary traffic: {ch}")
+        print(f"frame coalescing: batch at {args.coalesce} tokens/frame, "
+              f"stream at 1 -> {ch.crossings_per_token:.3f} crossings/token; "
+              f"per-request frames: "
+              f"{[o.egress_frames for o in outs]}")
         # what this deployment would cost on each platform (modeled)
         step = stats.mean_latency_s or 1e-3
         terms = RooflineTerms(compute_s=0.25 * step, memory_s=0.7 * step,

@@ -23,23 +23,35 @@ from repro.core.sealing import (IntegrityError, SealingKey, SealedTensor,
 
 @dataclasses.dataclass
 class ChannelStats:
+    """Boundary-crossing counters. ``messages_out`` counts *crossings*
+    (frames — the unit Insight 10's fixed cost is paid per); ``tokens_out``
+    counts the tokens those frames carried. With per-token streaming the two
+    are equal; a coalescing FramePolicy drives messages_out/tokens_out
+    toward 1/N, which is exactly the amortization curve serve_bench plots."""
     messages_in: int = 0
     messages_out: int = 0
     bytes_in: int = 0
     bytes_out: int = 0
+    tokens_out: int = 0
+
+    @property
+    def crossings_per_token(self) -> float:
+        return self.messages_out / self.tokens_out if self.tokens_out else 0.0
 
     def reset(self):
         self.messages_in = self.messages_out = 0
         self.bytes_in = self.bytes_out = 0
+        self.tokens_out = 0
 
 
 @dataclasses.dataclass
 class TokenFrame:
-    """One streamed egress message: the tokens a request produced this step.
+    """One streamed egress message: the token(s) a request released together.
 
     Frames are the unit the paper's cGPU fixed cost is paid per (Insight 10):
     streaming one token per frame maximizes boundary crossings, which is
-    exactly what ``ChannelStats`` must see to price the deployment honestly.
+    exactly what ``ChannelStats`` must see to price the deployment honestly;
+    a coalescing FramePolicy packs N tokens into one frame to amortize it.
     ``(stream_id, seq)`` is bound into the sealed tensor's name, so the nonce
     is unique per frame and the host side can detect replay or reordering.
     """
@@ -108,18 +120,20 @@ class BounceBuffer:
     def _stream_closed(self, stream_id: int) -> bool:
         return stream_id < self._closed_lo or stream_id in self._closed_set
 
-    # device -> host, streaming: one frame per sampled token (per step)
+    # device -> host, streaming: one frame per FramePolicy flush (1..N tokens)
     def device_send_frame(self, stream_id: int, tokens: np.ndarray) -> TokenFrame:
         if self._stream_closed(stream_id):
             raise IntegrityError(
                 f"stream {stream_id} is closed; sending would restart its "
                 f"seq at 0 and reuse a nonce")
+        tokens = np.asarray(tokens, np.int32)
         seq = self._stream_seq.get(stream_id, 0)
         self._stream_seq[stream_id] = seq + 1
         name = TokenFrame.frame_name(stream_id, seq)
-        sealed = seal_tensor(self.key, name, np.asarray(tokens, np.int32))
+        sealed = seal_tensor(self.key, name, tokens)
         self.stats.messages_out += 1
         self.stats.bytes_out += sealed.n_bytes
+        self.stats.tokens_out += int(tokens.size)
         return TokenFrame(stream_id, seq, sealed)
 
     def host_recv_frame(self, frame: TokenFrame) -> np.ndarray:

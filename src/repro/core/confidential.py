@@ -113,20 +113,26 @@ class TrustDomain:
         self._log("egress", f"{sealed.n_bytes}B")
         return out
 
-    def egress_token(self, stream_id: int, token: int) -> int:
-        """Trust domain -> host, streaming: one encrypted frame per sampled
-        token (SecureChat-style per-token streaming). This is the
-        fixed-cost-per-crossing traffic pattern the cgpu profile's
-        ``fixed_boundary_s`` models — ``ChannelStats.messages_out`` now counts
-        generated tokens, not finished requests."""
+    def egress_tokens(self, stream_id: int, tokens) -> List[int]:
+        """Trust domain -> host, streaming: ONE encrypted frame carrying
+        ``tokens`` (a FramePolicy flush — 1 token per frame in the
+        SecureChat-style default, N when coalescing). Each frame pays the
+        fixed per-crossing cost the cgpu profile's ``fixed_boundary_s``
+        models, so ``ChannelStats`` sees crossings (messages_out) and the
+        tokens they amortize over (tokens_out) separately."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
         if not self.confidential:
-            return int(token)
-        frame = self.channel.device_send_frame(
-            stream_id, np.asarray([token], np.int32))
+            return [int(t) for t in toks]
+        frame = self.channel.device_send_frame(stream_id, toks)
         out = self.channel.host_recv_frame(frame)
         self._log("egress_frame",
-                  f"stream={stream_id} seq={frame.seq} {frame.sealed.n_bytes}B")
-        return int(out[0])
+                  f"stream={stream_id} seq={frame.seq} n={toks.size} "
+                  f"{frame.sealed.n_bytes}B")
+        return [int(t) for t in out]
+
+    def egress_token(self, stream_id: int, token: int) -> int:
+        """Single-token convenience wrapper over :meth:`egress_tokens`."""
+        return self.egress_tokens(stream_id, [token])[0]
 
     def open_stream(self) -> int:
         """Allocate a never-reused egress stream id (see BounceBuffer)."""

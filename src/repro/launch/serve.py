@@ -1,12 +1,18 @@
 """Serving launcher: confidential continuous-batching inference for any
-registered architecture.
+registered architecture, on the v3 request-object API.
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --smoke \
-        --tee tdx --requests 8 --max-new-tokens 16
+        --tee tdx --requests 8 --max-new-tokens 16 \
+        --prefill-buckets 8,16,32 --priority-mix 0:3,5:1 \
+        --coalesce 4 --sample-temp 0.8 --top-k 40 --seed 7
 
 The full (non-smoke) configs are the production path (TPU slice); smoke
 configs serve on CPU. With a confidential mode the launcher performs the
 whole paper pipeline: seal -> attest -> key release -> encrypted serving.
+``--coalesce N`` packs N tokens per encrypted egress frame (Insight-10
+fixed-cost amortization); ``--sample-temp/--top-k/--seed`` turn on seeded
+per-request sampling; ``--priority-mix`` assigns weighted priorities so the
+sealed-KV preemption path is exercised under load.
 """
 
 from __future__ import annotations
@@ -20,7 +26,32 @@ import numpy as np
 from repro.configs import get_config, list_configs, smoke_config
 from repro.core import RooflineTerms, TrustDomain
 from repro.models import build_model
-from repro.runtime.engine import Engine
+from repro.runtime import Engine, FramePolicy, GenerationRequest, SamplingParams
+
+
+def parse_buckets(spec: str):
+    try:
+        return tuple(int(b) for b in spec.split(",") if b.strip())
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--prefill-buckets wants comma-separated ints, got {spec!r}")
+
+
+def parse_priority_mix(spec: str):
+    """``prio:weight,prio:weight`` -> (priorities, weights)."""
+    prios, weights = [], []
+    try:
+        for part in spec.split(","):
+            p, w = part.split(":")
+            prios.append(int(p))
+            weights.append(float(w))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--priority-mix wants 'prio:weight,...', got {spec!r}")
+    total = sum(weights)
+    if total <= 0:
+        raise argparse.ArgumentTypeError("--priority-mix weights must sum > 0")
+    return prios, [w / total for w in weights]
 
 
 def main():
@@ -33,6 +64,21 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--prefill-len", type=int, default=16)
+    ap.add_argument("--prefill-buckets", type=parse_buckets, default=None,
+                    metavar="B0,B1,...",
+                    help="power-of-two prefill buckets (default: one bucket "
+                         "of --prefill-len)")
+    ap.add_argument("--priority-mix", type=parse_priority_mix, default=None,
+                    metavar="PRIO:WEIGHT,...",
+                    help="weighted request priorities, e.g. 0:3,5:1")
+    ap.add_argument("--coalesce", type=int, default=1,
+                    help="tokens per encrypted egress frame (FramePolicy)")
+    ap.add_argument("--sample-temp", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the top-k logits (0 = all)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="sampling seed (reproducible per-request streams)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -52,22 +98,43 @@ def main():
               f"({quote.measurement[:16]}...)")
 
     engine = Engine(model, params, max_slots=args.slots, max_len=args.max_len,
-                    prefill_len=args.prefill_len, trust_domain=td)
+                    prefill_len=args.prefill_len,
+                    prefill_buckets=args.prefill_buckets, trust_domain=td)
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
     for i in range(args.requests):
         prompt = rng.integers(1, min(cfg.vocab_size, 200),
                               args.prefill_len).astype(np.int32)
-        engine.submit(prompt, args.max_new_tokens)
+        priority = 0
+        if args.priority_mix is not None:
+            prios, weights = args.priority_mix
+            priority = int(rng.choice(prios, p=weights))
+        sp = SamplingParams(temperature=args.sample_temp, top_k=args.top_k,
+                            seed=None if args.seed is None else args.seed + i)
+        engine.submit(GenerationRequest(
+            prompt=prompt, max_new_tokens=args.max_new_tokens,
+            priority=priority, params=sp,
+            frame=FramePolicy(coalesce=args.coalesce)))
     stats = engine.run()
     wall = time.monotonic() - t0
 
     print(f"served {stats.total_requests} requests / {stats.total_tokens} "
           f"tokens in {wall:.2f}s")
     print(f"throughput {stats.throughput_tps:.1f} tok/s | next-token latency "
-          f"mean {stats.mean_latency_s * 1e3:.1f}ms p99 {stats.p99_latency_s * 1e3:.1f}ms")
+          f"p50 {stats.p50_latency_s * 1e3:.1f}ms "
+          f"mean {stats.mean_latency_s * 1e3:.1f}ms "
+          f"p99 {stats.p99_latency_s * 1e3:.1f}ms")
+    if stats.preemptions or stats.dropped_requests or stats.deadline_misses:
+        print(f"SLO: {stats.preemptions} preemptions, "
+              f"{stats.dropped_requests} dropped, "
+              f"{stats.deadline_misses} deadline misses")
     if td.confidential:
-        print(f"boundary: {td.channel.stats}")
+        ch = td.channel.stats
+        print(f"boundary: {ch}")
+        print(f"frame coalescing: {ch.messages_out} egress frames / "
+              f"{ch.tokens_out} tokens = "
+              f"{ch.crossings_per_token:.3f} crossings/token "
+              f"(coalesce={args.coalesce})")
         step = stats.mean_latency_s or 1e-3
         terms = RooflineTerms(compute_s=0.3 * step, memory_s=0.65 * step,
                               collective_s=0.05 * step)

@@ -23,6 +23,7 @@ from repro.core.confidential import TrustDomain
 from repro.data.tokenizer import ByteTokenizer
 from repro.rag.bm25 import BM25Index
 from repro.rag.dense import DenseRetriever
+from repro.runtime.api import GenerationRequest
 from repro.runtime.engine import Engine
 
 
@@ -91,6 +92,7 @@ class RAGPipeline:
                     f"{max_new_tokens} new tokens for any prompt")
             if len(prompt) > limit:
                 prompt = prompt[-limit:]
-            answer = self.engine.generate(prompt, max_new_tokens)
+            answer = self.engine.generate(GenerationRequest(
+                prompt=prompt, max_new_tokens=max_new_tokens)).tokens
         t2 = time.monotonic()
         return RAGResult(query_clear, hits, answer, t1 - t0, t2 - t1)

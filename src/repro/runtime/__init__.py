@@ -1,0 +1,25 @@
+"""Serving runtime: the request-object API, engine, scheduler, sampling.
+
+Typical use::
+
+    from repro.runtime import Engine, GenerationRequest, SamplingParams
+
+    req = engine.submit(GenerationRequest(
+        prompt=tokens, max_new_tokens=64,
+        params=SamplingParams(temperature=0.8, top_k=40, seed=7)))
+    engine.run()
+    out = req.result()          # RequestOutput
+"""
+
+from repro.runtime.api import (FINISH_DROPPED, FINISH_LENGTH, FINISH_STOP,
+                               FramePolicy, GenerationRequest, RequestOutput,
+                               SamplingParams)
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import (Request, Scheduler, ServeStats,
+                                     stats_from_requests)
+
+__all__ = [
+    "FINISH_DROPPED", "FINISH_LENGTH", "FINISH_STOP",
+    "FramePolicy", "GenerationRequest", "RequestOutput", "SamplingParams",
+    "Engine", "Request", "Scheduler", "ServeStats", "stats_from_requests",
+]

@@ -1,42 +1,46 @@
-"""Inference engine v2: streaming, bucketed batched prefill, sealed preemption.
+"""Inference engine v3: request objects, per-request sampling, coalesced
+egress, SLO admission — on v2's streaming/bucketed-prefill/preemption core.
 
 Dataflow per paper Fig 2's protected stack:
   prompt --(encrypted bounce buffer)--> bucketed batched prefill(slots)
-  --> batched decode loop --> each sampled token --(one encrypted frame per
-  token through the bounce buffer)--> client, immediately.
+  --> batched decode loop --> sampled tokens --(encrypted frames through the
+  bounce buffer, 1..N tokens each per the request's FramePolicy)--> client.
 
-Three serving-path upgrades over v1:
+The serving API is the request-object model in :mod:`repro.runtime.api`:
 
-  * **Streaming egress** — every sampled token leaves the trust domain the
-    moment it exists, as a per-token encrypted frame with a per-request
-    stream id and a session-sequenced nonce (``BounceBuffer.device_send_frame``).
-    ``ChannelStats`` therefore measures the fixed-cost-dominated boundary
-    traffic the paper's cgpu profile models (Insight 10), and clients get
-    tokens at next-token latency instead of at request completion.
+  * **Per-request sampling** — each :class:`GenerationRequest` carries
+    :class:`SamplingParams`; the engine mirrors them into ``[slots]``-shaped
+    temperature/top-k/key arrays (``SlotState``) and the jitted decode step
+    samples all slots at once via ``sampling.sample`` (``lax.top_k``,
+    fold_in-per-token PRNG keys). A seeded request reproduces byte-identical
+    output even across a sealed-KV preemption, because the key for token i
+    depends only on (seed, i).
 
-  * **Bucketed batched prefill** — instead of one static ``prefill_len``
-    (which silently truncated longer prompts), prompts are rounded up to a
-    small set of power-of-two buckets; same-bucket waiting requests are
-    prefixed together in one jitted prefill call (recompilation bounded by
-    |buckets| x log2(max_slots) shapes). A prompt longer than its bucket is
-    *chunked*: the first ``bucket`` tokens go through prefill, the tail rides
-    the batched decode loop one token per step (decode-aligned prefill), so
-    nothing is ever dropped.
+  * **Coalesced egress** — ``FramePolicy(coalesce=N)`` buffers N tokens per
+    encrypted frame (flush-on-finish). ``coalesce=1`` is v2's per-token
+    streaming; larger windows amortize the fixed per-crossing cost the cgpu
+    profile models (Insight 10), measurable in ``ChannelStats``
+    (messages_out = frames, tokens_out = tokens).
 
-  * **Priority admission + sealed-KV preemption** — the scheduler pops the
-    highest-priority waiting request; when no slot is free, a strictly
-    lower-priority running request is evicted through ``seal_slot`` (its KV
-    pages leave the domain only as ChaCha20+HMAC ciphertext, paper §V-D3)
-    and transparently restored via ``restore_slot`` when capacity returns.
+  * **SLO admission** — a queued request whose relative ``deadline_s``
+    passes is dropped when it asked to be (``on_deadline="drop"``), and
+    per-priority token-rate budgets (``rate_budgets``) hold a class at
+    admission once it outruns its tokens/s allowance — preemption and drop
+    counts become measurable trade-offs in ``ServeStats``.
 
-All device compute is jitted once per shape; decode donates the cache to
-keep a single in-place buffer. Finished slots are refilled without stopping
-decode (continuous batching).
+v2 core (unchanged underneath): bucketed batched prefill with decode-aligned
+chunking for long prompts, priority admission, sealed-KV preemption with
+channel-global stream ids and per-request seal epochs, per-frame
+replay/reorder rejection. All device compute is jitted once per shape;
+decode donates the cache. The v2 kwargs form of ``submit``/``generate``/
+``stream`` still works for one release behind a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -46,11 +50,18 @@ import numpy as np
 from repro.core.confidential import TrustDomain
 from repro.models.model import Model
 from repro.runtime import sampling
+from repro.runtime.api import (FramePolicy, GenerationRequest, RequestOutput,
+                               SamplingParams, TokenCallback)
 from repro.runtime.kvcache import (SlotState, extract_slot as kv_extract,
                                    insert_rows, insert_slot)
-from repro.runtime.scheduler import Request, Scheduler, ServeStats, TokenCallback
+from repro.runtime.scheduler import Request, Scheduler, ServeStats
 
 Params = Any
+
+_KWARGS_DEPRECATION = (
+    "the kwargs serving API is deprecated; pass a GenerationRequest "
+    "(repro.runtime.api) instead — it carries sampling, frame and SLO "
+    "policies the kwargs form cannot express")
 
 
 @dataclasses.dataclass
@@ -67,17 +78,51 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+class _RateBucket:
+    """Token bucket for one priority class: refills at ``rate`` tokens/s up
+    to ``burst``; admission charges a request's whole ``max_new_tokens`` up
+    front (the KV reservation it will hold). A request larger than the burst
+    is admitted on a full bucket and overdraws it (level goes negative), so
+    nothing starves while the long-run rate still holds."""
+
+    def __init__(self, rate: float, burst: Optional[float] = None):
+        if rate <= 0:
+            raise ValueError(f"rate budget must be > 0 tokens/s, got {rate}")
+        self.rate = float(rate)
+        self.burst = float(burst) if burst is not None else max(self.rate, 1.0)
+        self.level = self.burst
+        self._t = time.monotonic()
+
+    def _refill(self) -> None:
+        now = time.monotonic()
+        self.level = min(self.burst, self.level + (now - self._t) * self.rate)
+        self._t = now
+
+    def can(self, n: int) -> bool:
+        self._refill()
+        return self.level >= min(float(n), self.burst)
+
+    def charge(self, n: int) -> None:
+        self.level -= float(n)
+
+
 class Engine:
     def __init__(self, model: Model, params: Params, *, max_slots: int = 4,
                  max_len: int = 512, trust_domain: Optional[TrustDomain] = None,
                  prefill_len: int = 64,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 batch_prefill: bool = True):
+                 batch_prefill: bool = True,
+                 rate_budgets: Optional[Dict[int, float]] = None):
         """``prefill_buckets`` supersedes the v1 single static ``prefill_len``
         (kept as the default one-bucket config for compatibility). Buckets
         should be powers of two; each distinct (rows, bucket) prefill shape
         compiles once. ``batch_prefill=False`` restores v1's one-request-per-
-        prefill-call behavior (the serve_bench baseline)."""
+        prefill-call behavior (the serve_bench baseline).
+
+        ``rate_budgets`` maps priority -> tokens/s: admission charges each
+        request's max_new_tokens against its class's token bucket and holds
+        the class back (without starving others) once the budget is spent.
+        Priorities absent from the map are unthrottled."""
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -99,29 +144,40 @@ class Engine:
         self._active_mask = np.zeros(max_slots, bool)
         self._last_token = np.zeros(max_slots, np.int32)
         self._preempted: List[PreemptedRequest] = []
+        self._buckets: Dict[int, _RateBucket] = {
+            prio: _RateBucket(rate) for prio, rate in (rate_budgets or {}).items()}
+        self._seed_rng = np.random.default_rng()
 
         cfg = model.cfg
 
         def _prefill(params, tokens, cache):
             return model.prefill(params, {"tokens": tokens}, cache)
 
-        def _decode(params, tokens, cache):
+        def _decode(params, tokens, cache, state, kmax):
             logits, cache = model.decode_step(params, tokens, cache)
-            return sampling.greedy(logits), cache
+            if state is None:     # all-greedy step: identical to the v2 path
+                return sampling.greedy(logits), cache
+            return sampling.sample(logits, state, kmax=kmax), cache
 
         self._prefill_fn = jax.jit(_prefill)
-        self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
+        # ``kmax`` is static (pow2-rounded max top_k) and ``state=None`` is a
+        # distinct pytree structure, so compiled decode variants stay bounded
+        # by 1 + log2(vocab), not one per request mix.
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
+                                  static_argnums=(4,))
         self._vocab = cfg.vocab_size
 
     # -- request admission ----------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+    def submit(self, request, max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None, *, priority: int = 0,
                on_token: Optional[TokenCallback] = None) -> Request:
-        prompt = np.asarray(prompt, np.int32)
-        if max_new_tokens < 1:
-            # the prefill-produced first token always exists; a request that
-            # asked for zero would still emit (and egress) it.
-            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        """Admit one :class:`GenerationRequest`; returns the live
+        :class:`Request` handle (``.finished``, ``.result()``).
+
+        The legacy ``submit(prompt_array, max_new_tokens, eos_id, ...)``
+        kwargs form still works for one release (DeprecationWarning)."""
+        gen = self._coerce(request, max_new_tokens, eos_id, priority, on_token)
+        gen.validate(self._vocab)
         # worst-case KV positions: the padded prefill bucket (or the full
         # prompt when chunked past it) plus one per decode *input* — the
         # final sampled token is emitted but never fed back, so it writes no
@@ -129,19 +185,38 @@ class Engine:
         # cache row and silently corrupt the sequence — reject up front,
         # BEFORE the prompt crosses the boundary (a rejected request must
         # not skew ChannelStats).
-        need = (max(self._bucket_for(len(prompt)), len(prompt))
-                + max_new_tokens - 1)
+        need = (max(self._bucket_for(len(gen.prompt)), len(gen.prompt))
+                + gen.max_new_tokens - 1)
         if need > self.max_len:
             raise ValueError(
                 f"request needs up to {need} KV positions "
-                f"(prompt {len(prompt)} + {max_new_tokens} new) "
+                f"(prompt {len(gen.prompt)} + {gen.max_new_tokens} new) "
                 f"but max_len={self.max_len}; shorten the prompt or "
                 f"raise max_len")
-        prompt = self.td.ingress(prompt)
-        req = self.scheduler.submit(prompt, max_new_tokens, eos_id,
-                                    priority=priority, on_token=on_token)
+        gen.prompt = self.td.ingress(gen.prompt)
+        req = self.scheduler.submit(gen)
+        req.ingress_messages = 1 if self.td.confidential else 0
+        # resolve the sampling seed NOW so the request is reproducible from
+        # this point on (including across seal/restore preemption cycles).
+        if not gen.params.is_greedy:
+            req.seed = (gen.params.seed if gen.params.seed is not None
+                        else int(self._seed_rng.integers(2 ** 31 - 1)))
         req.stream_id = self.td.open_stream()
         return req
+
+    def _coerce(self, request, max_new_tokens, eos_id, priority,
+                on_token) -> GenerationRequest:
+        if isinstance(request, GenerationRequest):
+            if (max_new_tokens is not None or eos_id is not None
+                    or priority != 0 or on_token is not None):
+                raise TypeError("with a GenerationRequest, sampling/priority/"
+                                "callback settings live on the request object")
+            return request
+        warnings.warn(_KWARGS_DEPRECATION, DeprecationWarning, stacklevel=3)
+        return GenerationRequest(
+            prompt=np.asarray(request, np.int32),
+            max_new_tokens=32 if max_new_tokens is None else int(max_new_tokens),
+            eos_id=eos_id, priority=priority, on_token=on_token)
 
     def prompt_budget(self, max_new_tokens: int) -> int:
         """Longest prompt submit() will accept for ``max_new_tokens``.
@@ -161,14 +236,53 @@ class Engine:
                 return b
         return self.prefill_buckets[-1]
 
+    # -- sampling plumbing -----------------------------------------------------
+    def _base_key(self, req: Request) -> np.ndarray:
+        return np.asarray(jax.random.PRNGKey(req.seed or 0), np.uint32)
+
+    def _set_slot_sampling(self, slot: int, req: Request) -> None:
+        p = req.gen.params
+        if p.is_greedy:
+            self.slots.clear_sampling(slot)
+        else:
+            self.slots.set_sampling(slot, p.temperature, p.top_k,
+                                    self._base_key(req))
+
+    def _static_kmax(self) -> int:
+        """Pow2-rounded top_k bound → bounded set of compiled decode shapes."""
+        k = self.slots.max_top_k
+        return min(_next_pow2(k), self._vocab) if k > 0 else 0
+
+    # -- egress ----------------------------------------------------------------
+    def _flush_egress(self, req: Request) -> None:
+        """Release the request's buffered tokens as ONE encrypted frame (the
+        FramePolicy flush); the on_token callback fires per token as it
+        becomes visible outside the domain."""
+        if not req.egress_buf:
+            return
+        toks, req.egress_buf = req.egress_buf, []
+        if self.td.confidential:
+            out = self.td.egress_tokens(req.stream_id, toks)
+            req.egress_frames += 1
+            req.egress_tokens += len(out)
+        else:
+            out = toks
+        if req.on_token is not None:
+            for t in out:
+                req.on_token(req, int(t))
+
     def _emit_token(self, slot: int, tok: int) -> bool:
-        """Record one sampled token: per-token encrypted egress frame, stream
-        callback, termination check. Returns True if the request finished."""
+        """Record one sampled token (in-domain), egress per the request's
+        FramePolicy (coalesce window, flush-on-finish), and check
+        termination. Returns True if the request finished."""
         req = self.scheduler.running[slot]
-        tok = self.td.egress_token(req.stream_id, tok)
-        self.scheduler.record_token(slot, tok)
-        self._last_token[slot] = tok
-        if req.done:
+        self.scheduler.record_token(slot, int(tok))
+        self._last_token[slot] = int(tok)
+        done = req.done
+        req.egress_buf.append(int(tok))
+        if done or not self.td.confidential or len(req.egress_buf) >= req.coalesce:
+            self._flush_egress(req)
+        if done:
             # check immediately after recording: a max_new_tokens=1 request
             # (or EOS as the very first token) releases its slot without
             # paying for a wasted decode step (v1 off-by-one).
@@ -179,14 +293,41 @@ class Engine:
             return True
         return False
 
+    # -- SLO admission ---------------------------------------------------------
+    @property
+    def _admit_filter(self):
+        """Admissibility predicate for the scheduler queue — None when no
+        rate budgets are configured, keeping the common path on the O(1)
+        heap peek instead of a sorted scan."""
+        return self._admissible if self._buckets else None
+
+    def _admissible(self, req: Request) -> bool:
+        bucket = self._buckets.get(req.priority)
+        return bucket is None or bucket.can(req.max_new_tokens)
+
+    def _charge_budget(self, req: Request) -> None:
+        bucket = self._buckets.get(req.priority)
+        if bucket is not None:
+            bucket.charge(req.max_new_tokens)
+
+    def _drop_expired(self) -> None:
+        for req in self.scheduler.drop_expired():
+            self.td.close_stream(req.stream_id)
+            self.td._log("drop_deadline",
+                         f"rid={req.rid} deadline={req.gen.deadline_s}s "
+                         f"waited={req.t_done - req.t_submit:.3f}s")
+
     def _admit_batch(self) -> int:
         """Pop waiting requests sharing the head's prefill bucket (bounded by
-        free slots) and prefill them in one jitted call."""
-        head = self.scheduler.peek_waiting()
+        free slots and per-priority rate budgets) and prefill them in one
+        jitted call."""
+        head = self.scheduler.peek_waiting(self._admit_filter)
         if head is None or not self.slots.free:
             return 0
         bucket = self._bucket_for(len(head.prompt))
-        group: List[Request] = [self.scheduler.next_waiting()]
+        first = self.scheduler.next_waiting(self._admit_filter)
+        self._charge_budget(first)
+        group: List[Request] = [first]
         if self.batch_prefill:
             # group-mates must not jump the restore queue: a sealed-out
             # request with priority >= theirs gets the free slot first
@@ -195,12 +336,13 @@ class Engine:
             best_sealed = max((p.req.priority for p in self._preempted),
                               default=None)
             while len(group) < len(self.slots.free):
-                nxt = self.scheduler.peek_waiting()
+                nxt = self.scheduler.peek_waiting(self._admit_filter)
                 if nxt is None or self._bucket_for(len(nxt.prompt)) != bucket:
                     break
                 if best_sealed is not None and nxt.priority <= best_sealed:
                     break
-                group.append(self.scheduler.next_waiting())
+                group.append(self.scheduler.next_waiting(self._admit_filter))
+                self._charge_budget(group[-1])
 
         # rows padded to a power of two so compiled prefill shapes stay
         # bounded: |buckets| x log2(max_slots) variants, not one per batch.
@@ -212,7 +354,7 @@ class Engine:
         fresh = self.model.init_cache(rows, self.max_len)
         logits, prefilled = self._prefill_fn(self.params, jnp.asarray(tokens),
                                              fresh)
-        first_np = np.argmax(np.asarray(logits), axis=-1)
+        first_np = self._first_tokens(logits, group, rows)
 
         slots = [self.slots.acquire(req.rid) for req in group]
         assert None not in slots, "admission raced free-slot accounting"
@@ -223,6 +365,7 @@ class Engine:
             slot = slots[i]
             self.scheduler.start(slot, req)
             self._active_mask[slot] = True
+            self._set_slot_sampling(slot, req)
             if len(req.prompt) > bucket:
                 # chunked prefill: the tail is fed through the decode loop,
                 # one token per step, before any sampling counts as output.
@@ -231,6 +374,27 @@ class Engine:
             else:
                 self._emit_token(slot, int(first_np[i]))
         return len(group)
+
+    def _first_tokens(self, logits, group: List[Request], rows: int) -> np.ndarray:
+        """Sample each group member's first token from its prefill logits
+        with its own SamplingParams at token index 0 (same fold-in the
+        decode loop would use), so prefill- and decode-produced tokens are
+        governed by one policy."""
+        if all(req.gen.params.is_greedy for req in group):
+            return np.argmax(np.asarray(logits), axis=-1)
+        temp = np.zeros(rows, np.float32)
+        top_k = np.zeros(rows, np.int32)
+        key = np.zeros((rows, 2), np.uint32)
+        for i, req in enumerate(group):
+            p = req.gen.params
+            if not p.is_greedy:
+                temp[i], top_k[i], key[i] = p.temperature, p.top_k, self._base_key(req)
+        kmax = int(top_k.max())
+        state = sampling.SamplingState(
+            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(key),
+            jnp.zeros(rows, jnp.int32))
+        return np.asarray(sampling.sample(
+            logits, state, kmax=min(_next_pow2(kmax), self._vocab) if kmax else 0))
 
     def _preempt_lowest(self, incoming: Request) -> bool:
         """Seal out the lowest-priority running slot if ``incoming`` strictly
@@ -250,24 +414,28 @@ class Engine:
 
     def _admit_ready(self) -> None:
         """Admission policy, run at the top of every step:
-        1. restore sealed-out requests while no waiting request outranks them,
-        2. batch-admit waiting requests into free slots (bucket-grouped),
-        3. preempt a strictly lower-priority running request when the waiting
+        1. drop queued requests whose drop-deadline has passed (SLO),
+        2. restore sealed-out requests while no waiting request outranks them,
+        3. batch-admit waiting requests into free slots (bucket-grouped,
+           rate-budget gated — an over-budget priority class is skipped
+           without blocking the classes behind it),
+        4. preempt a strictly lower-priority running request when the waiting
            head cannot get a slot otherwise (preempted requests never trigger
            further preemption — bounded, no thrash)."""
         while True:
+            self._drop_expired()
             if self._preempted and self.slots.free:
                 best = max(self._preempted,
                            key=lambda p: (p.req.priority, -p.req.rid))
-                head = self.scheduler.peek_waiting()
+                head = self.scheduler.peek_waiting(self._admit_filter)
                 if head is None or head.priority <= best.req.priority:
                     self._preempted.remove(best)
                     self.restore_slot(best.sealed, best.req)
                     continue
-            if self.scheduler.queue and self.slots.free:
-                self._admit_batch()
+            if (self.scheduler.queue and self.slots.free
+                    and self._admit_batch() > 0):
                 continue
-            head = self.scheduler.peek_waiting()
+            head = self.scheduler.peek_waiting(self._admit_filter)
             if (head is not None and not self.slots.free
                     and self._preempt_lowest(head)):
                 continue
@@ -282,13 +450,25 @@ class Engine:
         if not self.slots.active:
             return 0
         feeding_prompt = {}   # slot -> tail still pending after this step?
+        steps = np.zeros(self.max_slots, np.int32)
         for slot in self.slots.active:
             req = self.scheduler.running.get(slot)
-            if req is not None and req.pending_input:
+            if req is None:
+                continue
+            steps[slot] = len(req.output)   # fold-in index of the next token
+            if req.pending_input:
                 self._last_token[slot] = req.pending_input.pop(0)
                 feeding_prompt[slot] = bool(req.pending_input)
         tokens = jnp.asarray(self._last_token[:, None])
-        next_tokens, self.cache = self._decode_fn(self.params, tokens, self.cache)
+        if self.slots.any_sampled:
+            state = sampling.SamplingState(
+                jnp.asarray(self.slots.temp), jnp.asarray(self.slots.top_k),
+                jnp.asarray(self.slots.key), jnp.asarray(steps))
+            kmax = self._static_kmax()
+        else:
+            state, kmax = None, 0
+        next_tokens, self.cache = self._decode_fn(self.params, tokens,
+                                                  self.cache, state, kmax)
         next_np = np.asarray(next_tokens)
         produced = 0
         for slot in list(self.slots.active):
@@ -307,8 +487,12 @@ class Engine:
     def run(self, max_steps: int = 10_000) -> ServeStats:
         steps = 0
         while not self.idle and steps < max_steps:
-            self.step()
+            produced = self.step()
             steps += 1
+            if produced == 0 and not self.slots.active and not self.idle:
+                # every waiting request is rate-budget gated: yield briefly
+                # so the token buckets refill instead of busy-spinning.
+                time.sleep(1e-3)
         return self.scheduler.stats()
 
     # -- sealed KV preemption ----------------------------------------------------
@@ -319,7 +503,8 @@ class Engine:
 
     def seal_slot(self, slot: int) -> Tuple[Dict[str, Any], Request]:
         """Evict a running slot: returns (sealed_cache_dict, request). Any
-        not-yet-prefilled prompt tail travels on ``request.pending_input``."""
+        not-yet-prefilled prompt tail travels on ``request.pending_input``
+        and not-yet-flushed egress tokens stay buffered on the request."""
         from repro.core.sealing import seal_tree
         single = kv_extract(self.cache, jnp.int32(slot))
         req = self.scheduler.running.pop(slot)
@@ -350,6 +535,7 @@ class Engine:
         self.cache = insert_slot(self.cache, single, jnp.int32(slot))
         self.scheduler.running[slot] = req
         self._active_mask[slot] = True
+        self._set_slot_sampling(slot, req)
         # next decode input: the prompt tail (if chunked prefill was cut
         # short) takes precedence in step(); otherwise the last output token.
         self._last_token[slot] = req.output[-1] if req.output else 0
@@ -357,31 +543,55 @@ class Engine:
         return slot
 
     # -- convenience -----------------------------------------------------------
-    def generate(self, prompt: np.ndarray, max_new_tokens: int = 32,
-                 eos_id: Optional[int] = None) -> List[int]:
-        req = self.submit(prompt, max_new_tokens, eos_id)
+    def generate(self, request, max_new_tokens: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        """Serve one request to completion.
+
+        New API: ``generate(GenerationRequest) -> RequestOutput``.
+        Legacy kwargs form returns the raw token list (deprecated)."""
+        if isinstance(request, GenerationRequest):
+            req = self.submit(request)
+            self.run()
+            return req.result()
+        req = self.submit(request,
+                          32 if max_new_tokens is None else max_new_tokens,
+                          eos_id)
         self.run()
         return req.output
 
-    def stream(self, prompt: np.ndarray, max_new_tokens: int = 32,
+    def stream(self, request, max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None, *, priority: int = 0,
                max_steps: int = 100_000) -> Iterator[int]:
         """Yields this request's tokens as they cross the trust boundary —
-        each already egressed as its own encrypted frame. Other queued
-        requests keep advancing in the same decode batch. The request is
-        submitted eagerly (before the first token is pulled), so it joins
-        the batch even if the caller iterates later."""
+        per token with the default FramePolicy, in bursts of ``coalesce``
+        when the request asked for frame coalescing. Other queued requests
+        keep advancing in the same decode batch. The request is submitted
+        eagerly (before the first token is pulled), so it joins the batch
+        even if the caller iterates later. Accepts a GenerationRequest (any
+        on_token it carries still fires) or the deprecated kwargs form."""
+        gen = self._coerce(request, max_new_tokens, eos_id, priority, None)
         buf: List[int] = []
-        req = self.submit(prompt, max_new_tokens, eos_id, priority=priority,
-                          on_token=lambda _r, t: buf.append(t))
+        inner = gen.on_token
+
+        def _tap(r, t):
+            buf.append(t)
+            if inner is not None:
+                inner(r, t)
+
+        gen.on_token = _tap
+        req = self.submit(gen)
 
         def _drain() -> Iterator[int]:
             steps = 0
             while not req.finished:
                 if steps >= max_steps:
                     raise RuntimeError(f"stream exceeded {max_steps} steps")
-                self.step()
+                produced = self.step()
                 steps += 1
+                if produced == 0 and not self.slots.active and not self.idle:
+                    # rate-budget gated (same as run()): let buckets refill
+                    # instead of burning max_steps on empty iterations.
+                    time.sleep(1e-3)
                 while buf:
                     yield buf.pop(0)
             while buf:

@@ -22,18 +22,31 @@ from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Cache = Any
 
 
 @dataclasses.dataclass
 class SlotState:
+    """Slot bookkeeping + the ``[slots]``-shaped per-request sampling arrays
+    the jitted decode step consumes (engine v3: each slot samples with its
+    own temperature/top-k/PRNG key). The arrays are host-side numpy mirrors;
+    the engine snapshots them into a ``sampling.SamplingState`` per step.
+    A released slot resets to greedy (temp 0) so stale settings can never
+    leak into the next occupant."""
     free: List[int]
     active: dict  # slot -> request id
+    temp: np.ndarray    # [slots] f32; <= 0 → greedy
+    top_k: np.ndarray   # [slots] i32; 0 → unrestricted
+    key: np.ndarray     # [slots, 2] u32 per-request base PRNG keys
 
     @classmethod
     def create(cls, max_slots: int) -> "SlotState":
-        return cls(free=list(range(max_slots)), active={})
+        return cls(free=list(range(max_slots)), active={},
+                   temp=np.zeros(max_slots, np.float32),
+                   top_k=np.zeros(max_slots, np.int32),
+                   key=np.zeros((max_slots, 2), np.uint32))
 
     def acquire(self, request_id: int) -> Optional[int]:
         if not self.free:
@@ -46,6 +59,26 @@ class SlotState:
         rid = self.active.pop(slot, None)
         if rid is not None:
             self.free.append(slot)
+            self.clear_sampling(slot)
+
+    def set_sampling(self, slot: int, temp: float, top_k: int,
+                     key: np.ndarray) -> None:
+        self.temp[slot] = temp
+        self.top_k[slot] = top_k
+        self.key[slot] = key
+
+    def clear_sampling(self, slot: int) -> None:
+        self.temp[slot] = 0.0
+        self.top_k[slot] = 0
+        self.key[slot] = 0
+
+    @property
+    def any_sampled(self) -> bool:
+        return bool((self.temp > 0).any())
+
+    @property
+    def max_top_k(self) -> int:
+        return int(self.top_k.max()) if len(self.top_k) else 0
 
     @property
     def num_active(self) -> int:

@@ -1,9 +1,44 @@
-"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+"""Token sampling: greedy / temperature / top-k, jit-friendly.
+
+Two entry points:
+
+  * :func:`temperature` — single distribution, scalar settings (tests,
+    offline tools).
+  * :func:`sample` — the engine's batched path: every decode step samples
+    all slots at once, each with its own temperature/top-k/PRNG key carried
+    in a :class:`SamplingState` of ``[slots]``-shaped arrays. Greedy slots
+    (``temp <= 0``) and sampled slots coexist in one call.
+
+Top-k uses ``jax.lax.top_k`` (O(v·k) selection) rather than a full
+``jnp.sort`` (O(v log v) over the whole vocabulary per step). ``top_k``
+must be < vocab_size — a request asking for a full-vocab "restriction"
+should say ``top_k=0``; anything >= vocab is an error, not a silent clamp.
+
+Reproducibility: the per-slot key is the request's seed-derived base key;
+:func:`sample` folds the output-token index into it each step. The fold-in
+depends only on (seed, token index), so a seeded request re-samples
+identically after a sealed-KV preemption/restore, regardless of which
+engine step the token lands on.
+"""
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+
+_MASKED = -1e30   # large-negative logit mask (f32-safe, softmax-zero)
+
+
+class SamplingState(NamedTuple):
+    """Per-slot sampling parameters, shaped ``[slots]`` (a pytree the jitted
+    decode step takes as one argument; see ``kvcache.SlotState`` for the
+    host-side mirror)."""
+    temp: jax.Array    # [b] f32; <= 0 selects greedy for that slot
+    top_k: jax.Array   # [b] i32; 0 = unrestricted
+    key: jax.Array     # [b, 2] u32 per-request base PRNG keys
+    step: jax.Array    # [b] i32 output-token index (folded into the key)
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -13,10 +48,44 @@ def greedy(logits: jax.Array) -> jax.Array:
 
 def temperature(logits: jax.Array, key, temp: float = 1.0,
                 top_k: int = 0) -> jax.Array:
+    """Scalar-setting sampling for a whole batch (one shared distribution
+    policy). ``temp <= 0`` is greedy."""
     if temp <= 0:
         return greedy(logits)
+    vocab = logits.shape[-1]
+    if top_k >= vocab:
+        raise ValueError(
+            f"top_k={top_k} must be < vocab_size={vocab}; "
+            f"use top_k=0 for an unrestricted distribution")
     scaled = logits.astype(jnp.float32) / temp
     if top_k > 0:
-        kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
-        scaled = jnp.where(scaled >= kth, scaled, -1e30)
+        kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]   # [b, 1]
+        scaled = jnp.where(scaled >= kth, scaled, _MASKED)
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, state: SamplingState, *, kmax: int = 0) -> jax.Array:
+    """Batched per-slot sampling: logits [b, v] + state [b] -> tokens [b].
+
+    ``kmax`` is the *static* upper bound on any slot's ``top_k`` this call
+    (the engine rounds the active maximum up to a power of two, so compiled
+    variants stay bounded by log2(vocab)). ``kmax=0`` compiles the
+    no-top-k path. Per-slot behavior:
+
+      * ``temp <= 0``  → argmax (ignores key/top_k),
+      * ``top_k == 0`` → full-distribution sampling,
+      * else           → restricted to that slot's top_k logits.
+    """
+    greedy_toks = greedy(logits)
+    # guard the divide for greedy rows (their sampled value is discarded)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(state.temp, 1e-6)[:, None]
+    if kmax > 0:
+        kmax = min(int(kmax), logits.shape[-1])
+        vals = jax.lax.top_k(scaled, kmax)[0]                    # [b, kmax]
+        idx = jnp.clip(state.top_k - 1, 0, kmax - 1)
+        kth = jnp.take_along_axis(vals, idx[:, None], axis=-1)   # [b, 1]
+        restricted = jnp.where(scaled >= kth, scaled, _MASKED)
+        scaled = jnp.where(state.top_k[:, None] > 0, restricted, scaled)
+    keys = jax.vmap(jax.random.fold_in)(state.key, state.step)
+    sampled = jax.vmap(lambda k, row: jax.random.categorical(k, row))(keys, scaled)
+    return jnp.where(state.temp > 0, sampled, greedy_toks).astype(jnp.int32)

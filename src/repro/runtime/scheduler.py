@@ -7,14 +7,22 @@ slot immediately for the next queued request. Tracks the user-perceived
 metrics from §III-C: throughput (tokens/s), next-token latency, and
 time-to-first-token.
 
-v2 additions:
-  * requests carry a ``priority`` — admission pops the highest-priority
-    waiting request (FIFO within a priority level), and the engine may
-    preempt a lower-priority running slot via sealed-KV eviction (§V-D3);
-  * ``on_token`` streaming callback — fired the moment a token is recorded,
-    i.e. right after it crossed the trust boundary as an encrypted frame;
-  * ``pending_input`` holds the not-yet-prefilled tail of a long prompt so
-    chunked prefill state travels with the request through seal/restore.
+v3 (request-object API): the scheduler speaks
+:class:`~repro.runtime.api.GenerationRequest` — per-request sampling, frame
+policy and SLO fields live on the submitted object, not in a kwargs bag
+duplicated here and in the engine. :class:`Request` is the live serving
+record wrapped around it (output, timing, seal/stream state) and converts
+to a :class:`~repro.runtime.api.RequestOutput` on completion.
+
+SLO machinery:
+  * ``drop_expired`` removes queued requests whose relative deadline has
+    passed (``on_deadline="drop"``) before they waste prefill compute;
+  * ``peek_waiting``/``next_waiting`` accept an admissibility predicate so
+    the engine's per-priority token-rate budgets can hold a class back
+    without starving the others;
+  * :class:`ServeStats` reports p50 alongside mean/p99 (percentiles guarded
+    for <2 samples) plus dropped/deadline-miss/preemption counters, making
+    the preemption-vs-drop trade-off measurable.
 """
 
 from __future__ import annotations
@@ -22,21 +30,21 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-TokenCallback = Callable[["Request", int], None]
+from repro.runtime.api import (FINISH_DROPPED, FINISH_LENGTH, FINISH_STOP,
+                               GenerationRequest, RequestOutput, TokenCallback)
+
+AdmitPredicate = Callable[["Request"], bool]
 
 
 @dataclasses.dataclass
 class Request:
+    """Live serving record for one submitted :class:`GenerationRequest`."""
     rid: int
-    prompt: np.ndarray                 # int32 [prompt_len]
-    max_new_tokens: int = 32
-    eos_id: Optional[int] = None
-    priority: int = 0                  # higher = more important
-    on_token: Optional[TokenCallback] = None
+    gen: GenerationRequest
     # filled during serving
     output: List[int] = dataclasses.field(default_factory=list)
     pending_input: List[int] = dataclasses.field(default_factory=list)
@@ -44,9 +52,40 @@ class Request:
     t_first_token: float = 0.0
     t_done: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""
     n_preemptions: int = 0
     seal_epoch: int = 0    # bumps on every sealed-KV eviction (nonce freshness)
     stream_id: int = -1    # channel-global egress stream (set by the engine)
+    seed: Optional[int] = None          # resolved sampling seed (reproducible)
+    egress_buf: List[int] = dataclasses.field(default_factory=list)
+    ingress_messages: int = 0
+    egress_frames: int = 0
+    egress_tokens: int = 0
+
+    # -- mirrors of the generation request (single source of truth: gen) ----
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.gen.prompt
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.gen.max_new_tokens
+
+    @property
+    def eos_id(self) -> Optional[int]:
+        return self.gen.eos_id
+
+    @property
+    def priority(self) -> int:
+        return self.gen.priority
+
+    @property
+    def on_token(self) -> Optional[TokenCallback]:
+        return self.gen.on_token
+
+    @property
+    def coalesce(self) -> int:
+        return self.gen.frame.coalesce
 
     @property
     def done(self) -> bool:
@@ -58,11 +97,34 @@ class Request:
     def finished(self) -> bool:
         return self.t_done > 0.0
 
+    @property
+    def dropped(self) -> bool:
+        return self.finish_reason == FINISH_DROPPED
+
+    @property
+    def deadline_missed(self) -> bool:
+        return (not self.dropped and self.finished
+                and self.gen.deadline_s is not None
+                and self.t_done - self.t_submit > self.gen.deadline_s)
+
+    def expired(self, now: float) -> bool:
+        """True when a still-queued request should be dropped (deadline SLO)."""
+        return (self.gen.deadline_s is not None
+                and self.gen.on_deadline == "drop"
+                and now - self.t_submit > self.gen.deadline_s)
+
+    def result(self) -> RequestOutput:
+        """The finished request as an API-level :class:`RequestOutput`."""
+        return RequestOutput.from_request(self)
+
 
 @dataclasses.dataclass
 class ServeStats:
     total_tokens: int = 0
     total_requests: int = 0
+    dropped_requests: int = 0      # deadline passed while queued (on_deadline=drop)
+    deadline_misses: int = 0       # served, but finished after deadline_s
+    preemptions: int = 0           # sealed-KV evictions among served requests
     wall_s: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     ttft_s: List[float] = dataclasses.field(default_factory=list)
@@ -76,16 +138,34 @@ class ServeStats:
         return float(np.mean(self.latencies_s)) if self.latencies_s else 0.0
 
     @property
+    def p50_latency_s(self) -> float:
+        return _pct(self.latencies_s, 50)
+
+    @property
     def p99_latency_s(self) -> float:
-        return float(np.percentile(self.latencies_s, 99)) if self.latencies_s else 0.0
+        return _pct(self.latencies_s, 99)
 
     @property
     def mean_ttft_s(self) -> float:
         return float(np.mean(self.ttft_s)) if self.ttft_s else 0.0
 
     @property
+    def p50_ttft_s(self) -> float:
+        return _pct(self.ttft_s, 50)
+
+    @property
     def p99_ttft_s(self) -> float:
-        return float(np.percentile(self.ttft_s, 99)) if self.ttft_s else 0.0
+        return _pct(self.ttft_s, 99)
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    """Percentile guarded for tiny samples: with fewer than 2 observations a
+    percentile is not an estimate, it's the sample (or nothing)."""
+    if not xs:
+        return 0.0
+    if len(xs) < 2:
+        return float(xs[0])
+    return float(np.percentile(xs, q))
 
 
 class Scheduler:
@@ -95,40 +175,78 @@ class Scheduler:
         self.queue: List[tuple] = []
         self.running: Dict[int, Request] = {}   # slot -> request
         self.finished: List[Request] = []
+        self.dropped: List[Request] = []
         self._next_rid = 0
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None, *, priority: int = 0,
-               on_token: Optional[TokenCallback] = None) -> Request:
-        req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id, priority=priority,
-                      on_token=on_token, t_submit=time.monotonic())
+    def submit(self, gen: GenerationRequest) -> Request:
+        req = Request(self._next_rid, gen, t_submit=time.monotonic())
         self._next_rid += 1
         heapq.heappush(self.queue, (-req.priority, req.rid, req))
         return req
 
-    def peek_waiting(self) -> Optional[Request]:
-        return self.queue[0][2] if self.queue else None
+    def drop_expired(self, now: Optional[float] = None) -> List[Request]:
+        """Remove queued requests whose drop-deadline has passed. Returns the
+        dropped requests (the engine still owns their stream teardown)."""
+        if not any(req.expired(now or time.monotonic())
+                   for _, _, req in self.queue):
+            return []
+        now = now or time.monotonic()
+        kept, dropped = [], []
+        for entry in self.queue:
+            (dropped if entry[2].expired(now) else kept).append(entry)
+        heapq.heapify(kept)
+        self.queue = kept
+        out = []
+        for _, _, req in sorted(dropped, key=lambda e: e[1]):
+            req.finish_reason = FINISH_DROPPED
+            req.t_done = now
+            self.dropped.append(req)
+            out.append(req)
+        return out
 
-    def next_waiting(self) -> Optional[Request]:
-        return heapq.heappop(self.queue)[2] if self.queue else None
+    def peek_waiting(self, admissible: Optional[AdmitPredicate] = None
+                     ) -> Optional[Request]:
+        """Highest-priority waiting request, optionally skipping entries the
+        predicate rejects (e.g. a priority class over its token-rate budget)."""
+        if admissible is None:
+            return self.queue[0][2] if self.queue else None
+        for _, _, req in sorted(self.queue):
+            if admissible(req):
+                return req
+        return None
+
+    def next_waiting(self, admissible: Optional[AdmitPredicate] = None
+                     ) -> Optional[Request]:
+        if admissible is None:
+            return heapq.heappop(self.queue)[2] if self.queue else None
+        for entry in sorted(self.queue):
+            if admissible(entry[2]):
+                self.queue.remove(entry)
+                heapq.heapify(self.queue)
+                return entry[2]
+        return None
 
     def start(self, slot: int, req: Request) -> None:
         self.running[slot] = req
 
     def record_token(self, slot: int, token: int) -> None:
+        """Record one sampled (plaintext, in-domain) token. Egress/stream
+        callbacks are the engine's job — they happen at frame-flush time."""
         req = self.running[slot]
         now = time.monotonic()
         if not req.output:
             req.t_first_token = now
         req.output.append(int(token))
         req.token_times.append(now)
-        if req.on_token is not None:
-            req.on_token(req, int(token))
 
     def finish(self, slot: int) -> Request:
         req = self.running.pop(slot)
         req.t_done = time.monotonic()
+        if not req.finish_reason:
+            req.finish_reason = (
+                FINISH_STOP if (req.eos_id is not None and req.output
+                                and req.output[-1] == req.eos_id)
+                else FINISH_LENGTH)
         self.finished.append(req)
         return req
 
@@ -137,14 +255,17 @@ class Scheduler:
         return not self.queue and not self.running
 
     def stats(self) -> ServeStats:
-        return stats_from_requests(self.finished)
+        return stats_from_requests(self.finished + self.dropped)
 
 
 def stats_from_requests(reqs: List[Request]) -> ServeStats:
     """ServeStats over any set of finished requests (benchmarks measure a
-    warm wave this way, excluding an earlier compile-warmup wave)."""
+    warm wave this way, excluding an earlier compile-warmup wave). Dropped
+    requests count toward ``dropped_requests`` but contribute no tokens or
+    latency samples — they never produced any."""
     s = ServeStats()
-    done = [r for r in reqs if r.finished]
+    done = [r for r in reqs if r.finished and not r.dropped]
+    s.dropped_requests = sum(1 for r in reqs if r.dropped)
     if not done:
         return s
     t0 = min(r.t_submit for r in done)
@@ -153,6 +274,8 @@ def stats_from_requests(reqs: List[Request]) -> ServeStats:
     s.total_requests = len(done)
     for r in done:
         s.total_tokens += len(r.output)
+        s.preemptions += r.n_preemptions
+        s.deadline_misses += int(r.deadline_missed)
         s.ttft_s.append(r.t_first_token - r.t_submit)
         # inter-token gaps only: token_times[0] IS the first-token time, so
         # prepending t_first_token would inject a spurious 0.0 latency that

@@ -1,0 +1,403 @@
+"""Engine v3 request-object API: per-request SamplingParams, coalesced
+egress frames (FramePolicy), SLO admission (deadline drop, rate budgets),
+RequestOutput accounting, and the deprecation shim for the v2 kwargs API."""
+
+import math
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.models import build_model
+from repro.runtime import (FINISH_DROPPED, FINISH_LENGTH, FINISH_STOP, Engine,
+                           FramePolicy, GenerationRequest, RequestOutput,
+                           SamplingParams)
+from repro.runtime import sampling
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_len", 8)
+    return Engine(model, params, **kw)
+
+
+def gen(prompt=PROMPT, **kw):
+    return GenerationRequest(prompt=np.asarray(prompt, np.int32), **kw)
+
+
+class TestRequestObjects:
+    def test_generate_returns_request_output(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
+        out = eng.generate(gen(max_new_tokens=5))
+        assert isinstance(out, RequestOutput)
+        assert len(out.tokens) == 5
+        assert out.finish_reason == FINISH_LENGTH
+        assert out.ttft_s > 0 and out.e2e_s >= out.ttft_s
+        # boundary accounting: 1 ingress message, per-token frames by default
+        assert out.ingress_messages == 1
+        assert out.egress_frames == 5
+        assert out.egress_tokens == 5
+        assert not out.deadline_missed
+
+    def test_eos_finish_reason_is_stop(self, small_model):
+        cfg, model, params = small_model
+        ref = make_engine(model, params).generate(gen(max_new_tokens=6))
+        eng = make_engine(model, params)
+        out = eng.generate(gen(max_new_tokens=6, eos_id=ref.tokens[2]))
+        assert out.finish_reason == FINISH_STOP
+        assert out.tokens == ref.tokens[:3]
+
+    def test_request_object_matches_kwargs_shim(self, small_model):
+        """The shim and the object form must drive identical serving."""
+        cfg, model, params = small_model
+        new = make_engine(model, params).generate(gen(max_new_tokens=6))
+        with pytest.deprecated_call():
+            old = make_engine(model, params).generate(PROMPT, 6)
+        assert old == new.tokens        # legacy form returns the raw list
+
+    def test_kwargs_shim_warns_on_submit_and_stream(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        with pytest.deprecated_call():
+            req = eng.submit(PROMPT, 3)
+        eng.run()
+        assert len(req.output) == 3
+        with pytest.deprecated_call():
+            toks = list(eng.stream(PROMPT, max_new_tokens=3))
+        assert toks == req.output
+
+    def test_mixing_object_and_kwargs_rejected(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        with pytest.raises(TypeError, match="request object"):
+            eng.submit(gen(), max_new_tokens=5)
+        with pytest.raises(TypeError, match="request object"):
+            list(eng.stream(gen(), priority=3))
+
+    def test_validation_errors(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(gen(max_new_tokens=0))
+        with pytest.raises(ValueError, match="top_k"):
+            eng.submit(gen(params=SamplingParams(temperature=1.0,
+                                                 top_k=cfg.vocab_size)))
+        with pytest.raises(ValueError, match="coalesce"):
+            eng.submit(gen(frame=FramePolicy(coalesce=0)))
+        with pytest.raises(ValueError, match="on_deadline"):
+            eng.submit(gen(deadline_s=1.0, on_deadline="explode"))
+        with pytest.raises(ValueError, match="deadline_s"):
+            eng.submit(gen(deadline_s=-1.0))
+
+
+class TestPerRequestSampling:
+    def test_seeded_request_is_reproducible(self, small_model):
+        cfg, model, params = small_model
+        sp = SamplingParams(temperature=0.8, top_k=8, seed=123)
+        outs = [make_engine(model, params).generate(
+                    gen(max_new_tokens=8, params=sp)).tokens
+                for _ in range(2)]
+        assert outs[0] == outs[1]
+        assert len(outs[0]) == 8
+
+    def test_different_seeds_diverge(self, small_model):
+        """High temperature + different seeds should (overwhelmingly) give
+        different token sequences — i.e. sampling actually happens."""
+        cfg, model, params = small_model
+        outs = [make_engine(model, params).generate(
+                    gen(max_new_tokens=10,
+                        params=SamplingParams(temperature=5.0, seed=s))).tokens
+                for s in (1, 2, 3)]
+        assert len({tuple(o) for o in outs}) > 1
+
+    def test_greedy_and_sampled_coexist_in_one_batch(self, small_model):
+        """A sampled request in the batch must not perturb a greedy one."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params).generate(gen(max_new_tokens=6)).tokens
+        eng = make_engine(model, params, max_slots=2)
+        greedy_req = eng.submit(gen(max_new_tokens=6))
+        eng.submit(gen(np.full(8, 3, np.int32), max_new_tokens=6,
+                       params=SamplingParams(temperature=1.5, seed=7)))
+        eng.run()
+        assert greedy_req.output == ref
+
+    def test_seeded_output_identical_across_preemption(self, small_model):
+        """Acceptance: a seeded temperature>0 request reproduces
+        byte-identical output across a forced seal/restore preemption —
+        fold_in-per-token keys depend on (seed, index), not engine steps."""
+        cfg, model, params = small_model
+        sp = SamplingParams(temperature=0.9, top_k=16, seed=42)
+        ref = make_engine(model, params, max_slots=1).generate(
+            gen(max_new_tokens=10, params=sp)).tokens
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        low = eng.submit(gen(max_new_tokens=10, params=sp))
+        for _ in range(3):
+            eng.step()
+        # force a preemption mid-request with a high-priority interloper
+        eng.submit(gen(np.full(8, 7, np.int32), max_new_tokens=3, priority=9))
+        eng.run()
+        assert low.n_preemptions == 1
+        assert low.output == ref
+
+    def test_explicit_seal_restore_reproducible(self, small_model):
+        cfg, model, params = small_model
+        sp = SamplingParams(temperature=1.2, seed=5)
+        ref = make_engine(model, params, max_slots=1).generate(
+            gen(max_new_tokens=8, params=sp)).tokens
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        req = eng.submit(gen(max_new_tokens=8, params=sp))
+        for _ in range(3):
+            eng.step()
+        sealed, evicted = eng.seal_slot(0)
+        eng.restore_slot(sealed, evicted)
+        eng.run()
+        assert req.output == ref
+
+    def test_unseeded_sampled_request_gets_recorded_seed(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        out = eng.generate(gen(max_new_tokens=4,
+                               params=SamplingParams(temperature=1.0)))
+        assert out.seed is not None
+        # replaying with the recorded seed reproduces the output
+        replay = make_engine(model, params).generate(
+            gen(max_new_tokens=4,
+                params=SamplingParams(temperature=1.0, seed=out.seed)))
+        assert replay.tokens == out.tokens
+
+    def test_top_k_one_is_greedy(self, small_model):
+        """top_k=1 restricts the support to the argmax regardless of
+        temperature, so it must reproduce the greedy sequence."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params).generate(gen(max_new_tokens=6)).tokens
+        out = make_engine(model, params).generate(
+            gen(max_new_tokens=6,
+                params=SamplingParams(temperature=2.0, top_k=1, seed=0)))
+        assert out.tokens == ref
+
+
+class TestBatchedSamplingFn:
+    def test_sample_matches_temperature_per_row(self):
+        """sampling.sample with uniform state must agree with the scalar
+        temperature() path row-by-row (same fold_in(key, step) keys)."""
+        logits = jax.random.normal(jax.random.key(3), (4, 32))
+        base = jax.random.PRNGKey(11)
+        keys = np.stack([np.asarray(jax.random.fold_in(base, s))
+                         for s in range(4)]).astype(np.uint32)
+        state = sampling.SamplingState(
+            temp=np.full(4, 0.7, np.float32), top_k=np.full(4, 5, np.int32),
+            key=np.stack([np.asarray(base, np.uint32)] * 4),
+            step=np.arange(4, dtype=np.int32))
+        batched = sampling.sample(logits, state, kmax=8)
+        for row in range(4):
+            one = sampling.temperature(logits[row:row + 1],
+                                       keys[row], temp=0.7, top_k=5)
+            assert int(batched[row]) == int(one[0])
+
+    def test_sample_mixed_greedy_rows(self):
+        logits = jax.random.normal(jax.random.key(4), (3, 16))
+        state = sampling.SamplingState(
+            temp=np.asarray([0.0, 1.0, 0.0], np.float32),
+            top_k=np.zeros(3, np.int32),
+            key=np.stack([np.asarray(jax.random.PRNGKey(i), np.uint32)
+                          for i in range(3)]),
+            step=np.zeros(3, np.int32))
+        out = sampling.sample(logits, state, kmax=0)
+        g = sampling.greedy(logits)
+        assert int(out[0]) == int(g[0]) and int(out[2]) == int(g[2])
+
+    def test_sample_top_k_support(self):
+        logits = np.asarray([[10.0, 9.0, -5.0, -6.0]] * 32, np.float32)
+        state = sampling.SamplingState(
+            temp=np.full(32, 1.0, np.float32), top_k=np.full(32, 2, np.int32),
+            key=np.stack([np.asarray(jax.random.PRNGKey(i), np.uint32)
+                          for i in range(32)]),
+            step=np.zeros(32, np.int32))
+        toks = sampling.sample(jax.numpy.asarray(logits), state, kmax=2)
+        assert set(np.asarray(toks).tolist()) <= {0, 1}
+
+    def test_temperature_rejects_top_k_at_vocab(self):
+        logits = jax.random.normal(jax.random.key(0), (2, 8))
+        with pytest.raises(ValueError, match="top_k"):
+            sampling.temperature(logits, jax.random.PRNGKey(0), 1.0, top_k=8)
+        with pytest.raises(ValueError, match="top_k"):
+            sampling.temperature(logits, jax.random.PRNGKey(0), 1.0, top_k=9)
+
+
+class TestCoalescedEgress:
+    @pytest.mark.parametrize("coalesce", [1, 3, 4, 16])
+    def test_frames_are_ceil_tokens_over_n(self, small_model, coalesce):
+        """Acceptance: coalesce=N ⇒ ceil(tokens/N) frames, same tokens."""
+        cfg, model, params = small_model
+        n_tokens = 7
+        ref = make_engine(model, params).generate(
+            gen(max_new_tokens=n_tokens)).tokens
+        eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
+        out = eng.generate(gen(max_new_tokens=n_tokens,
+                               frame=FramePolicy(coalesce=coalesce)))
+        assert out.tokens == ref
+        want_frames = math.ceil(n_tokens / coalesce)
+        assert out.egress_frames == want_frames
+        assert out.egress_tokens == n_tokens
+        assert eng.td.channel.stats.messages_out == want_frames
+        assert eng.td.channel.stats.tokens_out == n_tokens
+
+    def test_coalesced_stream_yields_in_bursts(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
+        seen = []
+        it = eng.stream(gen(max_new_tokens=6, frame=FramePolicy(coalesce=3)))
+        toks = list(it)
+        assert len(toks) == 6
+        # two frames of 3 tokens each crossed the boundary
+        assert eng.td.channel.stats.messages_out == 2
+        assert eng.td.channel.stats.tokens_out == 6
+
+    def test_flush_on_finish_partial_frame(self, small_model):
+        """5 tokens at coalesce=4: one full frame + one flush-on-finish."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
+        out = eng.generate(gen(max_new_tokens=5, frame=FramePolicy(coalesce=4)))
+        assert out.egress_frames == 2
+        details = [e.detail for e in eng.td.audit if e.kind == "egress_frame"]
+        sizes = [int(d.split("n=")[1].split()[0]) for d in details]
+        assert sizes == [4, 1]
+
+    def test_coalesced_frames_still_replay_protected(self, small_model):
+        """Coalescing must not weaken the channel: frames stay sequenced
+        per stream and a replay is rejected."""
+        cfg, model, params = small_model
+        from repro.core.bounce import BounceBuffer
+        from repro.core.sealing import IntegrityError, SealingKey
+        bb = BounceBuffer(SealingKey.generate(b"coal"))
+        sid = bb.open_stream()
+        f0 = bb.device_send_frame(sid, np.arange(4, dtype=np.int32))
+        f1 = bb.device_send_frame(sid, np.arange(4, 8, dtype=np.int32))
+        assert bb.host_recv_frame(f0).tolist() == [0, 1, 2, 3]
+        with pytest.raises(IntegrityError):
+            bb.host_recv_frame(f0)          # verbatim replay of a coalesced frame
+        assert bb.host_recv_frame(f1).tolist() == [4, 5, 6, 7]
+        assert bb.stats.messages_out == 2 and bb.stats.tokens_out == 8
+        assert bb.stats.crossings_per_token == pytest.approx(0.25)
+
+    def test_coalescing_survives_preemption(self, small_model):
+        """A preempted request's partially-filled egress buffer travels with
+        it: tokens, frame count, and order are unchanged."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params, max_slots=1).generate(
+            gen(max_new_tokens=9)).tokens
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        low = eng.submit(gen(max_new_tokens=9, frame=FramePolicy(coalesce=4)))
+        for _ in range(2):
+            eng.step()
+        eng.submit(gen(np.full(8, 7, np.int32), max_new_tokens=2, priority=5))
+        eng.run()
+        assert low.n_preemptions == 1
+        assert low.output == ref
+        assert low.result().egress_frames == math.ceil(9 / 4)
+
+
+class TestSLO:
+    def test_deadline_drop_while_queued(self, small_model):
+        """A drop-policy request whose deadline passes in the queue is
+        dropped, counted, and never touches the device."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        keep = eng.submit(gen(max_new_tokens=6))
+        doomed = eng.submit(gen(np.full(8, 5, np.int32), max_new_tokens=6,
+                                deadline_s=0.01, on_deadline="drop"))
+        time.sleep(0.03)                    # deadline passes while queued
+        stats = eng.run()
+        assert keep.finished and not keep.dropped
+        assert doomed.dropped and doomed.output == []
+        assert doomed.result().finish_reason == FINISH_DROPPED
+        assert stats.dropped_requests == 1
+        assert stats.total_requests == 1    # dropped ≠ served
+        # the dropped request's egress stream was retired on the channel
+        assert doomed.stream_id not in eng.td.channel._stream_seq
+
+    def test_serve_policy_counts_deadline_miss(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        late = eng.submit(gen(max_new_tokens=5, deadline_s=1e-4))  # "serve"
+        stats = eng.run()
+        assert late.finished and not late.dropped
+        assert late.deadline_missed
+        assert stats.deadline_misses == 1
+        assert stats.dropped_requests == 0
+        assert late.result().deadline_missed
+
+    def test_rate_budget_throttles_class_without_starving_others(self, small_model):
+        """Priority 0 has a tiny token budget; after it is spent, priority-1
+        requests (unbudgeted) must still be admitted ahead of it."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=1,
+                          rate_budgets={0: 2.0})   # ~2 tokens/s for class 0
+        a = eng.submit(gen(max_new_tokens=4, priority=0))       # spends budget
+        b = eng.submit(gen(np.full(8, 3, np.int32), max_new_tokens=4,
+                           priority=0))                          # now blocked
+        c = eng.submit(gen(np.full(8, 5, np.int32), max_new_tokens=4,
+                           priority=1))                          # unthrottled
+        eng.run(max_steps=2000)
+        assert a.finished and b.finished and c.finished
+        # the throttled class-0 follower finished LAST even though it was
+        # submitted before the class-1 request
+        assert c.t_done < b.t_done
+
+    def test_rate_budget_eventually_serves(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params, rate_budgets={0: 50.0})
+        reqs = [eng.submit(gen(np.full(8, i + 1, np.int32), max_new_tokens=3))
+                for i in range(3)]
+        stats = eng.run(max_steps=20_000)
+        assert all(r.finished for r in reqs)
+        assert stats.total_requests == 3
+
+    def test_zero_rate_budget_rejected(self, small_model):
+        cfg, model, params = small_model
+        with pytest.raises(ValueError, match="rate budget"):
+            make_engine(model, params, rate_budgets={0: 0.0})
+
+
+class TestServeStatsV3:
+    def test_p50_and_guarded_percentiles(self):
+        from repro.runtime.scheduler import ServeStats, _pct
+        s = ServeStats()
+        assert s.p50_latency_s == 0.0 and s.p99_ttft_s == 0.0
+        assert _pct([], 99) == 0.0
+        assert _pct([0.25], 99) == 0.25     # <2 samples: the sample itself
+        s.latencies_s = [0.1, 0.2, 0.3, 0.4]
+        assert s.p50_latency_s == pytest.approx(0.25)
+        assert s.p99_latency_s <= 0.4
+
+    def test_stats_count_preemptions(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=1)
+        eng.submit(gen(max_new_tokens=8, priority=0))
+        for _ in range(2):
+            eng.step()
+        eng.submit(gen(np.full(8, 9, np.int32), max_new_tokens=2, priority=5))
+        stats = eng.run()
+        assert stats.preemptions == 1
+        assert stats.total_requests == 2
+        assert stats.p50_ttft_s > 0

@@ -9,9 +9,13 @@ from _hypo import given, settings, st
 from repro.configs import smoke_config
 from repro.core import TrustDomain
 from repro.models import build_model
-from repro.runtime import sampling
-from repro.runtime.engine import Engine
+from repro.runtime import Engine, GenerationRequest, sampling
 from repro.runtime.kvcache import SlotState
+
+
+def G(prompt, max_new_tokens=32, **kw):
+    return GenerationRequest(prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=max_new_tokens, **kw)
 
 
 @pytest.fixture(scope="module")
@@ -29,20 +33,20 @@ class TestEngine:
                    np.arange(9, 1, -1, dtype=np.int32),
                    np.full(8, 5, np.int32)]
         eng = Engine(model, params, max_slots=3, max_len=64, prefill_len=8)
-        reqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        reqs = [eng.submit(G(p, 5)) for p in prompts]
         eng.run()
         batched = [r.output for r in reqs]
         sequential = []
         for p in prompts:
             e = Engine(model, params, max_slots=1, max_len=64, prefill_len=8)
-            sequential.append(e.generate(p, 5))
+            sequential.append(e.generate(G(p, 5)).tokens)
         assert batched == sequential
 
     def test_continuous_refill(self, small_model):
         """More requests than slots: all finish, slots recycled."""
         cfg, model, params = small_model
         eng = Engine(model, params, max_slots=2, max_len=64, prefill_len=8)
-        reqs = [eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=3)
+        reqs = [eng.submit(G(np.full(8, i + 1, np.int32), 3))
                 for i in range(5)]
         stats = eng.run()
         assert stats.total_requests == 5
@@ -53,10 +57,10 @@ class TestEngine:
         cfg, model, params = small_model
         p = np.arange(2, 10, dtype=np.int32)
         plain = Engine(model, params, max_slots=1, max_len=64,
-                       prefill_len=8).generate(p, 5)
+                       prefill_len=8).generate(G(p, 5)).tokens
         conf_eng = Engine(model, params, max_slots=1, max_len=64, prefill_len=8,
                           trust_domain=TrustDomain("tdx"))
-        conf = conf_eng.generate(p, 5)
+        conf = conf_eng.generate(G(p, 5)).tokens
         assert plain == conf
         assert conf_eng.td.channel.stats.messages_in == 1
         # streaming egress: every sampled token leaves as its own frame
@@ -66,7 +70,7 @@ class TestEngine:
         cfg, model, params = small_model
         eng = Engine(model, params, max_slots=2, max_len=64, prefill_len=8)
         for i in range(3):
-            eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=4)
+            eng.submit(G(np.full(8, i + 1, np.int32), 4))
         stats = eng.run()
         assert stats.total_tokens == 12
         assert stats.throughput_tps > 0
@@ -134,11 +138,11 @@ class TestSealedPreemption:
         prompt = np.arange(1, 9, dtype=np.int32)
         # uninterrupted reference
         ref = Engine(model, params, max_slots=1, max_len=64,
-                     prefill_len=8).generate(prompt, 8)
+                     prefill_len=8).generate(G(prompt, 8)).tokens
         # interrupted run: 3 tokens, seal out, restore, finish
         eng = Engine(model, params, max_slots=1, max_len=64, prefill_len=8,
                      trust_domain=TrustDomain("tdx"))
-        req = eng.submit(prompt, max_new_tokens=8)
+        req = eng.submit(G(prompt, 8))
         for _ in range(3):
             eng.step()
         sealed, evicted = eng.seal_slot(0)
@@ -155,7 +159,7 @@ class TestSealedPreemption:
         from repro.core.sealing import IntegrityError
         eng = Engine(model, params, max_slots=1, max_len=64, prefill_len=8,
                      trust_domain=TrustDomain("tdx"))
-        req = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=6)
+        req = eng.submit(G(np.arange(1, 9, dtype=np.int32), 6))
         eng.step()
         sealed, evicted = eng.seal_slot(0)
         victim = next(iter(sealed.values()))

@@ -1,5 +1,7 @@
 """Engine v2 serving path: streaming frames, bucketed/chunked prefill,
-priority preemption, and the termination edges the v1 engine got wrong."""
+priority preemption, and the termination edges the v1 engine got wrong.
+(Migrated to the v3 request-object API; the deprecated kwargs shim has its
+own coverage in test_request_api.py.)"""
 
 import jax
 import numpy as np
@@ -10,7 +12,7 @@ from repro.core import TrustDomain
 from repro.core.bounce import BounceBuffer
 from repro.core.sealing import IntegrityError, SealingKey, _nonce_for
 from repro.models import build_model
-from repro.runtime.engine import Engine
+from repro.runtime import Engine, GenerationRequest
 
 
 @pytest.fixture(scope="module")
@@ -22,6 +24,12 @@ def small_model():
 
 
 PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def G(prompt, max_new_tokens=32, eos_id=None, priority=0, **kw):
+    return GenerationRequest(prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=max_new_tokens, eos_id=eos_id,
+                             priority=priority, **kw)
 
 
 def make_engine(model, params, **kw):
@@ -38,7 +46,7 @@ class TestTermination:
         at admission without a wasted decode step."""
         cfg, model, params = small_model
         eng = make_engine(model, params)
-        req = eng.submit(PROMPT, max_new_tokens=1)
+        req = eng.submit(G(PROMPT, 1))
         produced = eng.step()
         # the request finished inside admission: no decode tokens produced
         assert produced == 0
@@ -49,27 +57,27 @@ class TestTermination:
 
     def test_eos_as_first_token_stops_immediately(self, small_model):
         cfg, model, params = small_model
-        ref = make_engine(model, params).generate(PROMPT, 1)
+        ref = make_engine(model, params).generate(G(PROMPT, 1)).tokens
         eng = make_engine(model, params)
-        out = eng.generate(PROMPT, max_new_tokens=5, eos_id=ref[0])
-        assert out == ref
-        assert len(out) == 1
+        out = eng.generate(G(PROMPT, 5, eos_id=ref[0]))
+        assert out.tokens == ref
+        assert len(out.tokens) == 1
         assert eng.slots.num_active == 0
 
     def test_eos_mid_stream_stops(self, small_model):
         cfg, model, params = small_model
-        ref = make_engine(model, params).generate(PROMPT, 6)
+        ref = make_engine(model, params).generate(G(PROMPT, 6)).tokens
         eng = make_engine(model, params)
-        out = eng.generate(PROMPT, max_new_tokens=6, eos_id=ref[3])
-        assert out == ref[:4]
+        out = eng.generate(G(PROMPT, 6, eos_id=ref[3]))
+        assert out.tokens == ref[:4]
 
 
 class TestStreaming:
     def test_one_encrypted_frame_per_token(self, small_model):
         cfg, model, params = small_model
-        plain = make_engine(model, params).generate(PROMPT, 7)
+        plain = make_engine(model, params).generate(G(PROMPT, 7)).tokens
         eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
-        toks = list(eng.stream(PROMPT, max_new_tokens=7))
+        toks = list(eng.stream(G(PROMPT, 7)))
         assert toks == plain
         assert eng.td.channel.stats.messages_out == len(toks) == 7
         frames = [e for e in eng.td.audit if e.kind == "egress_frame"]
@@ -80,8 +88,8 @@ class TestStreaming:
         monotonically sequenced frames on each."""
         cfg, model, params = small_model
         eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
-        r0 = eng.submit(PROMPT, max_new_tokens=4)
-        r1 = eng.submit(PROMPT[::-1].copy(), max_new_tokens=4)
+        r0 = eng.submit(G(PROMPT, 4))
+        r1 = eng.submit(G(PROMPT[::-1].copy(), 4))
         eng.run()
         details = [e.detail for e in eng.td.audit if e.kind == "egress_frame"]
         assert r0.stream_id != r1.stream_id
@@ -98,9 +106,9 @@ class TestStreaming:
         td = TrustDomain("tdx")
         eng_a = make_engine(model, params, trust_domain=td)
         eng_b = make_engine(model, params, trust_domain=td)
-        ra = eng_a.submit(PROMPT, max_new_tokens=3)
+        ra = eng_a.submit(G(PROMPT, 3))
         eng_a.run()
-        rb = eng_b.submit(PROMPT, max_new_tokens=3)
+        rb = eng_b.submit(G(PROMPT, 3))
         eng_b.run()
         assert ra.rid == rb.rid == 0        # per-engine rids do collide
         assert ra.stream_id != rb.stream_id  # channel stream ids must not
@@ -118,7 +126,7 @@ class TestStreaming:
         sealed_names = set()
         for eng in (make_engine(model, params, trust_domain=td),
                     make_engine(model, params, trust_domain=td)):
-            req = eng.submit(PROMPT, max_new_tokens=6)
+            req = eng.submit(G(PROMPT, 6))
             eng.step()
             sealed, _ = eng.seal_slot(0)
             assert req.rid == 0
@@ -131,10 +139,10 @@ class TestStreaming:
         next(): a caller that run()s before iterating still gets it served."""
         cfg, model, params = small_model
         eng = make_engine(model, params)
-        gen = eng.stream(PROMPT, max_new_tokens=3)
+        it = eng.stream(G(PROMPT, 3))
         stats = eng.run()
         assert stats.total_requests == 1    # served by run(), not the iterator
-        assert list(gen) == eng.scheduler.finished[0].output
+        assert list(it) == eng.scheduler.finished[0].output
 
     def test_frame_nonce_uniqueness_and_replay_detection(self):
         key = SealingKey.generate(b"frames")
@@ -182,7 +190,7 @@ class TestBucketedPrefill:
         outs = []
         for buckets in [(4,), (16,)]:
             eng = make_engine(model, params, prefill_buckets=buckets)
-            req = eng.submit(prompt, max_new_tokens=5)
+            req = eng.submit(G(prompt, 5))
             eng.run()
             assert req.pending_input == []      # whole tail was consumed
             assert len(req.output) == 5
@@ -197,8 +205,8 @@ class TestBucketedPrefill:
         edited = base.copy()
         edited[0] = 37
         eng = make_engine(model, params, prefill_buckets=(8,), max_slots=2)
-        r0 = eng.submit(base, max_new_tokens=6)
-        r1 = eng.submit(edited, max_new_tokens=6)
+        r0 = eng.submit(G(base, 6))
+        r1 = eng.submit(G(edited, 6))
         eng.run()
         assert r0.output != r1.output
 
@@ -212,26 +220,26 @@ class TestBucketedPrefill:
                    np.arange(5, 25, dtype=np.int32)]       # bucket 16 + tail
         buckets = (4, 16)
         eng = make_engine(model, params, max_slots=4, prefill_buckets=buckets)
-        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        reqs = [eng.submit(G(p, 4)) for p in prompts]
         eng.run()
         for p, r in zip(prompts, reqs):
             solo = make_engine(model, params, max_slots=1,
                                prefill_buckets=buckets, batch_prefill=False)
-            assert r.output == solo.generate(p, 4)
+            assert r.output == solo.generate(G(p, 4)).tokens
 
 
 class TestPriorityPreemption:
     def test_high_priority_preempts_and_victim_resumes_identically(self, small_model):
         cfg, model, params = small_model
-        ref = make_engine(model, params, max_slots=1).generate(PROMPT, 10)
+        ref = make_engine(model, params, max_slots=1).generate(G(PROMPT, 10)).tokens
         eng = make_engine(model, params, max_slots=1,
                           trust_domain=TrustDomain("tdx"))
-        low = eng.submit(PROMPT, max_new_tokens=10, priority=0)
+        low = eng.submit(G(PROMPT, 10, priority=0))
         for _ in range(3):
             eng.step()
         # step 1 = admission (prefill token) + decode token, then 1/step
         assert len(low.output) == 4
-        high = eng.submit(np.full(8, 7, np.int32), max_new_tokens=4, priority=5)
+        high = eng.submit(G(np.full(8, 7, np.int32), 4, priority=5))
         eng.run()
         assert high.finished and low.finished
         assert high.t_done <= low.t_done
@@ -246,12 +254,12 @@ class TestPriorityPreemption:
         cfg, model, params = small_model
         prompt = np.arange(1, 21, dtype=np.int32)
         ref_eng = make_engine(model, params, max_slots=1, prefill_buckets=(8,))
-        ref = ref_eng.generate(prompt, 5)
+        ref = ref_eng.generate(G(prompt, 5)).tokens
         eng = make_engine(model, params, max_slots=1, prefill_buckets=(8,))
-        low = eng.submit(prompt, max_new_tokens=5, priority=0)
+        low = eng.submit(G(prompt, 5, priority=0))
         eng.step()                      # prefill 8, feed 1 tail token
         assert low.pending_input        # still consuming the prompt
-        high = eng.submit(PROMPT, max_new_tokens=2, priority=9)
+        high = eng.submit(G(PROMPT, 2, priority=9))
         eng.run()
         assert low.output == ref
         assert high.finished
@@ -260,13 +268,13 @@ class TestPriorityPreemption:
         """A request sealed twice holds different KV each time; the sealed
         tensor names (which derive the ChaCha20 nonces) must differ."""
         cfg, model, params = small_model
-        ref = make_engine(model, params, max_slots=1).generate(PROMPT, 8)
+        ref = make_engine(model, params, max_slots=1).generate(G(PROMPT, 8)).tokens
         eng = make_engine(model, params, max_slots=1)
-        low = eng.submit(PROMPT, max_new_tokens=8, priority=0)
+        low = eng.submit(G(PROMPT, 8, priority=0))
         eng.step()
-        eng.submit(np.full(8, 2, np.int32), max_new_tokens=1, priority=5)
+        eng.submit(G(np.full(8, 2, np.int32), 1, priority=5))
         eng.step()                      # preempt #1 (+ restore on finish)
-        eng.submit(np.full(8, 4, np.int32), max_new_tokens=1, priority=5)
+        eng.submit(G(np.full(8, 4, np.int32), 1, priority=5))
         eng.run()
         assert low.n_preemptions == 2
         assert low.seal_epoch == 2      # two distinct nonce namespaces
@@ -279,14 +287,14 @@ class TestPriorityPreemption:
         eng = make_engine(model, params, max_len=32, prefill_buckets=(8,),
                           trust_domain=TrustDomain("tdx"))
         with pytest.raises(ValueError, match="KV positions"):
-            eng.submit(np.arange(1, 41, dtype=np.int32), max_new_tokens=4)
+            eng.submit(G(np.arange(1, 41, dtype=np.int32), 4))
         with pytest.raises(ValueError, match="KV positions"):
-            eng.submit(PROMPT, max_new_tokens=30)
+            eng.submit(G(PROMPT, 30))
         # rejected requests never crossed the boundary: stats stay exact
         assert eng.td.channel.stats.messages_in == 0
         with pytest.raises(ValueError, match="max_new_tokens"):
-            eng.submit(PROMPT, max_new_tokens=0)
-        assert eng.generate(PROMPT, 4)  # in-budget requests still serve
+            eng.submit(G(PROMPT, 0))
+        assert eng.generate(G(PROMPT, 4)).tokens  # in-budget requests still serve
 
     def test_prompt_budget_is_submit_boundary(self, small_model):
         """prompt_budget accounts for bucket padding: a budget-length prompt
@@ -297,9 +305,9 @@ class TestPriorityPreemption:
                               prefill_buckets=buckets)
             budget = eng.prompt_budget(mnt)
             assert budget > 0
-            eng.submit(np.ones(budget, np.int32), mnt)        # accepted
+            eng.submit(G(np.ones(budget, np.int32), mnt))     # accepted
             with pytest.raises(ValueError, match="KV positions"):
-                eng.submit(np.ones(budget + 1, np.int32), mnt)
+                eng.submit(G(np.ones(budget + 1, np.int32), mnt))
         # no bucket fits: budget is 0 (engine cannot serve that request)
         eng = make_engine(model, params, max_len=32, prefill_buckets=(16,))
         assert eng.prompt_budget(30) == 0
@@ -308,7 +316,7 @@ class TestPriorityPreemption:
         cfg, model, params = small_model
         eng = make_engine(model, params, trust_domain=TrustDomain("tdx"))
         for i in range(3):
-            eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=3)
+            eng.submit(G(np.full(8, i + 1, np.int32), 3))
         eng.run()
         # per-stream seq state is dropped as each request finishes
         assert eng.td.channel._stream_seq == {}
@@ -317,9 +325,9 @@ class TestPriorityPreemption:
     def test_equal_priority_never_preempts(self, small_model):
         cfg, model, params = small_model
         eng = make_engine(model, params, max_slots=1)
-        a = eng.submit(PROMPT, max_new_tokens=4, priority=1)
+        a = eng.submit(G(PROMPT, 4, priority=1))
         eng.step()
-        b = eng.submit(np.full(8, 3, np.int32), max_new_tokens=4, priority=1)
+        b = eng.submit(G(np.full(8, 3, np.int32), 4, priority=1))
         eng.run()
         assert a.n_preemptions == 0
         assert a.t_done <= b.t_done     # FIFO within a priority level
@@ -328,7 +336,7 @@ class TestPriorityPreemption:
         cfg, model, params = small_model
         eng = make_engine(model, params)
         for i in range(3):
-            eng.submit(np.full(8, i + 1, np.int32), max_new_tokens=3)
+            eng.submit(G(np.full(8, i + 1, np.int32), 3))
         stats = eng.run()
         assert len(stats.ttft_s) == 3
         assert stats.mean_ttft_s > 0
