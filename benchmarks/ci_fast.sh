@@ -13,6 +13,13 @@ python -m pytest -q -m "not slow"
 
 python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
     --requests 1 --max-new-tokens 4 --prefill-buckets 8,16 \
-    --coalesce 2 --sample-temp 0.7 --top-k 8 --seed 0
+    --coalesce 2 --sample-temp 0.7 --top-k 8 --top-p 0.9 --seed 0
+
+# paged-backend smoke: page-granular admission + sealed preemption under a
+# priority mix, through the same seal -> attest -> serve pipeline
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
+    --requests 4 --max-new-tokens 4 --prefill-buckets 8,16 --slots 2 \
+    --priority-mix 0:3,5:1 --kv-backend paged --page-size 8 --seed 1 \
+    --sample-temp 0.7
 
 echo "ci_fast OK"

@@ -1,5 +1,7 @@
 """Serving benchmark: v1-style static prefill vs v2 bucketed batched prefill,
-plus the v3 frame-coalescing sweep (Insight-10 fixed-cost amortization).
+the v3 frame-coalescing sweep (Insight-10 fixed-cost amortization), and the
+v4 slot-dense vs paged KV-backend sweep under a long-context mix with forced
+preemption (sealed bytes ∝ tokens used, not capacity reserved).
 
 Measures the paper's two user-perceived serving metrics (§III-C) —
 throughput (tokens/s) and next-token latency — plus time-to-first-token and
@@ -20,6 +22,14 @@ observation that cGPU overhead is fixed-cost-per-crossing dominated. The
 modeled column prices each point with the cgpu profile's
 ``fixed_boundary_s``.
 
+The KV-backend sweep (``--kv-backend both``, the default) serves a
+long-context seeded-sampling mix on the slot-dense and the paged backend,
+forcing sealed-KV preemptions with a late high-priority wave. It asserts
+byte-identical outputs between the backends and strictly fewer sealed
+bytes per preemption for paged — the Insight-10 claim that what crosses
+the boundary (pages actually holding tokens vs a whole max_len slot) is
+the lever.
+
     PYTHONPATH=src:. python benchmarks/serve_bench.py [--requests 12] [--tee tdx]
 """
 
@@ -34,7 +44,7 @@ from benchmarks.common import build_bench_model
 from repro.core import TrustDomain
 from repro.core.overheads import PROFILES
 from repro.runtime import (Engine, FramePolicy, GenerationRequest,
-                           stats_from_requests)
+                           SamplingParams, stats_from_requests)
 
 
 def make_workload(n: int, vocab: int, seed: int = 7):
@@ -116,6 +126,81 @@ def coalesce_sweep(model, params, prompts, *, max_new_tokens: int, tee: str,
           f"crossings/token {' >= '.join(f'{c:.3f}' for c in curve)}")
 
 
+def kv_backend_sweep(model, params, vocab, *, tee: str, max_slots: int,
+                     requests: int, page_size: int, backends=("slot", "paged")):
+    """Slot-dense vs paged under a long-context mix with forced preemption.
+
+    Identical seeded workload per backend: a low-priority wave fills every
+    slot, then a high-priority wave arrives and preempts (sealed-KV
+    eviction) before the victims restore and finish. Asserts byte-identical
+    outputs across backends and strictly fewer sealed bytes per preemption
+    for paged (it moves ceil(tokens/page_size) pages, not max_len)."""
+    max_len = 256
+    rng = np.random.default_rng(11)
+    lens = rng.integers(24, 200, size=requests)
+    prompts = [rng.integers(1, vocab, size=int(l)).astype(np.int32)
+               for l in lens]
+    print(f"\nKV-backend sweep ({' vs '.join(backends)}, tee={tee}, "
+          f"page_size={page_size}): {requests} low-prio + "
+          f"{max_slots} high-prio requests, prompt lens "
+          f"{lens.min()}-{lens.max()}, max_len={max_len}")
+
+    results = {}
+    for backend in backends:
+        td = TrustDomain(tee)
+        eng = Engine(model, params, max_slots=max_slots, max_len=max_len,
+                     trust_domain=td, prefill_buckets=(32, 64, 128),
+                     kv_backend=backend, page_size=page_size)
+        # warmup wave: pay every (rows, bucket) compile before timing
+        for p in prompts[:max_slots]:
+            eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+        eng.run(max_steps=100_000)
+        td.channel.stats.reset()
+
+        t0 = time.monotonic()
+        low = [eng.submit(GenerationRequest(
+                   prompt=p, max_new_tokens=24, priority=0,
+                   params=SamplingParams(temperature=0.8, top_k=32, seed=i)))
+               for i, p in enumerate(prompts)]
+        for _ in range(4):          # let the low wave claim slots + decode
+            eng.step()
+        high = [eng.submit(GenerationRequest(
+                    prompt=prompts[i % len(prompts)][:48],
+                    max_new_tokens=12, priority=5,
+                    params=SamplingParams(temperature=0.8, top_k=32,
+                                          seed=1000 + i)))
+                for i in range(max_slots)]
+        eng.run(max_steps=200_000)
+        wall = time.monotonic() - t0
+        assert all(r.finished for r in low + high)
+        stats = stats_from_requests(low + high)
+        ch = td.channel.stats
+        per_seal = ch.seal_bytes_per_event
+        print(f"  {backend:5s} {stats.total_tokens:6d} tok  {wall:6.2f}s  "
+              f"{stats.throughput_tps:8.1f} tok/s  "
+              f"TTFT mean {stats.mean_ttft_s * 1e3:7.1f}ms  "
+              f"preempt {stats.preemptions:2d}  "
+              f"sealed {ch.seal_bytes:8d}B ({per_seal:9.0f} B/seal)  "
+              f"crossings {ch.messages_in + ch.messages_out}")
+        results[backend] = dict(
+            outputs=[r.output for r in low + high],
+            preemptions=stats.preemptions, per_seal=per_seal, stats=stats)
+
+    if len(backends) == 2:
+        a, b = (results[k] for k in backends)
+        assert a["outputs"] == b["outputs"], \
+            "KV backends must produce byte-identical outputs"
+        assert a["preemptions"] > 0 and b["preemptions"] > 0, \
+            "the sweep must actually exercise sealed preemption"
+        assert results["paged"]["per_seal"] < results["slot"]["per_seal"], \
+            (f"paged must seal strictly fewer bytes per preemption "
+             f"(paged {results['paged']['per_seal']:.0f} vs "
+             f"slot {results['slot']['per_seal']:.0f})")
+        ratio = results["slot"]["per_seal"] / results["paged"]["per_seal"]
+        print(f"KV sweep OK: identical tokens under preemption; paged seals "
+              f"{ratio:.1f}x fewer bytes per eviction")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -127,6 +212,12 @@ def main():
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--skip-sweep", action="store_true",
                     help="only run the v1/v2 comparison")
+    ap.add_argument("--kv-backend", default="both",
+                    choices=["both", "slot", "paged", "none"],
+                    help="KV-backend sweep selection ('both' compares and "
+                         "asserts; 'none' skips)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-backend page size for the KV sweep")
     args = ap.parse_args()
 
     cfg, model, params = build_bench_model(d_model=args.d_model,
@@ -146,6 +237,13 @@ def main():
         sweep_tee = args.tee if args.tee != "none" else "cgpu"
         coalesce_sweep(model, params, prompts, tee=sweep_tee, **{
             k: v for k, v in common.items() if k != "tee"})
+    if args.kv_backend != "none":
+        backends = (("slot", "paged") if args.kv_backend == "both"
+                    else (args.kv_backend,))
+        kv_backend_sweep(model, params, cfg.vocab_size,
+                         tee=args.tee if args.tee != "none" else "cgpu",
+                         max_slots=args.max_slots, requests=args.requests,
+                         page_size=args.page_size, backends=backends)
 
 
 if __name__ == "__main__":

@@ -1,37 +1,46 @@
 """End-to-end confidential serving driver (the paper's measured scenario).
 
 Loads a small model from a sealed checkpoint, attests, then serves a stream
-of batched requests with continuous batching — engine v3 on the
-request-object API: bucketed batched prefill (no prompt truncation),
-priority admission with sealed-KV preemption, per-request sampling, and
-streaming egress whose frame granularity is a per-request policy.
+of batched requests with continuous batching — the request-object API over
+a pluggable KV backend: bucketed batched prefill (no prompt truncation),
+priority admission with sealed-KV preemption (page-granular on the paged
+backend), per-request sampling, and streaming egress whose frame
+granularity is a per-request policy.
 
 API in one glance (``repro.runtime``)::
 
     from repro.runtime import (Engine, GenerationRequest, SamplingParams,
                                FramePolicy, RequestOutput)
 
+    engine = Engine(model, params, trust_domain=td,
+                    kv_backend="paged", page_size=16)  # or "slot" (dense);
+                                                     #  paged = page-charged
+                                                     #  admission + per-page
+                                                     #  sealed preemption
     req = engine.submit(GenerationRequest(
         prompt=tok.encode("confidential inference"),
         max_new_tokens=32,
         priority=5,                                  # preempts lower classes
         params=SamplingParams(temperature=0.8,       # 0.0 = greedy default
-                              top_k=40, seed=7),     # seeded => reproducible,
+                              top_k=40, top_p=0.9,   # nucleus: 1.0 = off
+                              seed=7),               # seeded => reproducible,
                                                      #  even across preemption
         frame=FramePolicy(coalesce=4),               # 4 tokens per encrypted
                                                      #  egress frame (Insight 10)
-        deadline_s=2.0, on_deadline="drop"))         # SLO: drop if still
-                                                     #  queued at +2s
+        deadline_s=2.0, on_deadline="abort"))        # SLO: "drop" (queued
+                                                     #  only) or "abort"
+                                                     #  (mid-flight too)
     engine.run()
     out: RequestOutput = req.result()
-    out.tokens, out.finish_reason        # "length" | "stop" | "dropped"
+    out.tokens, out.finish_reason        # "length"|"stop"|"dropped"|"aborted"
     out.ttft_s, out.e2e_s                # per-request timing
     out.egress_frames, out.egress_tokens # boundary crossings this request paid
+    out.sealed_bytes                     # eviction ciphertext it cost
 
 ``engine.stream(request)`` yields tokens as they cross the trust boundary
 (in bursts of ``coalesce``); ``engine.run()`` returns ``ServeStats`` with
 p50/mean/p99 latency + TTFT and the SLO counters (dropped_requests,
-deadline_misses, preemptions).
+aborted_requests, deadline_misses, preemptions, sealed_bytes).
 
 Reports the paper's user-perceived metrics (throughput, next-token latency,
 TTFT) plus the modeled overhead of running the same deployment on each TEE

@@ -33,15 +33,28 @@ class ChannelStats:
     bytes_in: int = 0
     bytes_out: int = 0
     tokens_out: int = 0
+    # sealed-KV traffic (preemption evictions/restores): ciphertext that
+    # leaves/re-enters the domain outside the token channel. Counted apart
+    # from messages so crossings_per_token stays a pure egress metric.
+    seal_events: int = 0
+    seal_bytes: int = 0
+    restore_events: int = 0
+    restore_bytes: int = 0
 
     @property
     def crossings_per_token(self) -> float:
         return self.messages_out / self.tokens_out if self.tokens_out else 0.0
 
+    @property
+    def seal_bytes_per_event(self) -> float:
+        return self.seal_bytes / self.seal_events if self.seal_events else 0.0
+
     def reset(self):
         self.messages_in = self.messages_out = 0
         self.bytes_in = self.bytes_out = 0
         self.tokens_out = 0
+        self.seal_events = self.seal_bytes = 0
+        self.restore_events = self.restore_bytes = 0
 
 
 @dataclasses.dataclass

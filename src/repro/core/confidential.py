@@ -134,6 +134,19 @@ class TrustDomain:
         """Single-token convenience wrapper over :meth:`egress_tokens`."""
         return self.egress_tokens(stream_id, [token])[0]
 
+    def record_seal(self, n_bytes: int, n_tensors: int, detail: str = "") -> None:
+        """Account one sealed-KV eviction: ``n_bytes`` of ciphertext left the
+        domain (page-granular backends move far less of it than whole-slot
+        ones — the measurable difference serve_bench reports)."""
+        self.channel.stats.seal_events += 1
+        self.channel.stats.seal_bytes += int(n_bytes)
+        self._log("seal_kv", f"{n_tensors} tensors {n_bytes}B {detail}".strip())
+
+    def record_restore(self, n_bytes: int, n_tensors: int, detail: str = "") -> None:
+        self.channel.stats.restore_events += 1
+        self.channel.stats.restore_bytes += int(n_bytes)
+        self._log("restore_kv", f"{n_tensors} tensors {n_bytes}B {detail}".strip())
+
     def open_stream(self) -> int:
         """Allocate a never-reused egress stream id (see BounceBuffer)."""
         return self.channel.open_stream()

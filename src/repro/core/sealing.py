@@ -123,6 +123,12 @@ def unseal_tree(key: SealingKey, sealed: Dict[str, SealedTensor],
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def sealed_nbytes(sealed: Dict[str, SealedTensor]) -> int:
+    """Total plaintext bytes a sealed dict carries (the boundary-crossing
+    payload a preemption moves; headers/MACs excluded for comparability)."""
+    return sum(st.n_bytes for st in sealed.values())
+
+
 def tree_digest(sealed: Dict[str, SealedTensor]) -> str:
     """Stable digest over all MACs — bound into the attestation measurement."""
     h = hashlib.sha256()

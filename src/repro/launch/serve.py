@@ -4,15 +4,18 @@ registered architecture, on the v3 request-object API.
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --smoke \
         --tee tdx --requests 8 --max-new-tokens 16 \
         --prefill-buckets 8,16,32 --priority-mix 0:3,5:1 \
-        --coalesce 4 --sample-temp 0.8 --top-k 40 --seed 7
+        --coalesce 4 --sample-temp 0.8 --top-k 40 --top-p 0.9 --seed 7 \
+        --kv-backend paged --page-size 16
 
 The full (non-smoke) configs are the production path (TPU slice); smoke
 configs serve on CPU. With a confidential mode the launcher performs the
 whole paper pipeline: seal -> attest -> key release -> encrypted serving.
 ``--coalesce N`` packs N tokens per encrypted egress frame (Insight-10
-fixed-cost amortization); ``--sample-temp/--top-k/--seed`` turn on seeded
-per-request sampling; ``--priority-mix`` assigns weighted priorities so the
-sealed-KV preemption path is exercised under load.
+fixed-cost amortization); ``--sample-temp/--top-k/--top-p/--seed`` turn on
+seeded per-request sampling; ``--priority-mix`` assigns weighted priorities
+so the sealed-KV preemption path is exercised under load. ``--kv-backend
+paged`` swaps the dense slot cache for the page-pool layout (page-granular
+admission and sealing; see repro.runtime.kvcache for the selection guide).
 """
 
 from __future__ import annotations
@@ -77,8 +80,16 @@ def main():
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the top-k logits (0 = all)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling threshold (1.0 = off)")
     ap.add_argument("--seed", type=int, default=None,
                     help="sampling seed (reproducible per-request streams)")
+    ap.add_argument("--kv-backend", default="slot", choices=["slot", "paged"],
+                    help="KV layout: dense slots or page pool + page table")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged backend)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size in pages (default: dense-equivalent)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -99,7 +110,9 @@ def main():
 
     engine = Engine(model, params, max_slots=args.slots, max_len=args.max_len,
                     prefill_len=args.prefill_len,
-                    prefill_buckets=args.prefill_buckets, trust_domain=td)
+                    prefill_buckets=args.prefill_buckets, trust_domain=td,
+                    kv_backend=args.kv_backend, page_size=args.page_size,
+                    num_pages=args.num_pages)
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
     for i in range(args.requests):
@@ -110,6 +123,7 @@ def main():
             prios, weights = args.priority_mix
             priority = int(rng.choice(prios, p=weights))
         sp = SamplingParams(temperature=args.sample_temp, top_k=args.top_k,
+                            top_p=args.top_p,
                             seed=None if args.seed is None else args.seed + i)
         engine.submit(GenerationRequest(
             prompt=prompt, max_new_tokens=args.max_new_tokens,
@@ -119,17 +133,24 @@ def main():
     wall = time.monotonic() - t0
 
     print(f"served {stats.total_requests} requests / {stats.total_tokens} "
-          f"tokens in {wall:.2f}s")
+          f"tokens in {wall:.2f}s [kv={args.kv_backend}]")
     print(f"throughput {stats.throughput_tps:.1f} tok/s | next-token latency "
           f"p50 {stats.p50_latency_s * 1e3:.1f}ms "
           f"mean {stats.mean_latency_s * 1e3:.1f}ms "
           f"p99 {stats.p99_latency_s * 1e3:.1f}ms")
-    if stats.preemptions or stats.dropped_requests or stats.deadline_misses:
+    if (stats.preemptions or stats.dropped_requests or stats.deadline_misses
+            or stats.aborted_requests):
         print(f"SLO: {stats.preemptions} preemptions, "
               f"{stats.dropped_requests} dropped, "
+              f"{stats.aborted_requests} aborted, "
               f"{stats.deadline_misses} deadline misses")
+    ch = td.channel.stats
+    if ch.seal_events:
+        print(f"sealed-KV traffic: {ch.seal_events} evictions / "
+              f"{ch.seal_bytes} B out ({ch.seal_bytes_per_event:.0f} B/seal), "
+              f"{ch.restore_events} restores / {ch.restore_bytes} B back "
+              f"[kv={args.kv_backend}]")
     if td.confidential:
-        ch = td.channel.stats
         print(f"boundary: {ch}")
         print(f"frame coalescing: {ch.messages_out} egress frames / "
               f"{ch.tokens_out} tokens = "

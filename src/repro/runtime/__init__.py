@@ -1,4 +1,7 @@
-"""Serving runtime: the request-object API, engine, scheduler, sampling.
+"""Serving runtime: request-object API, engine, KV backends, scheduler,
+sampling. The KV layout is pluggable — ``Engine(kv_backend="slot"|"paged")``
+picks between the dense slot cache and the paged pool (see
+:mod:`repro.runtime.kvcache` for the selection guide).
 
 Typical use::
 
@@ -11,15 +14,18 @@ Typical use::
     out = req.result()          # RequestOutput
 """
 
-from repro.runtime.api import (FINISH_DROPPED, FINISH_LENGTH, FINISH_STOP,
-                               FramePolicy, GenerationRequest, RequestOutput,
-                               SamplingParams)
+from repro.runtime.api import (FINISH_ABORTED, FINISH_DROPPED, FINISH_LENGTH,
+                               FINISH_STOP, FramePolicy, GenerationRequest,
+                               RequestOutput, SamplingParams)
 from repro.runtime.engine import Engine
+from repro.runtime.kvcache import (KVBackend, SlotDenseBackend, SlotState,
+                                   make_backend)
 from repro.runtime.scheduler import (Request, Scheduler, ServeStats,
                                      stats_from_requests)
 
 __all__ = [
-    "FINISH_DROPPED", "FINISH_LENGTH", "FINISH_STOP",
+    "FINISH_ABORTED", "FINISH_DROPPED", "FINISH_LENGTH", "FINISH_STOP",
     "FramePolicy", "GenerationRequest", "RequestOutput", "SamplingParams",
-    "Engine", "Request", "Scheduler", "ServeStats", "stats_from_requests",
+    "Engine", "KVBackend", "SlotDenseBackend", "SlotState", "make_backend",
+    "Request", "Scheduler", "ServeStats", "stats_from_requests",
 ]

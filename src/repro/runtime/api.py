@@ -36,6 +36,7 @@ TokenCallback = Callable[["object", int], None]
 FINISH_LENGTH = "length"     # hit max_new_tokens
 FINISH_STOP = "stop"         # emitted eos_id
 FINISH_DROPPED = "dropped"   # deadline passed while queued (on_deadline="drop")
+FINISH_ABORTED = "aborted"   # deadline passed mid-flight (on_deadline="abort")
 
 
 @dataclasses.dataclass
@@ -46,7 +47,10 @@ class SamplingParams:
     v2). With ``temperature > 0`` the engine samples from the scaled
     distribution, optionally restricted to the ``top_k`` highest logits
     (``top_k=0`` = unrestricted; ``top_k`` must be < vocab_size — use 0
-    instead of the degenerate full-vocab restriction).
+    instead of the degenerate full-vocab restriction) and/or to the nucleus
+    of tokens whose cumulative probability reaches ``top_p``
+    (``top_p=1.0`` = off). ``top_k`` and ``top_p`` compose: the support is
+    the intersection of both restrictions.
 
     ``seed`` makes the request reproducible: the engine derives one PRNG key
     from it and ``fold_in``s the output-token index at every step, so the
@@ -57,6 +61,7 @@ class SamplingParams:
     """
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
     seed: Optional[int] = None
 
     def validate(self, vocab_size: int) -> None:
@@ -68,6 +73,10 @@ class SamplingParams:
             raise ValueError(
                 f"top_k={self.top_k} must be < vocab_size={vocab_size}; "
                 f"use top_k=0 for an unrestricted distribution")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}; "
+                f"use top_p=1.0 for an unrestricted distribution")
 
     @property
     def is_greedy(self) -> bool:
@@ -99,8 +108,14 @@ class GenerationRequest:
     SLO fields: ``deadline_s`` is relative to submit time. With
     ``on_deadline="drop"`` the scheduler removes the request if the deadline
     passes while it is still queued (counted in ``ServeStats.dropped_requests``;
-    its :class:`RequestOutput` carries ``finish_reason="dropped"``). With the
-    default ``"serve"`` it is served anyway and a late finish is counted in
+    its :class:`RequestOutput` carries ``finish_reason="dropped"``). With
+    ``on_deadline="abort"`` the deadline is enforced *mid-flight* too: a
+    running request past its deadline is terminated at the next engine step
+    (partial tokens delivered, ``finish_reason="aborted"``), and a sealed-out
+    (preempted) request past its deadline is discarded instead of restored —
+    bounding the tail latency its slot-mates would otherwise pay. Both count
+    in ``ServeStats.deadline_misses``. With the default ``"serve"`` it is
+    served anyway and a late finish is counted in
     ``ServeStats.deadline_misses``. Requests are single-use: submit a fresh
     object per call.
     """
@@ -111,7 +126,7 @@ class GenerationRequest:
     params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     frame: FramePolicy = dataclasses.field(default_factory=FramePolicy)
     deadline_s: Optional[float] = None
-    on_deadline: str = "serve"         # "serve" | "drop"
+    on_deadline: str = "serve"         # "serve" | "drop" | "abort"
     on_token: Optional[TokenCallback] = None
 
     def __post_init__(self):
@@ -123,9 +138,9 @@ class GenerationRequest:
             # asked for zero would still emit (and egress) it.
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
-        if self.on_deadline not in ("serve", "drop"):
-            raise ValueError(
-                f"on_deadline must be 'serve' or 'drop', got {self.on_deadline!r}")
+        if self.on_deadline not in ("serve", "drop", "abort"):
+            raise ValueError(f"on_deadline must be 'serve', 'drop' or "
+                             f"'abort', got {self.on_deadline!r}")
         if self.deadline_s is not None and self.deadline_s <= 0:
             raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
         self.params.validate(vocab_size)
@@ -149,6 +164,7 @@ class RequestOutput:
     ttft_s: float = 0.0
     e2e_s: float = 0.0
     n_preemptions: int = 0
+    sealed_bytes: int = 0
     deadline_missed: bool = False
     ingress_messages: int = 0
     egress_frames: int = 0
@@ -168,6 +184,7 @@ class RequestOutput:
             ttft_s=(req.t_first_token - req.t_submit) if req.output else 0.0,
             e2e_s=req.t_done - req.t_submit,
             n_preemptions=req.n_preemptions,
+            sealed_bytes=req.sealed_bytes,
             deadline_missed=req.deadline_missed,    # one source: the Request
             ingress_messages=req.ingress_messages,
             egress_frames=req.egress_frames,

@@ -1,46 +1,45 @@
-"""Inference engine v3: request objects, per-request sampling, coalesced
-egress, SLO admission — on v2's streaming/bucketed-prefill/preemption core.
+"""Inference engine v4: pluggable KV backends behind the v3 request API.
 
 Dataflow per paper Fig 2's protected stack:
   prompt --(encrypted bounce buffer)--> bucketed batched prefill(slots)
   --> batched decode loop --> sampled tokens --(encrypted frames through the
   bounce buffer, 1..N tokens each per the request's FramePolicy)--> client.
 
-The serving API is the request-object model in :mod:`repro.runtime.api`:
+The serving API is the request-object model in :mod:`repro.runtime.api`
+(engine v3: per-request sampling with fold_in-per-token PRNG keys, coalesced
+egress frames, SLO admission with deadline policies and per-priority token-
+rate budgets). v4 adds two layers underneath:
 
-  * **Per-request sampling** — each :class:`GenerationRequest` carries
-    :class:`SamplingParams`; the engine mirrors them into ``[slots]``-shaped
-    temperature/top-k/key arrays (``SlotState``) and the jitted decode step
-    samples all slots at once via ``sampling.sample`` (``lax.top_k``,
-    fold_in-per-token PRNG keys). A seeded request reproduces byte-identical
-    output even across a sealed-KV preemption, because the key for token i
-    depends only on (seed, i).
+  * **Pluggable KV layout** — the engine no longer owns a dense cache; it
+    speaks :class:`~repro.runtime.kvcache.KVBackend`
+    (``Engine(kv_backend="slot"|"paged")``). The slot-dense backend is the
+    previous behavior, bit for bit. The paged backend
+    (:mod:`repro.runtime.paged`) stores KV as a page pool + page table:
+    admission charges ``ceil(need/page_size)`` pages instead of an implicit
+    ``max_len`` slot, and sealed preemption moves per-page ciphertext —
+    bytes across the trust boundary scale with tokens used (Insight 10:
+    boundary cost is fixed-cost dominated, so *what crosses* is the lever).
+    Capacity questions (``prompt_budget``, admission, restore room) are
+    delegated to the backend; preemption can be *partial* on the paged
+    backend (seal just the tail pages a higher-priority request needs — the
+    victim keeps its slot and resident pages and resumes by restoring only
+    that delta).
 
-  * **Coalesced egress** — ``FramePolicy(coalesce=N)`` buffers N tokens per
-    encrypted frame (flush-on-finish). ``coalesce=1`` is v2's per-token
-    streaming; larger windows amortize the fixed per-crossing cost the cgpu
-    profile models (Insight 10), measurable in ``ChannelStats``
-    (messages_out = frames, tokens_out = tokens).
+  * **Decode-time SLO enforcement** — ``on_deadline="abort"`` terminates a
+    mid-flight request whose deadline passed (partial tokens flushed,
+    ``finish_reason="aborted"``) and discards — rather than restores — a
+    sealed-out one, so a deadline-bound victim cannot unboundedly occupy a
+    slot its slot-mates are queued behind.
 
-  * **SLO admission** — a queued request whose relative ``deadline_s``
-    passes is dropped when it asked to be (``on_deadline="drop"``), and
-    per-priority token-rate budgets (``rate_budgets``) hold a class at
-    admission once it outruns its tokens/s allowance — preemption and drop
-    counts become measurable trade-offs in ``ServeStats``.
-
-v2 core (unchanged underneath): bucketed batched prefill with decode-aligned
-chunking for long prompts, priority admission, sealed-KV preemption with
-channel-global stream ids and per-request seal epochs, per-frame
-replay/reorder rejection. All device compute is jitted once per shape;
-decode donates the cache. The v2 kwargs form of ``submit``/``generate``/
-``stream`` still works for one release behind a ``DeprecationWarning``.
+All device compute is jitted once per shape; decode donates the cache. The
+v2 kwargs form of ``submit``/``generate``/``stream`` (deprecated in v3) has
+been removed: these entry points take a :class:`GenerationRequest`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -48,20 +47,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.confidential import TrustDomain
+from repro.core.sealing import sealed_nbytes
 from repro.models.model import Model
 from repro.runtime import sampling
-from repro.runtime.api import (FramePolicy, GenerationRequest, RequestOutput,
-                               SamplingParams, TokenCallback)
-from repro.runtime.kvcache import (SlotState, extract_slot as kv_extract,
-                                   insert_rows, insert_slot)
+from repro.runtime.api import (FINISH_ABORTED, GenerationRequest,
+                               RequestOutput)
+from repro.runtime.kvcache import (KVBackend, SlotState, make_backend,
+                                   next_pow2)
 from repro.runtime.scheduler import Request, Scheduler, ServeStats
 
 Params = Any
-
-_KWARGS_DEPRECATION = (
-    "the kwargs serving API is deprecated; pass a GenerationRequest "
-    "(repro.runtime.api) instead — it carries sampling, frame and SLO "
-    "policies the kwargs form cannot express")
 
 
 @dataclasses.dataclass
@@ -71,11 +66,14 @@ class PreemptedRequest:
     req: Request
 
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+@dataclasses.dataclass
+class PausedSlot:
+    """A partially-evicted running slot (paged backend): its tail pages are
+    ciphertext outside the pool, the head pages stay resident, and the slot
+    sits out of the decode batch until the delta is restored."""
+    sealed: Dict[str, Any]
+    prefix: str
+    n_pages: int
 
 
 class _RateBucket:
@@ -112,7 +110,9 @@ class Engine:
                  prefill_len: int = 64,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  batch_prefill: bool = True,
-                 rate_budgets: Optional[Dict[int, float]] = None):
+                 rate_budgets: Optional[Dict[int, float]] = None,
+                 kv_backend: str = "slot", page_size: int = 16,
+                 num_pages: Optional[int] = None):
         """``prefill_buckets`` supersedes the v1 single static ``prefill_len``
         (kept as the default one-bucket config for compatibility). Buckets
         should be powers of two; each distinct (rows, bucket) prefill shape
@@ -122,7 +122,12 @@ class Engine:
         ``rate_budgets`` maps priority -> tokens/s: admission charges each
         request's max_new_tokens against its class's token bucket and holds
         the class back (without starving others) once the budget is spent.
-        Priorities absent from the map are unthrottled."""
+        Priorities absent from the map are unthrottled.
+
+        ``kv_backend`` selects the KV layout: ``"slot"`` (dense, default) or
+        ``"paged"`` (page pool + table; ``page_size``/``num_pages`` size it,
+        ``num_pages=None`` matches the dense footprint). See the
+        :mod:`repro.runtime.kvcache` docstring for when each wins."""
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -139,62 +144,58 @@ class Engine:
         self.batch_prefill = batch_prefill
         self.td = trust_domain or TrustDomain("none")
         self.scheduler = Scheduler()
-        self.slots = SlotState.create(max_slots)
-        self.cache = model.init_cache(max_slots, max_len)
+        self.kv: KVBackend = make_backend(kv_backend, model,
+                                          max_slots=max_slots, max_len=max_len,
+                                          page_size=page_size,
+                                          num_pages=num_pages)
         self._active_mask = np.zeros(max_slots, bool)
         self._last_token = np.zeros(max_slots, np.int32)
         self._preempted: List[PreemptedRequest] = []
+        self._paused: Dict[int, PausedSlot] = {}
         self._buckets: Dict[int, _RateBucket] = {
             prio: _RateBucket(rate) for prio, rate in (rate_budgets or {}).items()}
         self._seed_rng = np.random.default_rng()
 
-        cfg = model.cfg
-
         def _prefill(params, tokens, cache):
             return model.prefill(params, {"tokens": tokens}, cache)
 
-        def _decode(params, tokens, cache, state, kmax):
-            logits, cache = model.decode_step(params, tokens, cache)
-            if state is None:     # all-greedy step: identical to the v2 path
-                return sampling.greedy(logits), cache
-            return sampling.sample(logits, state, kmax=kmax), cache
-
         self._prefill_fn = jax.jit(_prefill)
-        # ``kmax`` is static (pow2-rounded max top_k) and ``state=None`` is a
-        # distinct pytree structure, so compiled decode variants stay bounded
-        # by 1 + log2(vocab), not one per request mix.
-        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
-                                  static_argnums=(4,))
-        self._vocab = cfg.vocab_size
+        self._vocab = model.cfg.vocab_size
+
+    @property
+    def slots(self) -> SlotState:
+        """Per-sequence bookkeeping rows (owned by the KV backend)."""
+        return self.kv.slots
 
     # -- request admission ----------------------------------------------------
-    def submit(self, request, max_new_tokens: Optional[int] = None,
-               eos_id: Optional[int] = None, *, priority: int = 0,
-               on_token: Optional[TokenCallback] = None) -> Request:
+    def submit(self, request: GenerationRequest) -> Request:
         """Admit one :class:`GenerationRequest`; returns the live
-        :class:`Request` handle (``.finished``, ``.result()``).
-
-        The legacy ``submit(prompt_array, max_new_tokens, eos_id, ...)``
-        kwargs form still works for one release (DeprecationWarning)."""
-        gen = self._coerce(request, max_new_tokens, eos_id, priority, on_token)
+        :class:`Request` handle (``.finished``, ``.result()``)."""
+        if not isinstance(request, GenerationRequest):
+            raise TypeError(
+                "submit takes a GenerationRequest (repro.runtime.api); the "
+                "v2 kwargs form was removed in v4 — build a request object")
+        gen = request
         gen.validate(self._vocab)
         # worst-case KV positions: the padded prefill bucket (or the full
         # prompt when chunked past it) plus one per decode *input* — the
         # final sampled token is emitted but never fed back, so it writes no
-        # KV. Past max_len, dynamic_update_slice would clamp onto the last
+        # KV. Past the backend's capacity, writes would clamp onto the last
         # cache row and silently corrupt the sequence — reject up front,
         # BEFORE the prompt crosses the boundary (a rejected request must
         # not skew ChannelStats).
         need = (max(self._bucket_for(len(gen.prompt)), len(gen.prompt))
                 + gen.max_new_tokens - 1)
-        if need > self.max_len:
+        if need > self.kv.request_capacity:
             raise ValueError(
                 f"request needs up to {need} KV positions "
                 f"(prompt {len(gen.prompt)} + {gen.max_new_tokens} new) "
-                f"but max_len={self.max_len}; shorten the prompt or "
-                f"raise max_len")
+                f"but the {self.kv.name} backend serves at most "
+                f"{self.kv.request_capacity} (max_len={self.max_len}); "
+                f"shorten the prompt or raise max_len")
         gen.prompt = self.td.ingress(gen.prompt)
         req = self.scheduler.submit(gen)
+        req.kv_need = need
         req.ingress_messages = 1 if self.td.confidential else 0
         # resolve the sampling seed NOW so the request is reproducible from
         # this point on (including across seal/restore preemption cycles).
@@ -204,29 +205,11 @@ class Engine:
         req.stream_id = self.td.open_stream()
         return req
 
-    def _coerce(self, request, max_new_tokens, eos_id, priority,
-                on_token) -> GenerationRequest:
-        if isinstance(request, GenerationRequest):
-            if (max_new_tokens is not None or eos_id is not None
-                    or priority != 0 or on_token is not None):
-                raise TypeError("with a GenerationRequest, sampling/priority/"
-                                "callback settings live on the request object")
-            return request
-        warnings.warn(_KWARGS_DEPRECATION, DeprecationWarning, stacklevel=3)
-        return GenerationRequest(
-            prompt=np.asarray(request, np.int32),
-            max_new_tokens=32 if max_new_tokens is None else int(max_new_tokens),
-            eos_id=eos_id, priority=priority, on_token=on_token)
-
     def prompt_budget(self, max_new_tokens: int) -> int:
-        """Longest prompt submit() will accept for ``max_new_tokens``.
-        Accounts for bucket padding: a short prompt still occupies its whole
-        (left-padded) prefill bucket in the KV cache."""
-        cand = self.max_len - max_new_tokens + 1   # last token writes no KV
-        if cand >= self.prefill_buckets[-1]:
-            return cand
-        fits = [b for b in self.prefill_buckets if b <= cand]
-        return fits[-1] if fits else 0
+        """Longest prompt submit() will accept for ``max_new_tokens``
+        (backend-delegated: the slot-dense answer is bounded by ``max_len``
+        and bucket padding, the paged one also by the page pool)."""
+        return self.kv.prompt_budget(max_new_tokens, self.prefill_buckets)
 
     def _bucket_for(self, prompt_len: int) -> int:
         """Smallest bucket that fits the prompt, else the largest bucket
@@ -245,13 +228,28 @@ class Engine:
         if p.is_greedy:
             self.slots.clear_sampling(slot)
         else:
-            self.slots.set_sampling(slot, p.temperature, p.top_k,
+            self.slots.set_sampling(slot, p.temperature, p.top_k, p.top_p,
                                     self._base_key(req))
 
     def _static_kmax(self) -> int:
         """Pow2-rounded top_k bound → bounded set of compiled decode shapes."""
         k = self.slots.max_top_k
-        return min(_next_pow2(k), self._vocab) if k > 0 else 0
+        return min(next_pow2(k), self._vocab) if k > 0 else 0
+
+    def _sampling_state(self, steps: np.ndarray
+                        ) -> Tuple[Optional[sampling.SamplingState], int]:
+        """The per-step (state, kmax) pair for the jitted decode: ``None``
+        state on all-greedy steps, and a ``top_p`` row only when some slot
+        actually restricts (both are static pytree differences, so the
+        nucleus sort and the sampling math compile only when used)."""
+        if not self.slots.any_sampled:
+            return None, 0
+        s = self.slots
+        top_p = jnp.asarray(s.top_p) if s.any_top_p else None
+        state = sampling.SamplingState(
+            jnp.asarray(s.temp), jnp.asarray(s.top_k), jnp.asarray(s.key),
+            jnp.asarray(steps), top_p=top_p)
+        return state, self._static_kmax()
 
     # -- egress ----------------------------------------------------------------
     def _flush_egress(self, req: Request) -> None:
@@ -287,7 +285,7 @@ class Engine:
             # (or EOS as the very first token) releases its slot without
             # paying for a wasted decode step (v1 off-by-one).
             self.scheduler.finish(slot)
-            self.slots.release(slot)
+            self.kv.release(slot)
             self._active_mask[slot] = False
             self.td.close_stream(req.stream_id)
             return True
@@ -317,16 +315,51 @@ class Engine:
                          f"rid={req.rid} deadline={req.gen.deadline_s}s "
                          f"waited={req.t_done - req.t_submit:.3f}s")
 
+    def _enforce_aborts(self) -> None:
+        """``on_deadline="abort"``: terminate expired mid-flight requests.
+        A running one flushes its partial tokens and frees its slot/pages; a
+        sealed-out (preempted) one is discarded instead of restored — its
+        ciphertext is simply dropped, which is what makes abort cheap: no
+        boundary crossing, no decode steps, just bookkeeping."""
+        now = time.monotonic()
+        for slot in list(self.scheduler.running):
+            req = self.scheduler.running[slot]
+            if not req.abort_expired(now):
+                continue
+            self._flush_egress(req)
+            req.finish_reason = FINISH_ABORTED
+            self.scheduler.finish(slot)
+            self.kv.release(slot)
+            self._active_mask[slot] = False
+            self._paused.pop(slot, None)   # a paused victim's sealed tail
+            self.td.close_stream(req.stream_id)
+            self.td._log("abort_deadline",
+                         f"rid={req.rid} deadline={req.gen.deadline_s}s "
+                         f"tokens={len(req.output)}")
+        for p in list(self._preempted):
+            if not p.req.abort_expired(now):
+                continue
+            self._preempted.remove(p)
+            self._flush_egress(p.req)   # coalesced tokens sealed with it must
+            p.req.finish_reason = FINISH_ABORTED     # still reach the client
+            self.scheduler.finish_detached(p.req)
+            self.td.close_stream(p.req.stream_id)
+            self.td._log("abort_deadline",
+                         f"rid={p.req.rid} sealed KV discarded unrestored")
+
     def _admit_batch(self) -> int:
         """Pop waiting requests sharing the head's prefill bucket (bounded by
-        free slots and per-priority rate budgets) and prefill them in one
-        jitted call."""
+        free slots, the backend's KV capacity, and per-priority rate budgets)
+        and prefill them in one jitted call."""
         head = self.scheduler.peek_waiting(self._admit_filter)
-        if head is None or not self.slots.free:
+        if (head is None or not self.slots.free
+                or not self.kv.can_admit(head.kv_need)):
             return 0
         bucket = self._bucket_for(len(head.prompt))
         first = self.scheduler.next_waiting(self._admit_filter)
         self._charge_budget(first)
+        slots = [self.kv.acquire(first.rid, first.kv_need)]
+        assert slots[0] is not None, "admission raced KV accounting"
         group: List[Request] = [first]
         if self.batch_prefill:
             # group-mates must not jump the restore queue: a sealed-out
@@ -335,32 +368,34 @@ class Engine:
             # _admit_ready would have taken the restore branch).
             best_sealed = max((p.req.priority for p in self._preempted),
                               default=None)
-            while len(group) < len(self.slots.free):
+            while self.slots.free:
                 nxt = self.scheduler.peek_waiting(self._admit_filter)
                 if nxt is None or self._bucket_for(len(nxt.prompt)) != bucket:
                     break
                 if best_sealed is not None and nxt.priority <= best_sealed:
                     break
-                group.append(self.scheduler.next_waiting(self._admit_filter))
-                self._charge_budget(group[-1])
+                if not self.kv.can_admit(nxt.kv_need):
+                    break
+                nxt = self.scheduler.next_waiting(self._admit_filter)
+                self._charge_budget(nxt)
+                slot = self.kv.acquire(nxt.rid, nxt.kv_need)
+                assert slot is not None, "admission raced KV accounting"
+                group.append(nxt)
+                slots.append(slot)
 
         # rows padded to a power of two so compiled prefill shapes stay
         # bounded: |buckets| x log2(max_slots) variants, not one per batch.
-        rows = _next_pow2(len(group))
+        rows = next_pow2(len(group))
         tokens = np.zeros((rows, bucket), np.int32)
         for i, req in enumerate(group):
             chunk = req.prompt[:bucket]
             tokens[i, bucket - len(chunk):] = chunk   # left-pad short prompts
-        fresh = self.model.init_cache(rows, self.max_len)
+        fresh = self.kv.fresh_prefill_cache(rows)
         logits, prefilled = self._prefill_fn(self.params, jnp.asarray(tokens),
                                              fresh)
         first_np = self._first_tokens(logits, group, rows)
 
-        slots = [self.slots.acquire(req.rid) for req in group]
-        assert None not in slots, "admission raced free-slot accounting"
-        # one donated scatter for the whole group (not k full-cache copies)
-        self.cache = insert_rows(self.cache, prefilled,
-                                 jnp.asarray(slots, jnp.int32))
+        self.kv.insert_prefill(prefilled, slots, bucket)
         for i, req in enumerate(group):
             slot = slots[i]
             self.scheduler.start(slot, req)
@@ -384,21 +419,29 @@ class Engine:
             return np.argmax(np.asarray(logits), axis=-1)
         temp = np.zeros(rows, np.float32)
         top_k = np.zeros(rows, np.int32)
+        top_p = np.ones(rows, np.float32)
         key = np.zeros((rows, 2), np.uint32)
         for i, req in enumerate(group):
             p = req.gen.params
             if not p.is_greedy:
-                temp[i], top_k[i], key[i] = p.temperature, p.top_k, self._base_key(req)
+                temp[i], top_k[i], top_p[i] = p.temperature, p.top_k, p.top_p
+                key[i] = self._base_key(req)
         kmax = int(top_k.max())
         state = sampling.SamplingState(
             jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(key),
-            jnp.zeros(rows, jnp.int32))
+            jnp.zeros(rows, jnp.int32),
+            top_p=jnp.asarray(top_p) if (top_p < 1.0).any() else None)
         return np.asarray(sampling.sample(
-            logits, state, kmax=min(_next_pow2(kmax), self._vocab) if kmax else 0))
+            logits, state, kmax=min(next_pow2(kmax), self._vocab) if kmax else 0))
 
-    def _preempt_lowest(self, incoming: Request) -> bool:
-        """Seal out the lowest-priority running slot if ``incoming`` strictly
-        outranks it. Returns True if a slot was freed."""
+    def _preempt_for(self, incoming: Request) -> bool:
+        """Free capacity for ``incoming`` by preempting the lowest-priority
+        running slot it strictly outranks. On the paged backend, when only
+        *pages* are short (a slot is free but the pool is not), a partial
+        eviction seals just the shortfall off the victim's tail — the victim
+        keeps its slot and resident pages and resumes via a delta restore.
+        Otherwise the whole victim is sealed out. Returns True if capacity
+        was freed."""
         if not self.scheduler.running:
             return False
         victim_slot = min(self.scheduler.running,
@@ -407,28 +450,66 @@ class Engine:
         victim = self.scheduler.running[victim_slot]
         if victim.priority >= incoming.priority:
             return False
+        if (self.slots.free and victim_slot not in self._paused
+                and hasattr(self.kv, "seal_tail_pages")):
+            shortfall = (self.kv.pages_for(incoming.kv_need)
+                         - self.kv.free_page_reserve)
+            spare = self.kv.allocated_pages(victim_slot) - 1
+            if 0 < shortfall <= spare:
+                self.partial_preempt(victim_slot, shortfall)
+                return True
         sealed, vreq = self.seal_slot(victim_slot)
         vreq.n_preemptions += 1
         self._preempted.append(PreemptedRequest(sealed, vreq))
         return True
 
+    def _resume_paused(self) -> bool:
+        """Restore a partially-evicted slot's sealed tail once the pool has
+        room again — unless a strictly higher-priority request is still
+        waiting for the pages (the reason the tail was sealed)."""
+        for slot, paused in list(self._paused.items()):
+            # every path that removes a paused slot from running (abort,
+            # whole-seal) also pops self._paused, so the victim is live here
+            victim = self.scheduler.running[slot]
+            head = self.scheduler.peek_waiting(self._admit_filter)
+            if head is not None and head.priority > victim.priority:
+                continue
+            if not self.kv.can_restore_tail(paused.n_pages):
+                continue
+            self.kv.restore_tail_pages(self.td.sealing_key, paused.sealed,
+                                       slot, paused.prefix)
+            self.td.record_restore(sealed_nbytes(paused.sealed),
+                                   len(paused.sealed),
+                                   f"slot={slot} rid={victim.rid} partial")
+            del self._paused[slot]
+            return True
+        return False
+
     def _admit_ready(self) -> None:
         """Admission policy, run at the top of every step:
-        1. drop queued requests whose drop-deadline has passed (SLO),
-        2. restore sealed-out requests while no waiting request outranks them,
-        3. batch-admit waiting requests into free slots (bucket-grouped,
-           rate-budget gated — an over-budget priority class is skipped
-           without blocking the classes behind it),
-        4. preempt a strictly lower-priority running request when the waiting
-           head cannot get a slot otherwise (preempted requests never trigger
-           further preemption — bounded, no thrash)."""
+        1. drop queued requests whose drop-deadline has passed and abort
+           mid-flight ones whose abort-deadline has (SLO),
+        2. resume partially-evicted slots when the pool has room again,
+        3. restore sealed-out requests while no waiting request outranks
+           them (and the backend has KV room),
+        4. batch-admit waiting requests into free slots (bucket-grouped,
+           rate-budget and KV-capacity gated — an over-budget priority class
+           is skipped without blocking the classes behind it),
+        5. preempt a strictly lower-priority running request when the
+           waiting head cannot get capacity otherwise — wholly, or just the
+           page shortfall on the paged backend (preempted requests never
+           trigger further preemption — bounded, no thrash)."""
         while True:
             self._drop_expired()
+            self._enforce_aborts()
+            if self._paused and self._resume_paused():
+                continue
             if self._preempted and self.slots.free:
                 best = max(self._preempted,
                            key=lambda p: (p.req.priority, -p.req.rid))
                 head = self.scheduler.peek_waiting(self._admit_filter)
-                if head is None or head.priority <= best.req.priority:
+                if ((head is None or head.priority <= best.req.priority)
+                        and self.kv.can_restore(best.req.kv_need)):
                     self._preempted.remove(best)
                     self.restore_slot(best.sealed, best.req)
                     continue
@@ -436,8 +517,10 @@ class Engine:
                     and self._admit_batch() > 0):
                 continue
             head = self.scheduler.peek_waiting(self._admit_filter)
-            if (head is not None and not self.slots.free
-                    and self._preempt_lowest(head)):
+            if (head is not None
+                    and (not self.slots.free
+                         or not self.kv.can_admit(head.kv_need))
+                    and self._preempt_for(head)):
                 continue
             return
 
@@ -447,11 +530,12 @@ class Engine:
         batched decode step. Returns number of *output* tokens produced
         (prompt-chunk feeding steps count zero)."""
         self._admit_ready()
-        if not self.slots.active:
+        live = [s for s in self.slots.active if s not in self._paused]
+        if not live:
             return 0
         feeding_prompt = {}   # slot -> tail still pending after this step?
         steps = np.zeros(self.max_slots, np.int32)
-        for slot in self.slots.active:
+        for slot in live:
             req = self.scheduler.running.get(slot)
             if req is None:
                 continue
@@ -459,20 +543,12 @@ class Engine:
             if req.pending_input:
                 self._last_token[slot] = req.pending_input.pop(0)
                 feeding_prompt[slot] = bool(req.pending_input)
-        tokens = jnp.asarray(self._last_token[:, None])
-        if self.slots.any_sampled:
-            state = sampling.SamplingState(
-                jnp.asarray(self.slots.temp), jnp.asarray(self.slots.top_k),
-                jnp.asarray(self.slots.key), jnp.asarray(steps))
-            kmax = self._static_kmax()
-        else:
-            state, kmax = None, 0
-        next_tokens, self.cache = self._decode_fn(self.params, tokens,
-                                                  self.cache, state, kmax)
-        next_np = np.asarray(next_tokens)
+        state, kmax = self._sampling_state(steps)
+        next_np = self.kv.decode(self.params, self._last_token, state, kmax,
+                                 write_slots=live)
         produced = 0
-        for slot in list(self.slots.active):
-            if not self._active_mask[slot]:
+        for slot in list(live):
+            if not self._active_mask[slot] or slot in self._paused:
                 continue
             if feeding_prompt.get(slot, False):
                 continue   # mid-prompt chunk: this step's sample is discarded
@@ -500,86 +576,129 @@ class Engine:
     # (priority eviction, host maintenance) its pages must not land anywhere
     # unencrypted — the at-rest property H100 HBM lacks (paper §V-D3). The
     # slot cache is sealed with the domain key and can be restored later.
+    # The sealing *granularity* is the backend's: slot-dense moves the whole
+    # [L, max_len, ...] extent, paged moves ceil(tokens/page_size) pages.
 
-    def seal_slot(self, slot: int) -> Tuple[Dict[str, Any], Request]:
-        """Evict a running slot: returns (sealed_cache_dict, request). Any
-        not-yet-prefilled prompt tail travels on ``request.pending_input``
-        and not-yet-flushed egress tokens stay buffered on the request."""
-        from repro.core.sealing import seal_tree
-        single = kv_extract(self.cache, jnp.int32(slot))
-        req = self.scheduler.running.pop(slot)
+    def _seal_prefix(self, req: Request) -> str:
         # the nonce-deriving name must be unique across every seal the domain
         # ever performs: the channel-global stream id (never reused, unlike
         # per-engine rids) plus a per-request seal epoch — a request
         # preempted twice holds different KV contents each time, and a
         # stream cipher must never encrypt two plaintexts under one nonce.
-        sealed = seal_tree(self.td.sealing_key, single,
-                           prefix=f"kvslot/{req.stream_id}/{req.seal_epoch}")
+        return f"kvslot/{req.stream_id}/{req.seal_epoch}"
+
+    def seal_slot(self, slot: int) -> Tuple[Dict[str, Any], Request]:
+        """Evict a running slot: returns (sealed_cache_dict, request). Any
+        not-yet-prefilled prompt tail travels on ``request.pending_input``
+        and not-yet-flushed egress tokens stay buffered on the request.
+
+        A partially-evicted (paused) slot can be whole-sealed too: only its
+        resident remainder is encrypted now, and the already-sealed tail
+        blob rides along in the returned dict (its distinct epoch prefix
+        keeps the nonce namespaces apart); ``restore_slot`` reassembles
+        both."""
+        paused = self._paused.pop(slot, None)
+        req = self.scheduler.running.pop(slot)
+        prefix = self._seal_prefix(req)
+        sealed = self.kv.seal(self.td.sealing_key, slot, prefix)
         req.seal_epoch += 1
-        self.td._log("seal_kv",
-                     f"slot={slot} rid={req.rid} stream={req.stream_id} "
-                     f"epoch={req.seal_epoch - 1}")
-        self.slots.release(slot)
+        nb = sealed_nbytes(sealed)   # the paused tail was recorded at its seal
+        req.sealed_bytes += nb
+        self.td.record_seal(nb, len(sealed),
+                            f"slot={slot} rid={req.rid} stream={req.stream_id} "
+                            f"epoch={req.seal_epoch - 1}")
+        if paused is not None:
+            sealed.update(paused.sealed)
+        self.kv.release(slot)
         self._active_mask[slot] = False
         return sealed, req
 
     def restore_slot(self, sealed, req: Request) -> int:
         """Re-admit a sealed-out request into a free slot."""
-        from repro.core.sealing import unseal_tree
-        slot = self.slots.acquire(req.rid)
+        slot = self.kv.acquire(req.rid, req.kv_need)
         if slot is None:
-            raise RuntimeError("no free slot to restore into")
-        single_like = self.model.abstract_cache(1, self.max_len)
-        single = unseal_tree(self.td.sealing_key, sealed, single_like,
-                             prefix=f"kvslot/{req.stream_id}/{req.seal_epoch - 1}")
-        self.cache = insert_slot(self.cache, single, jnp.int32(slot))
+            raise RuntimeError("no free slot/KV room to restore into")
+        try:
+            self.kv.restore(self.td.sealing_key, sealed, slot,
+                            f"kvslot/{req.stream_id}/{req.seal_epoch - 1}",
+                            req.kv_need)
+            # a sealed-while-paused eviction carries its earlier tail blob
+            # under an older epoch prefix; graft it back on top of the
+            # remainder (acquire() above already reserved the full need).
+            for name in sealed:
+                if name.endswith("/pagemeta"):
+                    self.kv.restore_tail_pages(
+                        self.td.sealing_key, sealed, slot,
+                        name[:-len("/pagemeta")], reserve=False)
+        except Exception:
+            self.kv.release(slot)   # a failed (e.g. tampered) restore must
+            raise                   # not leak the slot or its reservation
         self.scheduler.running[slot] = req
         self._active_mask[slot] = True
         self._set_slot_sampling(slot, req)
         # next decode input: the prompt tail (if chunked prefill was cut
         # short) takes precedence in step(); otherwise the last output token.
         self._last_token[slot] = req.output[-1] if req.output else 0
-        self.td._log("restore_kv", f"slot={slot} rid={req.rid}")
+        self.td.record_restore(sealed_nbytes(sealed), len(sealed),
+                               f"slot={slot} rid={req.rid}")
         return slot
 
+    def partial_preempt(self, slot: int, n_pages: int) -> None:
+        """Page-granular preemption (paged backend only): seal the victim's
+        ``n_pages`` tail pages and hand them (and their reservation) back to
+        the pool. The victim stays admitted — slot, sampling row, and head
+        pages intact — but sits out of the decode batch until
+        ``_resume_paused`` restores the delta."""
+        if not hasattr(self.kv, "seal_tail_pages"):
+            raise RuntimeError(
+                f"the {self.kv.name} backend cannot seal at page granularity;"
+                f" use kv_backend='paged'")
+        if slot in self._paused:
+            raise RuntimeError(f"slot {slot} is already partially evicted")
+        req = self.scheduler.running[slot]
+        prefix = self._seal_prefix(req)
+        sealed = self.kv.seal_tail_pages(self.td.sealing_key, slot, prefix,
+                                         n_pages)
+        req.seal_epoch += 1
+        req.n_preemptions += 1
+        nb = sealed_nbytes(sealed)
+        req.sealed_bytes += nb
+        self.td.record_seal(nb, len(sealed),
+                            f"slot={slot} rid={req.rid} partial "
+                            f"pages={n_pages}")
+        self._paused[slot] = PausedSlot(sealed, prefix, n_pages)
+
     # -- convenience -----------------------------------------------------------
-    def generate(self, request, max_new_tokens: Optional[int] = None,
-                 eos_id: Optional[int] = None):
-        """Serve one request to completion.
-
-        New API: ``generate(GenerationRequest) -> RequestOutput``.
-        Legacy kwargs form returns the raw token list (deprecated)."""
-        if isinstance(request, GenerationRequest):
-            req = self.submit(request)
-            self.run()
-            return req.result()
-        req = self.submit(request,
-                          32 if max_new_tokens is None else max_new_tokens,
-                          eos_id)
+    def generate(self, request: GenerationRequest) -> RequestOutput:
+        """Serve one request to completion: ``generate(GenerationRequest)
+        -> RequestOutput``."""
+        req = self.submit(request)
         self.run()
-        return req.output
+        return req.result()
 
-    def stream(self, request, max_new_tokens: Optional[int] = None,
-               eos_id: Optional[int] = None, *, priority: int = 0,
+    def stream(self, request: GenerationRequest, *,
                max_steps: int = 100_000) -> Iterator[int]:
         """Yields this request's tokens as they cross the trust boundary —
         per token with the default FramePolicy, in bursts of ``coalesce``
         when the request asked for frame coalescing. Other queued requests
         keep advancing in the same decode batch. The request is submitted
         eagerly (before the first token is pulled), so it joins the batch
-        even if the caller iterates later. Accepts a GenerationRequest (any
-        on_token it carries still fires) or the deprecated kwargs form."""
-        gen = self._coerce(request, max_new_tokens, eos_id, priority, None)
+        even if the caller iterates later. Any on_token the request carries
+        still fires."""
+        if not isinstance(request, GenerationRequest):
+            raise TypeError(
+                "stream takes a GenerationRequest (repro.runtime.api); the "
+                "v2 kwargs form was removed in v4 — build a request object")
         buf: List[int] = []
-        inner = gen.on_token
+        inner = request.on_token
 
         def _tap(r, t):
             buf.append(t)
             if inner is not None:
                 inner(r, t)
 
-        gen.on_token = _tap
-        req = self.submit(gen)
+        request.on_token = _tap
+        req = self.submit(request)
 
         def _drain() -> Iterator[int]:
             steps = 0

@@ -1,44 +1,82 @@
-"""Slot-based KV cache management for continuous batching.
+"""Pluggable KV-cache backends for continuous batching.
 
-Hardware-adaptation note (DESIGN.md): vLLM's paged KV cache is
-GPU-idiomatic — fine-grained gather over a page table suits GPU SMs. On TPU,
-serving stacks (JetStream-style) use *slot-based* dense caches: a fixed
-[max_slots, max_len, ...] buffer, one slot per in-flight sequence, because
-the MXU/VPU want contiguous reads and XLA wants static shapes. We therefore
-manage slots, not pages; the same role (bounded KV memory, admission
-control), the TPU-native layout.
+The engine sees one :class:`KVBackend` interface; the KV *layout* behind it
+is a deployment choice (``Engine(kv_backend="slot"|"paged")``). Picking one:
 
-``insert_slot`` splices a freshly-prefilled single-sequence cache into the
-batched decode cache. Cache pytrees follow the model layout contract:
-top-level key "pos" is batch-major [b]; every other leaf is layer-stacked
-with batch at axis 1 ([L, b, ...]).
+**Slot-dense** (:class:`SlotDenseBackend`, the default) keeps a fixed
+``[L, max_slots, max_len, ...]`` buffer, one slot per in-flight sequence —
+the JetStream-style TPU-native layout: contiguous reads for the MXU/VPU,
+static shapes for XLA, zero indirection on the decode hot path. It wins when
+sequences actually use most of ``max_len`` (short-context chat at high
+occupancy), when ``max_len`` is small enough that whole-slot sealing is
+cheap, and when decode-step latency matters more than memory efficiency.
+
+**Paged** (:class:`~repro.runtime.paged.PagedKVBackend`) keeps a static
+``[num_pages, page_size, ...]`` pool plus an ``[slots, max_pages]`` int32
+page table; decode gathers each slot's pages into the dense view the model
+expects (``jnp.take`` over the table — still static shapes, TPU-safe) and
+scatters back only the one appended position. Everything becomes
+proportional to *tokens used, not capacity reserved*:
+
+  * admission charges ``ceil(need / page_size)`` pages instead of an
+    implicit whole ``max_len`` slot — long-context mixes where most
+    requests are short admit far more concurrency from the same HBM;
+  * sealed preemption seals per-page ciphertext (per-page nonces), so
+    evicting a sequence that holds 3 pages moves 3 pages across the trust
+    boundary, not ``max_len`` worth (the paper's Insight-10 boundary-cost
+    model: crossings are fixed-cost dominated, so move less);
+  * partial eviction can free just the tail pages of a victim and restore
+    only that delta later.
+
+It costs one gather per decode step and page-table bookkeeping. Prefer it
+for long-context workloads (``max_len`` ≥ 1k), memory-constrained pools,
+or whenever preemption/sealing traffic shows up in ``ChannelStats``.
+
+``page_size`` guidance: small pages (8–16) track token usage tightly
+(least waste, most seal granularity) but grow the page table and per-page
+seal count; large pages (64–128) amortize per-page fixed costs toward
+slot-dense behavior. 16–32 is a good default at ``max_len`` ≤ 4k; scale
+page_size with context length so ``max_pages`` stays in the hundreds.
+
+Cache pytrees follow the model layout contract: top-level key "pos" is
+batch-major [b]; every other leaf is layer-stacked with batch at axis 1
+([L, b, ...]). ``insert_slot``/``insert_rows``/``extract_slot`` are the
+dense splice primitives both backends build on.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sealing import (SealedTensor, SealingKey, seal_tree,
+                                unseal_tree)
+from repro.runtime import sampling
+
 Cache = Any
+Params = Any
 
 
 @dataclasses.dataclass
 class SlotState:
-    """Slot bookkeeping + the ``[slots]``-shaped per-request sampling arrays
-    the jitted decode step consumes (engine v3: each slot samples with its
-    own temperature/top-k/PRNG key). The arrays are host-side numpy mirrors;
-    the engine snapshots them into a ``sampling.SamplingState`` per step.
-    A released slot resets to greedy (temp 0) so stale settings can never
-    leak into the next occupant."""
+    """Slot bookkeeping + the ``[slots]``-shaped per-sequence sampling rows
+    the jitted decode step consumes (each sequence samples with its own
+    temperature/top-k/top-p/PRNG key). Owned by the KV backend — a backend
+    maps sequences to whatever physical layout it likes, but every live
+    sequence holds exactly one row here. The arrays are host-side numpy
+    mirrors; the engine snapshots them into a ``sampling.SamplingState`` per
+    step. A released row resets to greedy (temp 0, top_p 1) so stale
+    settings can never leak into the next occupant."""
     free: List[int]
     active: dict  # slot -> request id
     temp: np.ndarray    # [slots] f32; <= 0 → greedy
     top_k: np.ndarray   # [slots] i32; 0 → unrestricted
+    top_p: np.ndarray   # [slots] f32; >= 1 → unrestricted
     key: np.ndarray     # [slots, 2] u32 per-request base PRNG keys
 
     @classmethod
@@ -46,6 +84,7 @@ class SlotState:
         return cls(free=list(range(max_slots)), active={},
                    temp=np.zeros(max_slots, np.float32),
                    top_k=np.zeros(max_slots, np.int32),
+                   top_p=np.ones(max_slots, np.float32),
                    key=np.zeros((max_slots, 2), np.uint32))
 
     def acquire(self, request_id: int) -> Optional[int]:
@@ -61,20 +100,26 @@ class SlotState:
             self.free.append(slot)
             self.clear_sampling(slot)
 
-    def set_sampling(self, slot: int, temp: float, top_k: int,
+    def set_sampling(self, slot: int, temp: float, top_k: int, top_p: float,
                      key: np.ndarray) -> None:
         self.temp[slot] = temp
         self.top_k[slot] = top_k
+        self.top_p[slot] = top_p
         self.key[slot] = key
 
     def clear_sampling(self, slot: int) -> None:
         self.temp[slot] = 0.0
         self.top_k[slot] = 0
+        self.top_p[slot] = 1.0
         self.key[slot] = 0
 
     @property
     def any_sampled(self) -> bool:
         return bool((self.temp > 0).any())
+
+    @property
+    def any_top_p(self) -> bool:
+        return bool(((self.temp > 0) & (self.top_p < 1.0)).any())
 
     @property
     def max_top_k(self) -> int:
@@ -83,6 +128,15 @@ class SlotState:
     @property
     def num_active(self) -> int:
         return len(self.active)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (shape padding keeps compiled variants
+    bounded by log2, not one per batch/scatter size)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 def _is_pos(path) -> bool:
@@ -130,3 +184,155 @@ def extract_slot(batched: Cache, slot: jax.Array) -> Cache:
 
 def cache_bytes(cache: Cache) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
+
+
+# ---------------------------------------------------------------------------
+# backend protocol
+# ---------------------------------------------------------------------------
+
+class KVBackend:
+    """One live KV store behind the engine. A backend owns
+
+      * the device cache (whatever physical layout),
+      * the slot <-> sequence mapping and per-sequence sampling rows
+        (:class:`SlotState`),
+      * the jitted decode step over its layout, and
+      * the seal/restore format a preemption moves across the boundary.
+
+    The engine speaks tokens: every capacity question is asked in "KV
+    positions this request may write" (``n_tokens``), and the backend maps
+    that onto slots, pages, or whatever it accounts in.
+    """
+
+    name: str = "?"
+
+    def __init__(self, model, max_slots: int, max_len: int):
+        self.model = model
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.slots = SlotState.create(max_slots)
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def request_capacity(self) -> int:
+        """Most KV positions a single request may occupy."""
+        return self.max_len
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Beyond a free slot, is there KV room for ``n_tokens`` positions?"""
+        return True
+
+    def can_restore(self, n_tokens: int) -> bool:
+        """Room to re-admit a sealed-out sequence of ``n_tokens`` positions
+        (a free slot is checked separately via ``slots.free``)."""
+        return True
+
+    def prompt_budget(self, max_new_tokens: int,
+                      buckets: Sequence[int]) -> int:
+        """Longest prompt a submit will accept for ``max_new_tokens``,
+        accounting for prefill-bucket padding: a short prompt still occupies
+        its whole (left-padded) bucket in the cache."""
+        cand = self.request_capacity - max_new_tokens + 1  # last token: no KV
+        if cand >= buckets[-1]:
+            return cand
+        fits = [b for b in buckets if b <= cand]
+        return fits[-1] if fits else 0
+
+    # -- sequence lifecycle ---------------------------------------------------
+    def acquire(self, rid: int, n_tokens: int) -> Optional[int]:
+        return self.slots.acquire(rid)
+
+    def release(self, slot: int) -> None:
+        self.slots.release(slot)
+
+    # -- device compute -------------------------------------------------------
+    def fresh_prefill_cache(self, rows: int) -> Cache:
+        """A zeroed ``rows``-sequence dense cache for one prefill call (both
+        backends prefill dense; the splice into backend storage differs)."""
+        return self.model.init_cache(rows, self.max_len)
+
+    def insert_prefill(self, prefilled: Cache, slots: List[int],
+                       written_len: int) -> None:
+        raise NotImplementedError
+
+    def decode(self, params: Params, tokens: np.ndarray,
+               state: Optional[sampling.SamplingState], kmax: int,
+               write_slots: Sequence[int]) -> np.ndarray:
+        """One batched decode+sample step over all ``max_slots`` rows.
+        ``write_slots`` are the slots genuinely appending a KV position this
+        step (active, not paused) — a backend may route other rows' writes
+        to a scratch location. Returns the sampled token per row."""
+        raise NotImplementedError
+
+    def cache_nbytes(self) -> int:
+        raise NotImplementedError
+
+    # -- sealing --------------------------------------------------------------
+    def seal(self, key: SealingKey, slot: int,
+             prefix: str) -> Dict[str, SealedTensor]:
+        """Encrypt slot ``slot``'s KV for eviction across the trust boundary.
+        ``prefix`` must be unique per (stream, seal epoch) — it derives the
+        nonces. Does NOT release the slot."""
+        raise NotImplementedError
+
+    def restore(self, key: SealingKey, sealed: Dict[str, SealedTensor],
+                slot: int, prefix: str, n_tokens: int) -> None:
+        """Inverse of :meth:`seal` into freshly-acquired slot ``slot``."""
+        raise NotImplementedError
+
+
+class SlotDenseBackend(KVBackend):
+    """The dense ``[L, max_slots, max_len, ...]`` layout (see module
+    docstring for when it wins). Sealing moves the victim's whole
+    ``max_len`` extent regardless of how many positions hold live tokens."""
+
+    name = "slot"
+
+    def __init__(self, model, max_slots: int, max_len: int):
+        super().__init__(model, max_slots, max_len)
+        self.cache = model.init_cache(max_slots, max_len)
+
+        def _decode(params, tokens, cache, state, kmax):
+            logits, cache = model.decode_step(params, tokens, cache)
+            if state is None:     # all-greedy step: no sampling state at all
+                return sampling.greedy(logits), cache
+            return sampling.sample(logits, state, kmax=kmax), cache
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
+                                  static_argnums=(4,))
+
+    def insert_prefill(self, prefilled: Cache, slots: List[int],
+                       written_len: int) -> None:
+        # one donated scatter for the whole group (not k full-cache copies)
+        self.cache = insert_rows(self.cache, prefilled,
+                                 jnp.asarray(slots, jnp.int32))
+
+    def decode(self, params, tokens, state, kmax, write_slots) -> np.ndarray:
+        next_tokens, self.cache = self._decode_fn(
+            params, jnp.asarray(tokens[:, None]), self.cache, state, kmax)
+        return np.asarray(next_tokens)
+
+    def cache_nbytes(self) -> int:
+        return cache_bytes(self.cache)
+
+    def seal(self, key, slot, prefix) -> Dict[str, SealedTensor]:
+        single = extract_slot(self.cache, jnp.int32(slot))
+        return seal_tree(key, single, prefix=prefix)
+
+    def restore(self, key, sealed, slot, prefix, n_tokens) -> None:
+        single_like = self.model.abstract_cache(1, self.max_len)
+        single = unseal_tree(key, sealed, single_like, prefix=prefix)
+        self.cache = insert_slot(self.cache, single, jnp.int32(slot))
+
+
+def make_backend(kind: str, model, *, max_slots: int, max_len: int,
+                 page_size: int = 16,
+                 num_pages: Optional[int] = None) -> KVBackend:
+    """Factory behind ``Engine(kv_backend=...)``."""
+    if kind == "slot":
+        return SlotDenseBackend(model, max_slots, max_len)
+    if kind == "paged":
+        from repro.runtime.paged import PagedKVBackend
+        return PagedKVBackend(model, max_slots, max_len,
+                              page_size=page_size, num_pages=num_pages)
+    raise ValueError(f"unknown kv backend {kind!r} (want 'slot' or 'paged')")

@@ -1,0 +1,444 @@
+"""Paged KV backend: a page-pool + page-table layout behind ``KVBackend``.
+
+Layout. Every cache leaf with a sequence-length axis (attention ``k``/``v``,
+MLA ``ckv``/``krope``) is stored as a static pool
+``[L, num_pages + 1, page_size, ...]`` — physical page 0 is a reserved
+*null page* (scratch for rows that are not appending) and pages
+``1..num_pages`` are allocatable. An ``[max_slots, max_pages]`` int32 page
+table maps each sequence's logical pages to physical ones (entry 0 =
+unmapped). Leaves without a length axis (SSM conv/state, RWKV wkv rows)
+stay slot-dense ``[L, max_slots, ...]``; per-sequence positions live
+host-side and are threaded into each step.
+
+Decode. One ``jnp.take`` over the page table gathers each sequence's pages
+into exactly the dense ``[L, max_slots, max_len, ...]`` view the model's
+``decode_step`` already expects — static shapes end to end (TPU/XLA-safe),
+no model changes. Positions at or beyond a sequence's live length are
+masked inside attention (``kv_valid_len``), so whatever the gather pulls
+out of unmapped/null pages never reaches a logit, and outputs are
+bit-identical to the slot-dense backend. Only the single appended position
+is scattered back per step (``pool.at[:, write_phys, write_off]``); rows
+that are not appending route their write to the null page.
+
+Accounting. Admission reserves ``ceil(need / page_size)`` pages — the
+request's own worst case, not the engine-wide ``max_len`` a dense slot
+implicitly pins — and physical pages are allocated lazily as positions are
+actually written, so reservations make append failure impossible
+(allocated <= reserved <= num_pages) while admission stays proportional to
+the tokens a request can touch.
+
+Sealing. Preemption seals *per page*: each allocated page of each paged
+leaf becomes its own ciphertext+MAC with a nonce derived from
+``{prefix}{leaf}/p{ordinal}`` — sealed bytes scale with tokens used, not
+capacity reserved. ``seal_tail_pages``/``restore_tail_pages`` support
+partial eviction: the tail pages (and their reservation) are released for
+other traffic while the victim keeps its slot and resident pages, and only
+that delta is restored before it resumes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sealing import (SealedTensor, SealingKey, seal_tensor,
+                                unseal_tensor)
+from repro.runtime import sampling
+from repro.runtime.kvcache import KVBackend, next_pow2
+
+Cache = Any
+Params = Any
+
+# cache-leaf names that carry a [.., max_len, ..] sequence axis at dim 2
+_LENGTH_LEAVES = ("k", "v", "ckv", "krope")
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _leaf_key(path) -> Optional[str]:
+    return getattr(path[-1], "key", None) if path else None
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _set_pages(pool_leaf, idx, pages):
+    """Scatter restored pages into a donated pool leaf in place — restore
+    cost stays O(pages moved), not O(pool) rebuilt per leaf."""
+    return pool_leaf.at[:, idx].set(pages.astype(pool_leaf.dtype))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _set_row(dense_leaf, slot, row):
+    start = (jnp.int32(0), slot.astype(jnp.int32)) + \
+        (jnp.int32(0),) * (dense_leaf.ndim - 2)
+    return jax.lax.dynamic_update_slice(
+        dense_leaf, row.astype(dense_leaf.dtype), start)
+
+
+class PagedKVBackend(KVBackend):
+    """See module docstring; constructed via ``Engine(kv_backend="paged")``
+    or ``kvcache.make_backend("paged", ...)``."""
+
+    name = "paged"
+
+    def __init__(self, model, max_slots: int, max_len: int, *,
+                 page_size: int = 16, num_pages: Optional[int] = None):
+        super().__init__(model, max_slots, max_len)
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_len % page_size != 0:
+            raise ValueError(f"max_len={max_len} must be a multiple of "
+                             f"page_size={page_size}")
+        self.page_size = page_size
+        self.max_pages = max_len // page_size
+        if num_pages is None:
+            num_pages = max_slots * self.max_pages   # dense-equivalent pool
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        # a pool smaller than max_pages is legal: request_capacity shrinks
+        # to num_pages * page_size and submit rejects what cannot ever fit.
+        self.num_pages = num_pages
+
+        # classify leaves once; paged leaves move to pool layout
+        dense = model.init_cache(max_slots, max_len)
+        dense.pop("pos")
+        self._paged_paths = set()
+
+        def build(path, leaf):
+            if (_leaf_key(path) in _LENGTH_LEAVES and leaf.ndim >= 3
+                    and leaf.shape[2] == max_len):
+                self._paged_paths.add(_keystr(path))
+                shape = (leaf.shape[0], num_pages + 1, page_size) + leaf.shape[3:]
+                return jnp.zeros(shape, leaf.dtype)
+            return leaf
+        self.blocks = jax.tree_util.tree_map_with_path(build, dense)
+        if not self._paged_paths:
+            raise ValueError(
+                f"model {model.cfg.name} has no sequence-length KV leaves to "
+                f"page; use kv_backend='slot' for pure-state families")
+
+        # host-side sequence state
+        self.pos = np.zeros(max_slots, np.int32)           # live KV positions
+        self.table = np.zeros((max_slots, self.max_pages), np.int32)
+        self._free_pages: List[int] = list(range(1, num_pages + 1))
+        self._alloc = np.zeros(max_slots, np.int32)        # pages mapped
+        self._reserved = np.zeros(max_slots, np.int32)     # pages promised
+        self._reserve_free = num_pages
+
+        paged = self._paged_paths
+
+        def _decode(params, tokens, blocks, table, pos, write_phys,
+                    write_off, state, kmax):
+            def gather(path, leaf):
+                if _keystr(path) not in paged:
+                    return leaf
+                v = jnp.take(leaf, table, axis=1)  # [L, b, max_pages, ps, ..]
+                return v.reshape(leaf.shape[0], table.shape[0], max_len,
+                                 *leaf.shape[3:])
+            view = jax.tree_util.tree_map_with_path(gather, blocks)
+            cache = dict(view)
+            cache["pos"] = pos
+            logits, new_cache = model.decode_step(params, tokens, cache)
+            if state is None:
+                toks = sampling.greedy(logits)
+            else:
+                toks = sampling.sample(logits, state, kmax=kmax)
+            new_cache.pop("pos")
+
+            def scatter(path, pool, new_leaf):
+                if _keystr(path) not in paged:
+                    # slot-dense (recurrent-state) leaf: advance ONLY the
+                    # rows that actually stepped — a paused (partially
+                    # evicted) row's state must stay frozen exactly where
+                    # its sealed tail left it. write_phys > 0 is precisely
+                    # the stepped-rows mask.
+                    mask = (write_phys > 0).reshape(
+                        1, -1, *([1] * (new_leaf.ndim - 2)))
+                    return jnp.where(mask, new_leaf.astype(pool.dtype), pool)
+                # pull the one appended position per sequence out of the
+                # dense view and write it to (write_phys, write_off)
+                idx = pos.reshape(1, -1, 1, *([1] * (new_leaf.ndim - 3)))
+                idx = jnp.broadcast_to(
+                    idx, new_leaf.shape[:2] + (1,) + new_leaf.shape[3:])
+                written = jnp.take_along_axis(new_leaf, idx, axis=2)[:, :, 0]
+                return pool.at[:, write_phys, write_off].set(
+                    written.astype(pool.dtype))
+            new_blocks = jax.tree_util.tree_map_with_path(
+                scatter, blocks, new_cache)
+            return toks, new_blocks
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
+                                  static_argnums=(8,))
+
+        def _splice(blocks, prefilled, page_rows, page_ord, phys,
+                    dense_rows, dense_slots):
+            def upd(path, pool, src):
+                if _keystr(path) not in paged:
+                    return pool.at[:, dense_slots].set(
+                        src[:, dense_rows].astype(pool.dtype))
+                pages = src.reshape(src.shape[0], src.shape[1],
+                                    self.max_pages, page_size, *src.shape[3:])
+                picked = pages[:, page_rows, page_ord]   # [L, n, ps, ...]
+                return pool.at[:, phys].set(picked.astype(pool.dtype))
+            return jax.tree_util.tree_map_with_path(upd, blocks, prefilled)
+
+        self._splice_fn = jax.jit(_splice, donate_argnums=(0,))
+
+    # -- page accounting ------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_size)
+
+    @property
+    def free_page_reserve(self) -> int:
+        return self._reserve_free
+
+    @property
+    def free_physical_pages(self) -> int:
+        return len(self._free_pages)
+
+    def allocated_pages(self, slot: int) -> int:
+        return int(self._alloc[slot])
+
+    @property
+    def request_capacity(self) -> int:
+        # the dense decode view is still [*, max_len, *]; a sequence also
+        # cannot out-reserve the pool.
+        return min(self.max_len, self.num_pages * self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= self._reserve_free
+
+    def can_restore(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= self._reserve_free
+
+    def _take_pages(self, n: int) -> List[int]:
+        assert n <= len(self._free_pages), \
+            "page allocation exceeded reservation — accounting bug"
+        taken, self._free_pages = self._free_pages[:n], self._free_pages[n:]
+        return taken
+
+    # -- sequence lifecycle ---------------------------------------------------
+    def acquire(self, rid: int, n_tokens: int) -> Optional[int]:
+        need = self.pages_for(n_tokens)
+        if need > self._reserve_free:
+            return None
+        slot = self.slots.acquire(rid)
+        if slot is None:
+            return None
+        self._reserved[slot] = need
+        self._reserve_free -= need
+        return slot
+
+    def release(self, slot: int) -> None:
+        n = int(self._alloc[slot])
+        if n:
+            self._free_pages.extend(int(p) for p in self.table[slot, :n])
+        self.table[slot] = 0
+        self._alloc[slot] = 0
+        self._reserve_free += int(self._reserved[slot])
+        self._reserved[slot] = 0
+        self.pos[slot] = 0
+        self.slots.release(slot)
+
+    # -- device compute -------------------------------------------------------
+    def insert_prefill(self, prefilled: Cache, slots: List[int],
+                       written_len: int) -> None:
+        k = len(slots)
+        rows = prefilled["pos"].shape[0]
+        n_pages = self.pages_for(written_len)
+        src_rows, page_ord, phys = [], [], []
+        for i, slot in enumerate(slots):
+            taken = self._take_pages(n_pages)
+            self.table[slot, :n_pages] = taken
+            self._alloc[slot] = n_pages
+            self.pos[slot] = written_len
+            for j, p in enumerate(taken):
+                src_rows.append(i)
+                page_ord.append(j)
+                phys.append(p)
+        # pad the scatter lists to a power of two by repeating the last real
+        # entry (an identical duplicate write — harmless) so compiled splice
+        # shapes stay bounded; same for the dense-row scatter.
+        pad = next_pow2(len(phys))
+        src_rows += [src_rows[-1]] * (pad - len(src_rows))
+        page_ord += [page_ord[-1]] * (pad - len(page_ord))
+        phys += [phys[-1]] * (pad - len(phys))
+        dense_rows = list(range(k)) + [k - 1] * (rows - k)
+        dense_slots = list(slots) + [slots[-1]] * (rows - k)
+        prefilled = dict(prefilled)
+        prefilled.pop("pos")
+        self.blocks = self._splice_fn(
+            self.blocks, prefilled,
+            jnp.asarray(src_rows, jnp.int32), jnp.asarray(page_ord, jnp.int32),
+            jnp.asarray(phys, jnp.int32), jnp.asarray(dense_rows, jnp.int32),
+            jnp.asarray(dense_slots, jnp.int32))
+
+    def _ensure_append(self, slot: int) -> None:
+        """Map a physical page under position ``pos[slot]`` if the append
+        crosses into a new logical page (reservation guarantees success)."""
+        ordinal = int(self.pos[slot]) // self.page_size
+        if ordinal >= int(self._alloc[slot]):
+            assert ordinal == int(self._alloc[slot]) < int(self._reserved[slot])
+            self.table[slot, ordinal] = self._take_pages(1)[0]
+            self._alloc[slot] = ordinal + 1
+
+    def decode(self, params, tokens, state, kmax,
+               write_slots: Sequence[int]) -> np.ndarray:
+        write_phys = np.zeros(self.max_slots, np.int32)   # default: null page
+        write_off = np.zeros(self.max_slots, np.int32)
+        for s in write_slots:
+            self._ensure_append(s)
+            write_phys[s] = self.table[s, int(self.pos[s]) // self.page_size]
+            write_off[s] = int(self.pos[s]) % self.page_size
+        next_tokens, self.blocks = self._decode_fn(
+            params, jnp.asarray(tokens[:, None]), self.blocks,
+            jnp.asarray(self.table), jnp.asarray(self.pos),
+            jnp.asarray(write_phys), jnp.asarray(write_off), state, kmax)
+        for s in write_slots:
+            self.pos[s] += 1
+        return np.asarray(next_tokens)
+
+    def cache_nbytes(self) -> int:
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree.leaves(self.blocks))
+
+    # -- sealing --------------------------------------------------------------
+    def _page_arrays(self, phys: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Fetch the given physical pages of every paged leaf:
+        keystr -> [L, n, page_size, ...]."""
+        idx = jnp.asarray(list(phys), jnp.int32)
+        out = {}
+
+        def pull(path, leaf):
+            if _keystr(path) in self._paged_paths:
+                out[_keystr(path)] = np.asarray(leaf[:, idx])
+            return leaf
+        jax.tree_util.tree_map_with_path(pull, self.blocks)
+        return out
+
+    def _seal_pages(self, key: SealingKey, prefix: str, ordinals: Sequence[int],
+                    phys: Sequence[int]) -> Dict[str, SealedTensor]:
+        sealed: Dict[str, SealedTensor] = {}
+        pages = self._page_arrays(phys)
+        for kpath, arr in pages.items():
+            for j, ordinal in enumerate(ordinals):
+                name = f"{prefix}{kpath}/p{ordinal}"
+                sealed[name] = seal_tensor(key, name, arr[:, j])
+        return sealed
+
+    def seal(self, key, slot, prefix) -> Dict[str, SealedTensor]:
+        n_alloc = int(self._alloc[slot])
+        phys = [int(p) for p in self.table[slot, :n_alloc]]
+        meta_name = f"{prefix}/meta"
+        sealed = {meta_name: seal_tensor(
+            key, meta_name,
+            np.asarray([int(self.pos[slot]), n_alloc], np.int32))}
+        sealed.update(self._seal_pages(key, prefix, range(n_alloc), phys))
+
+        def pull_dense(path, leaf):
+            if _keystr(path) not in self._paged_paths:
+                name = f"{prefix}{_keystr(path)}"
+                sealed[name] = seal_tensor(key, name,
+                                           np.asarray(leaf[:, slot:slot + 1]))
+            return leaf
+        jax.tree_util.tree_map_with_path(pull_dense, self.blocks)
+        return sealed
+
+    def restore(self, key, sealed, slot, prefix, n_tokens) -> None:
+        # the reservation was re-made when the engine re-acquired the slot
+        # (acquire(rid, n_tokens)); here we only map and decrypt the pages.
+        meta = np.asarray(unseal_tensor(key, sealed[f"{prefix}/meta"]))
+        pos, n_alloc = int(meta[0]), int(meta[1])
+        assert n_alloc <= int(self._reserved[slot]), \
+            "restore into a smaller reservation — accounting bug"
+        taken = self._take_pages(n_alloc)
+        self.table[slot, :n_alloc] = taken
+        self._alloc[slot] = n_alloc
+        self.pos[slot] = pos
+        self._write_back(key, sealed, slot, prefix, range(n_alloc), taken,
+                         dense_too=True)
+
+    def _write_back(self, key, sealed, slot, prefix, ordinals, phys,
+                    dense_too: bool) -> None:
+        ordinals, phys = list(ordinals), list(phys)
+        pad_ords, idx = [], None
+        if ordinals:
+            # pad the scatter to a power of two by repeating the last
+            # (ordinal, phys) pair — an identical duplicate write — so the
+            # jitted donated scatter compiles O(log max_pages) variants.
+            pad = next_pow2(len(phys))
+            pad_ords = ordinals + [ordinals[-1]] * (pad - len(ordinals))
+            idx = jnp.asarray(phys + [phys[-1]] * (pad - len(phys)), jnp.int32)
+
+        def put(path, leaf):
+            kpath = _keystr(path)
+            if kpath in self._paged_paths:
+                if not ordinals:
+                    return leaf
+                pages = jnp.stack(
+                    [unseal_tensor(key, sealed[f"{prefix}{kpath}/p{o}"])
+                     for o in pad_ords], axis=1)
+                return _set_pages(leaf, idx, pages)
+            if dense_too:
+                row = unseal_tensor(key, sealed[f"{prefix}{kpath}"])
+                return _set_row(leaf, jnp.int32(slot), row)
+            return leaf
+        self.blocks = jax.tree_util.tree_map_with_path(put, self.blocks)
+
+    # -- partial eviction -----------------------------------------------------
+    def seal_tail_pages(self, key: SealingKey, slot: int, prefix: str,
+                        n_pages: int) -> Dict[str, SealedTensor]:
+        """Seal and free the ``n_pages`` most recent pages of ``slot`` —
+        a capacity loan: the pages AND their reservation go back to the
+        pool for other traffic, while the victim keeps its slot, sampling
+        row, and resident head pages. The victim must not decode until
+        :meth:`restore_tail_pages` brings the delta back (the engine parks
+        it out of the batch)."""
+        n_alloc = int(self._alloc[slot])
+        if not (0 < n_pages < n_alloc):
+            raise ValueError(
+                f"partial eviction wants 0 < n_pages < allocated "
+                f"({n_alloc}), got {n_pages}")
+        ordinals = list(range(n_alloc - n_pages, n_alloc))
+        phys = [int(p) for p in self.table[slot, ordinals]]
+        meta_name = f"{prefix}/pagemeta"
+        sealed = {meta_name: seal_tensor(
+            key, meta_name, np.asarray([ordinals[0], n_pages], np.int32))}
+        sealed.update(self._seal_pages(key, prefix, ordinals, phys))
+        self.table[slot, ordinals] = 0
+        self._alloc[slot] = n_alloc - n_pages
+        self._free_pages.extend(phys)
+        self._reserved[slot] -= n_pages
+        self._reserve_free += n_pages
+        return sealed
+
+    def can_restore_tail(self, n_pages: int) -> bool:
+        return n_pages <= self._reserve_free
+
+    def restore_tail_pages(self, key: SealingKey,
+                           sealed: Dict[str, SealedTensor], slot: int,
+                           prefix: str, reserve: bool = True) -> int:
+        """Re-map and decrypt a partial eviction's pages; returns the page
+        count. Physical placement is fresh — the table indirection makes
+        relocation free. ``reserve=False`` skips re-reserving: used when the
+        tail rides along a whole-slot restore whose ``acquire`` already
+        reserved the sequence's full worst case."""
+        meta = np.asarray(unseal_tensor(key, sealed[f"{prefix}/pagemeta"]))
+        start, n_pages = int(meta[0]), int(meta[1])
+        if reserve:
+            assert self.can_restore_tail(n_pages), \
+                "restore_tail without can_restore_tail — accounting bug"
+            self._reserved[slot] += n_pages
+            self._reserve_free -= n_pages
+        ordinals = list(range(start, start + n_pages))
+        taken = self._take_pages(n_pages)
+        self.table[slot, ordinals] = taken
+        self._alloc[slot] = start + n_pages
+        self._write_back(key, sealed, slot, prefix, ordinals, taken,
+                         dense_too=False)
+        return n_pages

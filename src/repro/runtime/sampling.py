@@ -1,18 +1,25 @@
-"""Token sampling: greedy / temperature / top-k, jit-friendly.
+"""Token sampling: greedy / temperature / top-k / top-p, jit-friendly.
 
 Two entry points:
 
   * :func:`temperature` — single distribution, scalar settings (tests,
     offline tools).
   * :func:`sample` — the engine's batched path: every decode step samples
-    all slots at once, each with its own temperature/top-k/PRNG key carried
-    in a :class:`SamplingState` of ``[slots]``-shaped arrays. Greedy slots
-    (``temp <= 0``) and sampled slots coexist in one call.
+    all slots at once, each with its own temperature/top-k/top-p/PRNG key
+    carried in a :class:`SamplingState` of ``[slots]``-shaped arrays. Greedy
+    slots (``temp <= 0``) and sampled slots coexist in one call.
 
 Top-k uses ``jax.lax.top_k`` (O(v·k) selection) rather than a full
 ``jnp.sort`` (O(v log v) over the whole vocabulary per step). ``top_k``
 must be < vocab_size — a request asking for a full-vocab "restriction"
 should say ``top_k=0``; anything >= vocab is an error, not a silent clamp.
+
+Top-p (nucleus) keeps the smallest set of tokens whose cumulative
+probability reaches ``top_p`` (the first token is always kept). It needs a
+full descending sort, so the engine only threads a ``top_p`` array into the
+state when some slot actually restricts (``top_p < 1``) — ``top_p=None``
+state compiles the sort-free path, and the all-greedy ``state=None`` fast
+path is untouched. Top-k and top-p compose (intersection of supports).
 
 Reproducibility: the per-slot key is the request's seed-derived base key;
 :func:`sample` folds the output-token index into it each step. The fold-in
@@ -23,7 +30,7 @@ engine step the token lands on.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +41,13 @@ _MASKED = -1e30   # large-negative logit mask (f32-safe, softmax-zero)
 class SamplingState(NamedTuple):
     """Per-slot sampling parameters, shaped ``[slots]`` (a pytree the jitted
     decode step takes as one argument; see ``kvcache.SlotState`` for the
-    host-side mirror)."""
+    host-side mirror). ``top_p=None`` (a static pytree difference) selects
+    the nucleus-free compiled variant."""
     temp: jax.Array    # [b] f32; <= 0 selects greedy for that slot
     top_k: jax.Array   # [b] i32; 0 = unrestricted
     key: jax.Array     # [b, 2] u32 per-request base PRNG keys
     step: jax.Array    # [b] i32 output-token index (folded into the key)
+    top_p: Optional[jax.Array] = None   # [b] f32; None/1.0 = unrestricted
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -46,8 +55,24 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def _nucleus_mask(scaled: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Restrict each row of ``scaled`` logits to its nucleus: the smallest
+    descending-probability prefix whose cumulative mass reaches that row's
+    ``top_p``. Rows with ``top_p >= 1`` pass through unrestricted."""
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep a token while the mass BEFORE it is < top_p: the first token is
+    # always kept, and the token that crosses the threshold is included.
+    keep = (cum - probs) < top_p[:, None]
+    thresh = jnp.min(jnp.where(keep, sorted_desc, jnp.inf),
+                     axis=-1, keepdims=True)
+    restricted = jnp.where(scaled >= thresh, scaled, _MASKED)
+    return jnp.where(top_p[:, None] < 1.0, restricted, scaled)
+
+
 def temperature(logits: jax.Array, key, temp: float = 1.0,
-                top_k: int = 0) -> jax.Array:
+                top_k: int = 0, top_p: float = 1.0) -> jax.Array:
     """Scalar-setting sampling for a whole batch (one shared distribution
     policy). ``temp <= 0`` is greedy."""
     if temp <= 0:
@@ -57,10 +82,15 @@ def temperature(logits: jax.Array, key, temp: float = 1.0,
         raise ValueError(
             f"top_k={top_k} must be < vocab_size={vocab}; "
             f"use top_k=0 for an unrestricted distribution")
+    if not (0.0 < top_p <= 1.0):
+        raise ValueError(f"top_p must be in (0, 1], got {top_p}")
     scaled = logits.astype(jnp.float32) / temp
     if top_k > 0:
         kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]   # [b, 1]
         scaled = jnp.where(scaled >= kth, scaled, _MASKED)
+    if top_p < 1.0:
+        scaled = _nucleus_mask(scaled, jnp.full(scaled.shape[0], top_p,
+                                                jnp.float32))
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
@@ -72,9 +102,10 @@ def sample(logits: jax.Array, state: SamplingState, *, kmax: int = 0) -> jax.Arr
     variants stay bounded by log2(vocab)). ``kmax=0`` compiles the
     no-top-k path. Per-slot behavior:
 
-      * ``temp <= 0``  → argmax (ignores key/top_k),
-      * ``top_k == 0`` → full-distribution sampling,
-      * else           → restricted to that slot's top_k logits.
+      * ``temp <= 0``  → argmax (ignores key/top_k/top_p),
+      * ``top_k == 0`` → no top-k restriction,
+      * ``top_p`` absent or 1 → no nucleus restriction,
+      * else the support is the intersection of both restrictions.
     """
     greedy_toks = greedy(logits)
     # guard the divide for greedy rows (their sampled value is discarded)
@@ -86,6 +117,10 @@ def sample(logits: jax.Array, state: SamplingState, *, kmax: int = 0) -> jax.Arr
         kth = jnp.take_along_axis(vals, idx[:, None], axis=-1)   # [b, 1]
         restricted = jnp.where(scaled >= kth, scaled, _MASKED)
         scaled = jnp.where(state.top_k[:, None] > 0, restricted, scaled)
+    if state.top_p is not None:
+        # applied after top-k so the nucleus is measured over the already-
+        # restricted distribution (masked logits carry ~0 mass).
+        scaled = _nucleus_mask(scaled, state.top_p)
     keys = jax.vmap(jax.random.fold_in)(state.key, state.step)
     sampled = jax.vmap(lambda k, row: jax.random.categorical(k, row))(keys, scaled)
     return jnp.where(state.temp > 0, sampled, greedy_toks).astype(jnp.int32)

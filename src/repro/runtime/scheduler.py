@@ -16,7 +16,9 @@ to a :class:`~repro.runtime.api.RequestOutput` on completion.
 
 SLO machinery:
   * ``drop_expired`` removes queued requests whose relative deadline has
-    passed (``on_deadline="drop"``) before they waste prefill compute;
+    passed (``on_deadline="drop"`` or ``"abort"``) before they waste
+    prefill compute; ``abort_expired`` additionally marks *mid-flight*
+    requests for engine-side termination (seal/discard, not restore);
   * ``peek_waiting``/``next_waiting`` accept an admissibility predicate so
     the engine's per-priority token-rate budgets can hold a class back
     without starving the others;
@@ -34,8 +36,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.runtime.api import (FINISH_DROPPED, FINISH_LENGTH, FINISH_STOP,
-                               GenerationRequest, RequestOutput, TokenCallback)
+from repro.runtime.api import (FINISH_ABORTED, FINISH_DROPPED, FINISH_LENGTH,
+                               FINISH_STOP, GenerationRequest, RequestOutput,
+                               TokenCallback)
 
 AdmitPredicate = Callable[["Request"], bool]
 
@@ -54,6 +57,9 @@ class Request:
     token_times: List[float] = dataclasses.field(default_factory=list)
     finish_reason: str = ""
     n_preemptions: int = 0
+    kv_need: int = 0       # worst-case KV positions (set at submit; the unit
+                           # the KV backend's admission accounting charges)
+    sealed_bytes: int = 0  # ciphertext bytes this request's evictions moved
     seal_epoch: int = 0    # bumps on every sealed-KV eviction (nonce freshness)
     stream_id: int = -1    # channel-global egress stream (set by the engine)
     seed: Optional[int] = None          # resolved sampling seed (reproducible)
@@ -102,15 +108,27 @@ class Request:
         return self.finish_reason == FINISH_DROPPED
 
     @property
+    def aborted(self) -> bool:
+        return self.finish_reason == FINISH_ABORTED
+
+    @property
     def deadline_missed(self) -> bool:
         return (not self.dropped and self.finished
                 and self.gen.deadline_s is not None
                 and self.t_done - self.t_submit > self.gen.deadline_s)
 
     def expired(self, now: float) -> bool:
-        """True when a still-queued request should be dropped (deadline SLO)."""
+        """True when a still-queued request should be dropped (deadline SLO).
+        ``abort`` subsumes ``drop`` while queued — a request that would be
+        killed mid-flight is certainly not worth starting late."""
         return (self.gen.deadline_s is not None
-                and self.gen.on_deadline == "drop"
+                and self.gen.on_deadline in ("drop", "abort")
+                and now - self.t_submit > self.gen.deadline_s)
+
+    def abort_expired(self, now: float) -> bool:
+        """True when a mid-flight request should be aborted (seal/discard)."""
+        return (self.gen.deadline_s is not None
+                and self.gen.on_deadline == "abort"
                 and now - self.t_submit > self.gen.deadline_s)
 
     def result(self) -> RequestOutput:
@@ -123,8 +141,10 @@ class ServeStats:
     total_tokens: int = 0
     total_requests: int = 0
     dropped_requests: int = 0      # deadline passed while queued (on_deadline=drop)
+    aborted_requests: int = 0      # terminated mid-flight (on_deadline=abort)
     deadline_misses: int = 0       # served, but finished after deadline_s
     preemptions: int = 0           # sealed-KV evictions among served requests
+    sealed_bytes: int = 0          # ciphertext bytes those evictions moved
     wall_s: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     ttft_s: List[float] = dataclasses.field(default_factory=list)
@@ -250,6 +270,14 @@ class Scheduler:
         self.finished.append(req)
         return req
 
+    def finish_detached(self, req: Request) -> Request:
+        """Finish a request that holds no slot (e.g. a sealed-out preempted
+        request being aborted instead of restored). The caller sets
+        ``finish_reason`` first."""
+        req.t_done = time.monotonic()
+        self.finished.append(req)
+        return req
+
     @property
     def idle(self) -> bool:
         return not self.queue and not self.running
@@ -275,8 +303,11 @@ def stats_from_requests(reqs: List[Request]) -> ServeStats:
     for r in done:
         s.total_tokens += len(r.output)
         s.preemptions += r.n_preemptions
+        s.sealed_bytes += r.sealed_bytes
+        s.aborted_requests += int(r.aborted)
         s.deadline_misses += int(r.deadline_missed)
-        s.ttft_s.append(r.t_first_token - r.t_submit)
+        if r.output:   # an aborted request may die before its first token
+            s.ttft_s.append(r.t_first_token - r.t_submit)
         # inter-token gaps only: token_times[0] IS the first-token time, so
         # prepending t_first_token would inject a spurious 0.0 latency that
         # deflates the mean/p99 this repo exists to measure.

@@ -1,0 +1,409 @@
+"""Paged KV backend: slot-vs-paged output parity (incl. across sealed
+preemption), page-granular seal/restore round trips, partial eviction,
+page-table reuse after free, tampered-page MAC failure, and page-charged
+admission accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.core.sealing import IntegrityError, _nonce_for, sealed_nbytes
+from repro.models import build_model
+from repro.runtime import Engine, GenerationRequest, SamplingParams
+from repro.runtime.kvcache import make_backend
+from repro.runtime.paged import PagedKVBackend
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def G(prompt=PROMPT, max_new_tokens=8, **kw):
+    return GenerationRequest(prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=max_new_tokens, **kw)
+
+
+def make_engine(model, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_len", 8)
+    return Engine(model, params, **kw)
+
+
+def paged_engine(model, params, **kw):
+    kw.setdefault("kv_backend", "paged")
+    kw.setdefault("page_size", 8)
+    return make_engine(model, params, **kw)
+
+
+class TestBackendConstruction:
+    def test_factory_and_flags(self, small_model):
+        cfg, model, params = small_model
+        assert make_engine(model, params).kv.name == "slot"
+        assert paged_engine(model, params).kv.name == "paged"
+        with pytest.raises(ValueError, match="kv backend"):
+            make_engine(model, params, kv_backend="vllm")
+        with pytest.raises(ValueError, match="multiple"):
+            paged_engine(model, params, page_size=7)   # 64 % 7 != 0
+        with pytest.raises(ValueError, match="page_size"):
+            paged_engine(model, params, page_size=0)
+
+    def test_backend_direct(self, small_model):
+        cfg, model, params = small_model
+        be = make_backend("paged", model, max_slots=2, max_len=64, page_size=8)
+        assert isinstance(be, PagedKVBackend)
+        assert be.max_pages == 8 and be.num_pages == 16
+        assert be.pages_for(1) == 1 and be.pages_for(8) == 1
+        assert be.pages_for(9) == 2
+        assert be.free_physical_pages == 16
+        # the paged pool's footprint matches the dense cache (+1 null page
+        # per paged leaf)
+        dense = make_backend("slot", model, max_slots=2, max_len=64)
+        assert be.cache_nbytes() >= dense.cache_nbytes()
+
+
+class TestParity:
+    def test_greedy_outputs_identical(self, small_model):
+        cfg, model, params = small_model
+        prompts = [PROMPT, np.arange(9, 1, -1, dtype=np.int32),
+                   np.arange(1, 21, dtype=np.int32)]    # incl. chunked tail
+        slot_eng = make_engine(model, params, max_slots=3)
+        paged_eng = paged_engine(model, params, max_slots=3)
+        a = [slot_eng.submit(G(p, 6)) for p in prompts]
+        b = [paged_eng.submit(G(p, 6)) for p in prompts]
+        slot_eng.run()
+        paged_eng.run()
+        assert [r.output for r in a] == [r.output for r in b]
+
+    def test_seeded_outputs_identical_across_preemption(self, small_model):
+        """Acceptance: the same seeded sampled request, preempted mid-flight
+        on each backend, reproduces byte-identical tokens — the layout (and
+        its sealing granularity) is invisible to the math."""
+        cfg, model, params = small_model
+        sp = SamplingParams(temperature=0.9, top_k=16, seed=42)
+        outs = []
+        for backend in ("slot", "paged"):
+            eng = make_engine(model, params, max_slots=1, kv_backend=backend,
+                              page_size=8, trust_domain=TrustDomain("tdx"))
+            low = eng.submit(G(max_new_tokens=10, params=sp, priority=0))
+            for _ in range(3):
+                eng.step()
+            eng.submit(G(np.full(8, 7, np.int32), max_new_tokens=3,
+                         priority=9))
+            eng.run()
+            assert low.n_preemptions == 1
+            outs.append(low.output)
+        assert outs[0] == outs[1]
+        assert len(outs[0]) == 10
+
+    @pytest.mark.slow
+    def test_long_context_parity(self, small_model):
+        """Long-context mix across both backends: chunked prefill tails,
+        multi-page sequences, and a forced preemption all preserve parity."""
+        cfg, model, params = small_model
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in (70, 150, 230)]
+        outs = []
+        for backend in ("slot", "paged"):
+            eng = Engine(model, params, max_slots=2, max_len=512,
+                         prefill_buckets=(32, 64, 128), kv_backend=backend,
+                         page_size=32, trust_domain=TrustDomain("tdx"))
+            reqs = [eng.submit(G(p, 12, priority=0)) for p in prompts]
+            for _ in range(3):
+                eng.step()
+            eng.submit(G(np.full(16, 5, np.int32), max_new_tokens=4,
+                         priority=9))   # forces a sealed eviction
+            eng.run(max_steps=50_000)
+            assert all(r.finished for r in reqs)
+            outs.append([r.output for r in reqs])
+        assert outs[0] == outs[1]
+
+
+class TestPageGranularSealing:
+    def test_sealed_bytes_proportional_to_tokens(self, small_model):
+        """The same short preemption seals strictly fewer bytes on the paged
+        backend (pages actually used) than slot-dense (whole max_len)."""
+        cfg, model, params = small_model
+        sizes = {}
+        for backend in ("slot", "paged"):
+            eng = make_engine(model, params, max_slots=1, kv_backend=backend,
+                              page_size=8, trust_domain=TrustDomain("tdx"))
+            eng.submit(G(max_new_tokens=10))
+            eng.step()
+            sealed, req = eng.seal_slot(0)
+            sizes[backend] = sealed_nbytes(sealed)
+            eng.restore_slot(sealed, req)
+            eng.run()
+            assert req.finished and len(req.output) == 10
+            assert req.sealed_bytes == sizes[backend]
+        assert sizes["paged"] < sizes["slot"]
+        ch_ratio = sizes["slot"] / sizes["paged"]
+        # 8 prompt tokens + a little decode = 2 pages of 8 vs max_len=64
+        assert ch_ratio > 2
+
+    def test_per_page_nonces_are_unique(self, small_model):
+        """Every sealed page gets its own nonce (name), across leaves, page
+        ordinals, and seal epochs."""
+        cfg, model, params = small_model
+        td = TrustDomain("tdx")
+        eng = paged_engine(model, params, max_slots=1, trust_domain=td)
+        req = eng.submit(G(max_new_tokens=12))
+        for _ in range(2):
+            eng.step()
+        sealed1, evicted = eng.seal_slot(0)
+        eng.restore_slot(sealed1, evicted)
+        for _ in range(2):
+            eng.step()
+        sealed2, evicted = eng.seal_slot(0)
+        names = list(sealed1) + list(sealed2)
+        assert len(set(names)) == len(names)
+        nonces = {_nonce_for(td.sealing_key, n) for n in names}
+        assert len(nonces) == len(names)
+        page_names = [n for n in sealed2 if "/p" in n]
+        assert page_names, "paged seal must contain per-page entries"
+
+    def test_tampered_page_fails_mac(self, small_model):
+        cfg, model, params = small_model
+        eng = paged_engine(model, params, max_slots=1,
+                           trust_domain=TrustDomain("tdx"))
+        req = eng.submit(G(max_new_tokens=6))
+        eng.step()
+        sealed, evicted = eng.seal_slot(0)
+        victim = next(st for name, st in sealed.items() if "/p0" in name)
+        ct = np.asarray(victim.ciphertext).copy()
+        ct[0, 0] ^= 1
+        victim.ciphertext = jnp.asarray(ct)
+        with pytest.raises(IntegrityError, match="/p0"):
+            eng.restore_slot(sealed, evicted)
+        # the failed restore must not leak the slot or its page reservation
+        assert eng.slots.num_active == 0
+        assert eng.kv.free_page_reserve == eng.kv.num_pages
+
+    def test_tampered_meta_fails_mac(self, small_model):
+        cfg, model, params = small_model
+        eng = paged_engine(model, params, max_slots=1,
+                           trust_domain=TrustDomain("tdx"))
+        eng.submit(G(max_new_tokens=6))
+        eng.step()
+        sealed, evicted = eng.seal_slot(0)
+        meta = next(st for name, st in sealed.items() if name.endswith("/meta"))
+        meta.mac = b"\x00" * 32
+        with pytest.raises(IntegrityError, match="meta"):
+            eng.restore_slot(sealed, evicted)
+
+
+class TestPartialEviction:
+    def test_partial_round_trip_preserves_output(self, small_model):
+        """Seal the victim's tail pages, let the pool serve someone else,
+        restore the delta, and the victim's tokens are unchanged."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params, max_slots=1).generate(
+            G(max_new_tokens=10)).tokens
+        eng = paged_engine(model, params, max_slots=2, num_pages=8,
+                          trust_domain=TrustDomain("tdx"))
+        low = eng.submit(G(max_new_tokens=10, priority=0))
+        for _ in range(3):
+            eng.step()                  # pos=11 -> 2 pages allocated
+        assert eng.kv.allocated_pages(0) == 2
+        free_before = eng.kv.free_physical_pages
+        eng.partial_preempt(0, 1)
+        assert eng.kv.allocated_pages(0) == 1
+        assert eng.kv.free_physical_pages == free_before + 1
+        assert low.n_preemptions == 1
+        # the paused victim sits out of the batch but keeps its slot
+        assert 0 in eng.scheduler.running
+        eng.step()                      # resume restores the sealed delta
+        eng.run()
+        assert low.output == ref
+
+    def test_partial_eviction_triggered_by_page_pressure(self, small_model):
+        """A high-priority arrival that is short only on *pages* (a slot is
+        free) partially evicts the victim's tail instead of sealing the
+        whole slot."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params, max_slots=1).generate(
+            G(max_new_tokens=10)).tokens
+        eng = paged_engine(model, params, max_slots=2, num_pages=8,
+                          trust_domain=TrustDomain("tdx"))
+        low = eng.submit(G(max_new_tokens=10, priority=0))   # 3 pages reserved
+        for _ in range(3):
+            eng.step()                  # 2 pages physically allocated
+        # needs 6 pages; only 5 unreserved -> shortfall of 1 page
+        hi = eng.submit(G(np.full(8, 7, np.int32), max_new_tokens=41,
+                          priority=5))
+        eng.run(max_steps=300)
+        assert hi.finished and low.finished
+        assert low.output == ref
+        partials = [e for e in eng.td.audit
+                    if e.kind == "seal_kv" and "partial" in e.detail]
+        assert len(partials) == 1
+        restores = [e for e in eng.td.audit
+                    if e.kind == "restore_kv" and "partial" in e.detail]
+        assert len(restores) == 1
+
+    def test_whole_seal_of_paused_slot_reassembles(self, small_model):
+        """A partially-evicted slot can still be whole-sealed (so a yet
+        higher-priority arrival is never stranded behind a paused victim):
+        the resident remainder seals under a fresh epoch, the earlier tail
+        blob rides along, and restore grafts both back."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params, max_slots=1).generate(
+            G(max_new_tokens=10)).tokens
+        eng = paged_engine(model, params, max_slots=1, num_pages=8,
+                           trust_domain=TrustDomain("tdx"))
+        low = eng.submit(G(max_new_tokens=10))
+        for _ in range(3):
+            eng.step()                  # 2 pages allocated
+        eng.partial_preempt(0, 1)       # paused, 1 resident page
+        sealed, evicted = eng.seal_slot(0)     # whole-seal while paused
+        assert eng.slots.num_active == 0
+        assert eng.kv.free_page_reserve == eng.kv.num_pages
+        assert any(n.endswith("/pagemeta") for n in sealed)   # tail blob rode
+        eng.restore_slot(sealed, evicted)
+        assert eng.kv.allocated_pages(0) == 2   # remainder + grafted tail
+        eng.run()
+        assert low.output == ref
+
+    @pytest.mark.slow
+    def test_hybrid_model_pause_freezes_recurrent_state(self):
+        """On a hybrid (mamba+attn) arch the paged backend must freeze a
+        paused row's recurrent-state leaves while its slot-mates keep
+        stepping — only rows that actually append may advance — or the
+        victim would resume from corrupted SSM state."""
+        cfg = smoke_config("jamba-v0.1-52b")
+        model = build_model(cfg)
+        params = model.init_params(jax.random.key(0))
+        prompt = np.arange(1, 9, dtype=np.int32)
+        eng = Engine(model, params, max_slots=2, max_len=64, prefill_len=8,
+                     kv_backend="paged", page_size=8,
+                     trust_domain=TrustDomain("tdx"))
+        low = eng.submit(G(prompt, 10))
+        mate = eng.submit(G(np.full(8, 3, np.int32), 10))
+        for _ in range(3):
+            eng.step()
+
+        def state_rows(slot):
+            rows = {}
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                    eng.kv.blocks)[0]:
+                k = jax.tree_util.keystr(path)
+                if k not in eng.kv._paged_paths:
+                    rows[k] = np.asarray(leaf[:, slot])
+            return rows
+
+        assert state_rows(0), "hybrid model must have recurrent-state leaves"
+        before = state_rows(0)
+        # a decode step slot 0 sits out of (write_slots excludes it — what
+        # the engine passes while a slot is paused) must leave its
+        # recurrent-state rows bit-identical, while the stepping mate's move
+        eng.kv.decode(eng.params, eng._last_token, None, 0, write_slots=[1])
+        after = state_rows(0)
+        for k in before:
+            np.testing.assert_array_equal(before[k], after[k], err_msg=k)
+        eng.run()                       # both finish normally afterwards
+        assert low.finished and mate.finished
+
+    def test_paused_victim_is_not_stranded_capacity(self, small_model):
+        """An even-higher-priority arrival can whole-seal a paused victim
+        (partial tail + resident remainder both travel), so a paused slot
+        never wedges the pool: everyone eventually finishes and the twice-
+        evicted victim's tokens are exact."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params, max_slots=1).generate(
+            G(max_new_tokens=10)).tokens
+        eng = paged_engine(model, params, max_slots=3, num_pages=8,
+                           trust_domain=TrustDomain("tdx"))
+        a = eng.submit(G(max_new_tokens=10, priority=0))     # 3 pages
+        for _ in range(3):
+            eng.step()                  # a allocates its 2nd page
+        b = eng.submit(G(np.full(8, 7, np.int32), max_new_tokens=41,
+                         priority=5))   # 6 pages -> partial-evicts a
+        eng.step()
+        assert 0 in eng._paused and a.n_preemptions == 1
+        c = eng.submit(G(np.full(8, 9, np.int32), max_new_tokens=9,
+                         priority=9))   # 2 pages -> must whole-seal paused a
+        eng.run(max_steps=500)
+        assert a.finished and b.finished and c.finished
+        assert a.n_preemptions == 2     # partial, then whole while paused
+        assert a.output == ref
+        assert not eng._paused and not eng._preempted
+        assert eng.kv.free_page_reserve == eng.kv.num_pages
+
+    def test_partial_preempt_rejects_bad_usage(self, small_model):
+        cfg, model, params = small_model
+        slot_eng = make_engine(model, params, max_slots=1)
+        slot_eng.submit(G(max_new_tokens=6))
+        slot_eng.step()
+        with pytest.raises(RuntimeError, match="page granularity"):
+            slot_eng.partial_preempt(0, 1)
+        eng = paged_engine(model, params, max_slots=1, page_size=32)
+        eng.submit(G(max_new_tokens=6))
+        eng.step()                       # 1 page allocated: no strict subset
+        assert eng.kv.allocated_pages(0) == 1
+        with pytest.raises(ValueError, match="partial eviction"):
+            eng.partial_preempt(0, 1)
+
+
+class TestPageAccounting:
+    def test_pages_released_and_reused_after_free(self, small_model):
+        """Slots churn through the pool: every page returns to the free list
+        when its sequence finishes, and later sequences reuse the same
+        physical pages through fresh table entries."""
+        cfg, model, params = small_model
+        eng = paged_engine(model, params, max_slots=2, num_pages=8)
+        first = eng.submit(G(max_new_tokens=6))
+        eng.run()
+        assert first.finished
+        assert eng.kv.free_physical_pages == 8
+        assert eng.kv.free_page_reserve == 8
+        used_before = set()
+        # serve more sequential waves than the pool could hold at once
+        refs = []
+        for i in range(4):
+            req = eng.submit(G(np.full(8, i + 1, np.int32), max_new_tokens=6))
+            eng.step()
+            used_before |= {int(p) for p in eng.kv.table[:, :2].ravel() if p}
+            eng.run()
+            refs.append(req)
+        assert all(r.finished and len(r.output) == 6 for r in refs)
+        assert eng.kv.free_physical_pages == 8
+        assert (eng.kv.table == 0).all()          # fully unmapped when idle
+        assert len(used_before) < 8 * 4           # pages were reused
+
+    def test_admission_charges_pages_not_max_len(self, small_model):
+        """Two requests each reserving >half the pool serialize on pages
+        even though slots are free — and both finish (reservation-based
+        accounting cannot deadlock appends)."""
+        cfg, model, params = small_model
+        eng = paged_engine(model, params, max_slots=2, num_pages=8)
+        a = eng.submit(G(max_new_tokens=33))   # need 8+32=40 -> 5 pages
+        b = eng.submit(G(np.full(8, 3, np.int32), max_new_tokens=33))
+        eng.step()
+        assert len(eng.scheduler.running) == 1    # b is page-gated
+        assert eng.kv.free_page_reserve == 3
+        eng.run(max_steps=500)
+        assert a.finished and b.finished
+        assert a.t_done <= b.t_done
+
+    def test_prompt_budget_and_capacity_reflect_pool(self, small_model):
+        cfg, model, params = small_model
+        slot_eng = make_engine(model, params, max_len=64)
+        tiny = paged_engine(model, params, max_len=64, num_pages=4)
+        assert tiny.kv.request_capacity == 32
+        assert slot_eng.prompt_budget(16) > tiny.prompt_budget(16)
+        assert tiny.prompt_budget(16) == 32 - 16 + 1
+        with pytest.raises(ValueError, match="KV positions"):
+            tiny.submit(G(np.ones(30, np.int32), 16))
+        tiny.submit(G(np.ones(tiny.prompt_budget(16), np.int32), 16))
+        tiny.run()

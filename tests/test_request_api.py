@@ -1,6 +1,8 @@
-"""Engine v3 request-object API: per-request SamplingParams, coalesced
-egress frames (FramePolicy), SLO admission (deadline drop, rate budgets),
-RequestOutput accounting, and the deprecation shim for the v2 kwargs API."""
+"""Engine request-object API: per-request SamplingParams (temperature /
+top-k / top-p / seed), coalesced egress frames (FramePolicy), SLO policies
+(deadline drop, mid-flight abort, rate budgets), and RequestOutput
+accounting. The v2 kwargs shim was removed in v4 — these entry points are
+GenerationRequest-only."""
 
 import math
 import time
@@ -63,32 +65,21 @@ class TestRequestObjects:
         assert out.finish_reason == FINISH_STOP
         assert out.tokens == ref.tokens[:3]
 
-    def test_request_object_matches_kwargs_shim(self, small_model):
-        """The shim and the object form must drive identical serving."""
-        cfg, model, params = small_model
-        new = make_engine(model, params).generate(gen(max_new_tokens=6))
-        with pytest.deprecated_call():
-            old = make_engine(model, params).generate(PROMPT, 6)
-        assert old == new.tokens        # legacy form returns the raw list
-
-    def test_kwargs_shim_warns_on_submit_and_stream(self, small_model):
+    def test_kwargs_form_is_gone(self, small_model):
+        """The deprecated v2 kwargs shim was removed one release after its
+        DeprecationWarning (as promised): raw-array submission is a
+        TypeError now, not a warning."""
         cfg, model, params = small_model
         eng = make_engine(model, params)
-        with pytest.deprecated_call():
-            req = eng.submit(PROMPT, 3)
-        eng.run()
-        assert len(req.output) == 3
-        with pytest.deprecated_call():
-            toks = list(eng.stream(PROMPT, max_new_tokens=3))
-        assert toks == req.output
-
-    def test_mixing_object_and_kwargs_rejected(self, small_model):
-        cfg, model, params = small_model
-        eng = make_engine(model, params)
-        with pytest.raises(TypeError, match="request object"):
-            eng.submit(gen(), max_new_tokens=5)
-        with pytest.raises(TypeError, match="request object"):
-            list(eng.stream(gen(), priority=3))
+        with pytest.raises(TypeError, match="GenerationRequest"):
+            eng.submit(PROMPT)
+        with pytest.raises(TypeError):
+            eng.submit(PROMPT, 3)
+        with pytest.raises(TypeError, match="GenerationRequest"):
+            eng.generate(PROMPT)
+        with pytest.raises(TypeError, match="GenerationRequest"):
+            list(eng.stream(PROMPT))
+        assert eng.idle                 # nothing was half-admitted
 
     def test_validation_errors(self, small_model):
         cfg, model, params = small_model
@@ -98,6 +89,10 @@ class TestRequestObjects:
         with pytest.raises(ValueError, match="top_k"):
             eng.submit(gen(params=SamplingParams(temperature=1.0,
                                                  top_k=cfg.vocab_size)))
+        with pytest.raises(ValueError, match="top_p"):
+            eng.submit(gen(params=SamplingParams(temperature=1.0, top_p=0.0)))
+        with pytest.raises(ValueError, match="top_p"):
+            eng.submit(gen(params=SamplingParams(temperature=1.0, top_p=1.5)))
         with pytest.raises(ValueError, match="coalesce"):
             eng.submit(gen(frame=FramePolicy(coalesce=0)))
         with pytest.raises(ValueError, match="on_deadline"):
@@ -193,6 +188,44 @@ class TestPerRequestSampling:
                 params=SamplingParams(temperature=2.0, top_k=1, seed=0)))
         assert out.tokens == ref
 
+    def test_tiny_top_p_is_greedy(self, small_model):
+        """A vanishing nucleus keeps only the argmax (the first sorted token
+        is always retained), so top_p→0 must reproduce greedy even at high
+        temperature."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params).generate(gen(max_new_tokens=6)).tokens
+        out = make_engine(model, params).generate(
+            gen(max_new_tokens=6,
+                params=SamplingParams(temperature=3.0, top_p=1e-9, seed=0)))
+        assert out.tokens == ref
+
+    def test_top_p_seeded_reproducible_and_distinct(self, small_model):
+        """top_p < 1 actually changes the sampled distribution (vs the same
+        seed unrestricted) and stays seed-reproducible."""
+        cfg, model, params = small_model
+        sp = SamplingParams(temperature=2.0, top_p=0.3, seed=9)
+        outs = [make_engine(model, params).generate(
+                    gen(max_new_tokens=10, params=sp)).tokens
+                for _ in range(2)]
+        assert outs[0] == outs[1]
+        free = make_engine(model, params).generate(
+            gen(max_new_tokens=10,
+                params=SamplingParams(temperature=2.0, seed=9))).tokens
+        assert outs[0] != free      # the nucleus restriction had an effect
+
+    def test_top_p_and_greedy_coexist_in_one_batch(self, small_model):
+        """A nucleus-sampled request must not perturb a greedy slot-mate
+        (the top_p row threads through the batched sample path)."""
+        cfg, model, params = small_model
+        ref = make_engine(model, params).generate(gen(max_new_tokens=6)).tokens
+        eng = make_engine(model, params, max_slots=2)
+        greedy_req = eng.submit(gen(max_new_tokens=6))
+        eng.submit(gen(np.full(8, 3, np.int32), max_new_tokens=6,
+                       params=SamplingParams(temperature=1.5, top_p=0.7,
+                                             seed=7)))
+        eng.run()
+        assert greedy_req.output == ref
+
 
 class TestBatchedSamplingFn:
     def test_sample_matches_temperature_per_row(self):
@@ -233,6 +266,49 @@ class TestBatchedSamplingFn:
             step=np.zeros(32, np.int32))
         toks = sampling.sample(jax.numpy.asarray(logits), state, kmax=2)
         assert set(np.asarray(toks).tolist()) <= {0, 1}
+
+    def test_sample_top_p_support(self):
+        """Two tokens carry ~all the mass; top_p=0.9 must never sample the
+        tail, while a top_p=1 row in the same batch remains unrestricted in
+        principle (its support includes everything)."""
+        logits = np.asarray([[8.0, 8.0, -20.0, -20.0]] * 32, np.float32)
+        state = sampling.SamplingState(
+            temp=np.full(32, 1.0, np.float32), top_k=np.zeros(32, np.int32),
+            key=np.stack([np.asarray(jax.random.PRNGKey(i), np.uint32)
+                          for i in range(32)]),
+            step=np.zeros(32, np.int32),
+            top_p=np.full(32, 0.9, np.float32))
+        toks = sampling.sample(jax.numpy.asarray(logits), state, kmax=0)
+        assert set(np.asarray(toks).tolist()) <= {0, 1}
+
+    def test_sample_top_p_composes_with_top_k(self):
+        """top_k=3 admits token 2; top_p then cuts it: the intersection is
+        {0, 1}."""
+        logits = np.asarray([[5.0, 4.9, 0.0, -1.0]] * 32, np.float32)
+        state = sampling.SamplingState(
+            temp=np.full(32, 1.0, np.float32), top_k=np.full(32, 3, np.int32),
+            key=np.stack([np.asarray(jax.random.PRNGKey(i), np.uint32)
+                          for i in range(32)]),
+            step=np.zeros(32, np.int32),
+            top_p=np.full(32, 0.9, np.float32))
+        toks = sampling.sample(jax.numpy.asarray(logits), state, kmax=4)
+        assert set(np.asarray(toks).tolist()) <= {0, 1}
+
+    def test_scalar_temperature_top_p_matches_batched(self):
+        logits = jax.random.normal(jax.random.key(5), (4, 64))
+        base = jax.random.PRNGKey(3)
+        keys = np.stack([np.asarray(jax.random.fold_in(base, s))
+                         for s in range(4)]).astype(np.uint32)
+        state = sampling.SamplingState(
+            temp=np.full(4, 0.9, np.float32), top_k=np.zeros(4, np.int32),
+            key=np.stack([np.asarray(base, np.uint32)] * 4),
+            step=np.arange(4, dtype=np.int32),
+            top_p=np.full(4, 0.6, np.float32))
+        batched = sampling.sample(logits, state, kmax=0)
+        for row in range(4):
+            one = sampling.temperature(logits[row:row + 1], keys[row],
+                                       temp=0.9, top_p=0.6)
+            assert int(batched[row]) == int(one[0])
 
     def test_temperature_rejects_top_k_at_vocab(self):
         logits = jax.random.normal(jax.random.key(0), (2, 8))
@@ -346,6 +422,72 @@ class TestSLO:
         assert stats.deadline_misses == 1
         assert stats.dropped_requests == 0
         assert late.result().deadline_missed
+
+    def test_abort_mid_flight_bounds_victim_and_frees_slot(self, small_model):
+        """on_deadline='abort' terminates a running request at the next step
+        after its deadline: partial tokens are flushed, the slot frees for
+        the queue, and the miss is counted (queued-only dropping would let
+        this request hog its slot to max_new_tokens)."""
+        from repro.runtime import FINISH_ABORTED
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        doomed = eng.submit(gen(max_new_tokens=50, deadline_s=5.0,
+                                on_deadline="abort"))
+        waiter = eng.submit(gen(np.full(8, 3, np.int32), max_new_tokens=3))
+        for _ in range(3):
+            eng.step()                  # doomed claims the only slot
+        assert not doomed.finished
+        doomed.t_submit -= 10.0         # deadline passes mid-flight
+        stats = eng.run(max_steps=2000)
+        assert doomed.finished and doomed.finish_reason == FINISH_ABORTED
+        assert 0 < len(doomed.output) < 50       # partial result delivered
+        assert doomed.result().finish_reason == FINISH_ABORTED
+        assert doomed.deadline_missed
+        assert stats.aborted_requests == 1
+        assert stats.deadline_misses == 1
+        assert waiter.finished and len(waiter.output) == 3
+        # the aborted stream was retired on the channel
+        assert doomed.stream_id not in eng.td.channel._stream_seq
+
+    def test_abort_discards_sealed_preempted_request(self, small_model):
+        """A sealed-out (preempted) abort-policy request whose deadline
+        passes is discarded instead of restored — no restore crossing, no
+        decode steps wasted on a dead request."""
+        from repro.runtime import FINISH_ABORTED
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        victim = eng.submit(gen(max_new_tokens=50, priority=0,
+                                deadline_s=5.0, on_deadline="abort"))
+        for _ in range(2):
+            eng.step()
+        high = eng.submit(gen(np.full(8, 7, np.int32), max_new_tokens=3,
+                              priority=5))
+        eng.step()                      # victim sealed out for the high-prio
+        assert victim.n_preemptions == 1
+        victim.t_submit -= 10.0         # deadline passes while sealed
+        restores_before = [e for e in eng.td.audit if e.kind == "restore_kv"]
+        stats = eng.run(max_steps=2000)
+        assert high.finished
+        assert victim.finished and victim.finish_reason == FINISH_ABORTED
+        restores = [e for e in eng.td.audit if e.kind == "restore_kv"]
+        assert len(restores) == len(restores_before)   # never restored
+        assert stats.aborted_requests == 1
+
+    def test_abort_policy_drops_while_queued_too(self, small_model):
+        """abort subsumes drop for queued requests: one that would be killed
+        mid-flight is not worth starting after its deadline."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=1)
+        keep = eng.submit(gen(max_new_tokens=6))
+        doomed = eng.submit(gen(np.full(8, 5, np.int32), max_new_tokens=6,
+                                deadline_s=0.01, on_deadline="abort"))
+        time.sleep(0.03)
+        stats = eng.run()
+        assert keep.finished
+        assert doomed.dropped and doomed.output == []
+        assert stats.dropped_requests == 1
 
     def test_rate_budget_throttles_class_without_starving_others(self, small_model):
         """Priority 0 has a tiny token budget; after it is spent, priority-1
