@@ -22,4 +22,14 @@ python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
     --priority-mix 0:3,5:1 --kv-backend paged --page-size 8 --seed 1 \
     --sample-temp 0.7
 
+# mesh smoke: 2 forced host devices, the engine spanning a dp=2 mesh (batch
+# sharded, params FSDP-placed and gathered per step). Must print the
+# measured-vs-modeled link-tax line — the collective path is live, not
+# just modeled.
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee cgpu \
+    --requests 4 --max-new-tokens 4 --prefill-buckets 8,16 --slots 2 \
+    --mesh dp=2 --seed 2 | tee /tmp/ci_mesh_smoke.out
+grep -q "link-tax" /tmp/ci_mesh_smoke.out
+
 echo "ci_fast OK"

@@ -30,6 +30,15 @@ bytes per preemption for paged — the Insight-10 claim that what crosses
 the boundary (pages actually holding tokens vs a whole max_len slot) is
 the lever.
 
+The mesh sweep (``--mesh dp=2`` or ``dp=2,tp=2``; relaunches itself with
+forced host devices when needed) serves the same seeded workload on a
+single device and on a mesh-spanning engine, asserts byte-identical
+outputs on dp-only meshes, and reports the *measured* collective path:
+``ChannelStats.collective_bytes``/``collective_s`` (HLO-parsed bytes +
+all-gather probe on the real mesh) against the closed-form bytes/ICI_BW
+estimate, priced through ``overheads.predict`` both ways — the
+measured-vs-modeled link_tax delta for the paper's §V-D4 Insight 12.
+
     PYTHONPATH=src:. python benchmarks/serve_bench.py [--requests 12] [--tee tdx]
 """
 
@@ -42,9 +51,9 @@ import numpy as np
 
 from benchmarks.common import build_bench_model
 from repro.core import TrustDomain
-from repro.core.overheads import PROFILES
+from repro.core.overheads import PROFILES, measured_link_tax
 from repro.runtime import (Engine, FramePolicy, GenerationRequest,
-                           SamplingParams, stats_from_requests)
+                           SamplingParams, parse_mesh, stats_from_requests)
 
 
 def make_workload(n: int, vocab: int, seed: int = 7):
@@ -201,6 +210,58 @@ def kv_backend_sweep(model, params, vocab, *, tee: str, max_slots: int,
               f"{ratio:.1f}x fewer bytes per eviction")
 
 
+def mesh_sweep(model, params, vocab, *, mesh: str, tee: str, max_slots: int,
+               requests: int):
+    """Single-device vs mesh-spanning engine over one seeded workload:
+    byte-identical outputs (dp meshes), then the measured-vs-modeled
+    link_tax comparison from the mesh engine's collective counters."""
+    dp, tp = parse_mesh(mesh)
+    slots = max(max_slots, dp)           # divisible batch => sharded cache
+    slots += (-slots) % dp
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(1, vocab, size=int(l)).astype(np.int32)
+               for l in rng.integers(8, 60, size=requests)]
+    print(f"\nmesh sweep (single vs {mesh}, tee={tee}, slots={slots}):")
+
+    results = {}
+    for label, spec in (("single", None), (mesh, mesh)):
+        td = TrustDomain(tee if tee != "none" else "cgpu")
+        eng = Engine(model, params, max_slots=slots, max_len=128,
+                     trust_domain=td, prefill_buckets=(16, 32, 64),
+                     mesh=spec)
+        t0 = time.monotonic()
+        reqs = [eng.submit(GenerationRequest(
+                    prompt=p, max_new_tokens=12,
+                    params=SamplingParams(temperature=0.8, top_k=16, seed=i)))
+                for i, p in enumerate(prompts)]
+        eng.run(max_steps=100_000)
+        wall = time.monotonic() - t0
+        assert all(r.finished for r in reqs)
+        stats = stats_from_requests(reqs)
+        print(f"  {label:8s} {stats.total_tokens:6d} tok  {wall:6.2f}s  "
+              f"{stats.throughput_tps:8.1f} tok/s")
+        results[label] = dict(outputs=[r.output for r in reqs], td=td,
+                              plan=eng.plan, stats=stats)
+
+    if tp == 1:
+        assert results["single"]["outputs"] == results[mesh]["outputs"], \
+            "dp mesh must produce byte-identical outputs"
+        print("  outputs byte-identical across the mesh")
+    else:
+        print("  (tp > 1: outputs numerically equivalent, not bitwise — "
+              "TP all-reduce ordering)")
+
+    ch = results[mesh]["td"].channel.stats
+    profile = tee if tee != "none" else "cgpu"
+    _, _, line = measured_link_tax(
+        ch, profile, results[mesh]["stats"].mean_latency_s or 1e-3)
+    print(f"  link-tax ({profile}, {PROFILES[profile].link_tax}x): {line}")
+    assert ch.collective_steps > 0, "mesh engine recorded no decode steps"
+    if dp * tp > 1:
+        assert ch.collective_bytes > 0, \
+            "a multi-device mesh must move collective bytes"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -218,7 +279,16 @@ def main():
                          "asserts; 'none' skips)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged-backend page size for the KV sweep")
+    ap.add_argument("--mesh", default=None, metavar="dp=N[,tp=M]",
+                    help="also run the mesh sweep: single-device vs "
+                         "mesh-spanning engine with measured-vs-modeled "
+                         "link-tax comparison")
     args = ap.parse_args()
+
+    if args.mesh is not None:
+        from repro.launch.mesh import ensure_host_devices
+        dp, tp = parse_mesh(args.mesh)
+        ensure_host_devices(dp * tp)
 
     cfg, model, params = build_bench_model(d_model=args.d_model,
                                            num_layers=args.layers)
@@ -244,6 +314,10 @@ def main():
                          tee=args.tee if args.tee != "none" else "cgpu",
                          max_slots=args.max_slots, requests=args.requests,
                          page_size=args.page_size, backends=backends)
+    if args.mesh is not None:
+        mesh_sweep(model, params, cfg.vocab_size, mesh=args.mesh,
+                   tee=args.tee, max_slots=args.max_slots,
+                   requests=args.requests)
 
 
 if __name__ == "__main__":

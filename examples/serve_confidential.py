@@ -13,23 +13,35 @@ API in one glance (``repro.runtime``)::
                                FramePolicy, RequestOutput)
 
     engine = Engine(model, params, trust_domain=td,
-                    kv_backend="paged", page_size=16)  # or "slot" (dense);
+                    kv_backend="paged", page_size=16,  # or "slot" (dense);
                                                      #  paged = page-charged
                                                      #  admission + per-page
                                                      #  sealed preemption
+                    mesh="dp=4")                     # span a 4-device mesh
+                                                     #  (batch sharded, params
+                                                     #  FSDP-placed, measured
+                                                     #  collective traffic in
+                                                     #  ChannelStats; omit for
+                                                     #  one device — launcher
+                                                     #  flag: serve.py --mesh)
     req = engine.submit(GenerationRequest(
         prompt=tok.encode("confidential inference"),
         max_new_tokens=32,
         priority=5,                                  # preempts lower classes
         params=SamplingParams(temperature=0.8,       # 0.0 = greedy default
                               top_k=40, top_p=0.9,   # nucleus: 1.0 = off
+                              repetition_penalty=1.2,  # >1 discourages repeats
+                              presence_penalty=0.5,  # flat per-seen-token tax
                               seed=7),               # seeded => reproducible,
                                                      #  even across preemption
         frame=FramePolicy(coalesce=4),               # 4 tokens per encrypted
                                                      #  egress frame (Insight 10)
         deadline_s=2.0, on_deadline="abort"))        # SLO: "drop" (queued
                                                      #  only) or "abort"
-                                                     #  (mid-flight too)
+                                                     #  (mid-flight too);
+                                                     #  admission queues order
+                                                     #  by slack (EDF) so
+                                                     #  aborts stay rare
     engine.run()
     out: RequestOutput = req.result()
     out.tokens, out.finish_reason        # "length"|"stop"|"dropped"|"aborted"

@@ -40,6 +40,16 @@ class ChannelStats:
     seal_bytes: int = 0
     restore_events: int = 0
     restore_bytes: int = 0
+    # cross-device collective traffic inside the domain (mesh-spanning
+    # engines): bytes each device moved over the interconnect per decode
+    # step, and the *measured* time those collectives took on the real mesh
+    # (a shard_map all-gather probe, not the closed-form roofline estimate).
+    # This is the traffic the encrypted-interconnect tax (link_tax) applies
+    # to — overheads.predict(collective_s=stats.collective_s / steps) prices
+    # it from observation instead of the model.
+    collective_steps: int = 0
+    collective_bytes: int = 0
+    collective_s: float = 0.0
 
     @property
     def crossings_per_token(self) -> float:
@@ -49,12 +59,19 @@ class ChannelStats:
     def seal_bytes_per_event(self) -> float:
         return self.seal_bytes / self.seal_events if self.seal_events else 0.0
 
+    @property
+    def collective_s_per_step(self) -> float:
+        return (self.collective_s / self.collective_steps
+                if self.collective_steps else 0.0)
+
     def reset(self):
         self.messages_in = self.messages_out = 0
         self.bytes_in = self.bytes_out = 0
         self.tokens_out = 0
         self.seal_events = self.seal_bytes = 0
         self.restore_events = self.restore_bytes = 0
+        self.collective_steps = self.collective_bytes = 0
+        self.collective_s = 0.0
 
 
 @dataclasses.dataclass

@@ -147,6 +147,17 @@ class TrustDomain:
         self.channel.stats.restore_bytes += int(n_bytes)
         self._log("restore_kv", f"{n_tensors} tensors {n_bytes}B {detail}".strip())
 
+    def record_collective(self, n_bytes: int, seconds: float,
+                          steps: int = 1) -> None:
+        """Account ``steps`` decode steps' cross-device collective traffic
+        (a mesh-spanning engine): ``n_bytes`` moved per device over the
+        interconnect, taking a *measured* ``seconds`` (the ShardedPlan's
+        shard_map all-gather probe). This is the traffic link_tax applies to;
+        no audit event per step — the counters are the product."""
+        self.channel.stats.collective_steps += int(steps)
+        self.channel.stats.collective_bytes += int(n_bytes)
+        self.channel.stats.collective_s += float(seconds)
+
     def open_stream(self) -> int:
         """Allocate a never-reused egress stream id (see BounceBuffer)."""
         return self.channel.open_stream()

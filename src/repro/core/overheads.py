@@ -81,7 +81,15 @@ PROFILES: Dict[str, TEEProfile] = {
                       fixed_boundary_s=4e-5, numa_broken_tax=0.35,
                       hugepage_loss=0.042,
                       notes="virt tax + memcrypt + encrypted UPI + no 1G pages"),
-    # H100 confidential GPU: 4.4-8%, fixed-cost dominated; HBM unencrypted
+    # H100 confidential GPU: 4.4-8%, fixed-cost dominated; HBM unencrypted.
+    # link_tax provenance (Insight 12, §V-D4): with CC on, multi-GPU traffic
+    # cannot use direct RDMA and is host-routed through encrypted bounce
+    # buffers, capping at ~3 GB/s against ~40 GB/s plain — the same bytes
+    # take 40/3 ≈ 13.3x longer, i.e. a tax of 40/3 - 1 ≈ 12.3 on whatever
+    # time the collectives already cost. That collective time is the one
+    # input ``predict`` will happily take *measured* (its ``collective_s``
+    # override, fed from ChannelStats on a mesh-spanning engine) instead of
+    # from the closed-form roofline estimate.
     "cgpu": TEEProfile("cgpu", compute_tax=0.0, mem_tax=0.0, link_tax=12.3,
                        fixed_boundary_s=3.5e-4,
                        notes="PCIe bounce buffer + launch latency; "
@@ -110,13 +118,24 @@ class OverheadBreakdown:
 
 def predict(terms: RooflineTerms, profile: str | TEEProfile,
             *, numa_bound: bool = True, hugepages_fixed: bool = True,
-            steps: int = 1) -> OverheadBreakdown:
+            steps: int = 1,
+            collective_s: Optional[float] = None) -> OverheadBreakdown:
     """TEE overhead for one step given plain roofline terms.
 
     ``numa_bound=False`` models the paper's broken-NUMA deployments (Fig 5/6);
     ``hugepages_fixed=False`` adds the TDX hugepage loss (Insight 7).
+
+    ``collective_s`` overrides ``terms.collective_s`` with a *measured*
+    per-step collective time — e.g. ``ChannelStats.collective_s_per_step``
+    from a mesh-spanning engine, where the time comes from a real all-gather
+    on the serving mesh rather than the bytes/ICI_BW closed form. link_tax
+    then prices the encrypted interconnect from observation: the cgpu value
+    of 12.3 is Insight 12's host-routed 3-vs-40 GB/s ratio (see PROFILES),
+    and applying it to a measured baseline is exactly the §V-D4 experiment.
     """
     p = PROFILES[profile] if isinstance(profile, str) else profile
+    if collective_s is not None:
+        terms = dataclasses.replace(terms, collective_s=float(collective_s))
     mem_tax = p.mem_tax
     if not numa_bound:
         mem_tax += p.numa_broken_tax
@@ -138,6 +157,49 @@ def predict(terms: RooflineTerms, profile: str | TEEProfile,
         "boundary": d_fixed / t_plain,
     }
     return OverheadBreakdown(p.name, t_plain, t_tee, t_tee / t_plain - 1.0, per_term)
+
+
+# how an observed decode-step latency is apportioned between roofline terms
+# when no per-term measurement exists (launchers' standing estimate for a
+# decode-bound serving point: mostly memory, some compute, the remainder
+# collective/boundary). One definition — serve.py's modeled-overhead block
+# and measured_link_tax must price from the same split.
+STEP_COMPUTE_FRACTION = 0.3
+STEP_MEMORY_FRACTION = 0.65
+
+
+def measured_link_tax(channel_stats, profile: str, step_s: float
+                      ) -> "tuple[OverheadBreakdown, OverheadBreakdown, str]":
+    """Measured-vs-modeled link-tax comparison for a mesh-spanning engine.
+
+    ``channel_stats`` is a :class:`~repro.core.bounce.ChannelStats` (duck-
+    typed): its ``collective_bytes``/``collective_steps`` give the per-step
+    interconnect volume, priced once through the closed-form roofline
+    estimate (bytes / ICI_BW) and once through the *measured* per-step
+    collective time (``collective_s_per_step``, an all-gather probe on the
+    real mesh). ``step_s`` is the observed decode-step latency the
+    compute/memory terms are apportioned from (the launcher's standing
+    0.3/0.65 split). Returns (modeled, measured, report line) — one
+    formatter, shared by serve.py and serve_bench.py, so the pricing cannot
+    silently diverge between them.
+    """
+    from repro.roofline.analysis import ICI_BW   # lazy: core <-/-> roofline
+    steps = max(channel_stats.collective_steps, 1)
+    per_step_b = channel_stats.collective_bytes // steps
+    modeled_s = per_step_b / ICI_BW
+    measured_s = channel_stats.collective_s_per_step
+    terms = RooflineTerms(compute_s=STEP_COMPUTE_FRACTION * step_s,
+                          memory_s=STEP_MEMORY_FRACTION * step_s,
+                          collective_s=modeled_s)
+    modeled = predict(terms, profile)
+    measured = predict(terms, profile, collective_s=measured_s)
+    line = (f"{per_step_b} collective B/step over "
+            f"{channel_stats.collective_steps} steps; collective_s modeled "
+            f"{modeled_s * 1e6:.1f}us vs measured {measured_s * 1e6:.1f}us "
+            f"-> TEE overhead {modeled.overhead * 100:.2f}% vs "
+            f"{measured.overhead * 100:.2f}% "
+            f"(delta {(measured.overhead - modeled.overhead) * 100:+.2f} pts)")
+    return modeled, measured, line
 
 
 def sweep_batch(profile: str, compute_per_token_s: float, memory_s: float,

@@ -104,21 +104,27 @@ def unseal_tensor(key: SealingKey, sealed: SealedTensor) -> jax.Array:
 # pytrees
 # ---------------------------------------------------------------------------
 
-def seal_tree(key: SealingKey, tree: Params, prefix: str = "params") -> Dict[str, SealedTensor]:
+def seal_tree(key: SealingKey, tree: Params, prefix: str = "params",
+              suffix: str = "") -> Dict[str, SealedTensor]:
+    """``suffix`` lands after the leaf path in every derived name
+    (``{prefix}{leaf}{suffix}``): sharded backends tag each seal with the
+    addressable shard it was read from (``/s{shard}``), so two hosts sealing
+    concurrently under one prefix can never collide in nonce space."""
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        name = prefix + jax.tree_util.keystr(path)
+        name = prefix + jax.tree_util.keystr(path) + suffix
         out[name] = seal_tensor(key, name, leaf)
     return out
 
 
 def unseal_tree(key: SealingKey, sealed: Dict[str, SealedTensor],
-                treedef_like: Params, prefix: str = "params") -> Params:
+                treedef_like: Params, prefix: str = "params",
+                suffix: str = "") -> Params:
     flat, treedef = jax.tree_util.tree_flatten_with_path(treedef_like)
     leaves = []
     for path, _ in flat:
-        name = prefix + jax.tree_util.keystr(path)
+        name = prefix + jax.tree_util.keystr(path) + suffix
         leaves.append(unseal_tensor(key, sealed[name]))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

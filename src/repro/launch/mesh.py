@@ -4,9 +4,18 @@
 this module never touches jax device state — the dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
 and tests/benches must keep seeing 1 device.
+
+``ensure_host_devices`` is the CLI affordance for mesh-spanning serving on
+one host: XLA's forced host device count must be set before jax first
+initializes, which is too late once a launcher module has imported jax — so
+the launcher re-execs itself once with the flag set.
 """
 
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import jax
 
@@ -25,3 +34,26 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
     return make_mesh((data, model), ("data", "model"))
+
+
+def ensure_host_devices(n: int) -> None:
+    """Guarantee jax sees >= ``n`` devices, re-execing this process ONCE
+    with ``--xla_force_host_platform_device_count`` if it does not (the flag
+    only takes effect before jax initializes). No-op when enough devices
+    exist; raises if the relaunch already happened and still fell short
+    (a real accelerator platform that cannot be subdivided)."""
+    if len(jax.devices()) >= n:
+        return
+    if os.environ.get("_REPRO_MESH_RELAUNCHED"):
+        raise RuntimeError(
+            f"need {n} devices but jax sees {len(jax.devices())} even after "
+            f"forcing the host platform — shrink the mesh")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}")
+    env["_REPRO_MESH_RELAUNCHED"] = "1"
+    print(f"[mesh] {len(jax.devices())} device(s) < {n}: relaunching with "
+          f"{n} forced host devices")
+    sys.stdout.flush()
+    raise SystemExit(subprocess.run(
+        [sys.executable, sys.argv[0]] + sys.argv[1:], env=env).returncode)

@@ -5,7 +5,7 @@ registered architecture, on the v3 request-object API.
         --tee tdx --requests 8 --max-new-tokens 16 \
         --prefill-buckets 8,16,32 --priority-mix 0:3,5:1 \
         --coalesce 4 --sample-temp 0.8 --top-k 40 --top-p 0.9 --seed 7 \
-        --kv-backend paged --page-size 16
+        --kv-backend paged --page-size 16 --mesh dp=2
 
 The full (non-smoke) configs are the production path (TPU slice); smoke
 configs serve on CPU. With a confidential mode the launcher performs the
@@ -16,6 +16,10 @@ seeded per-request sampling; ``--priority-mix`` assigns weighted priorities
 so the sealed-KV preemption path is exercised under load. ``--kv-backend
 paged`` swaps the dense slot cache for the page-pool layout (page-granular
 admission and sealing; see repro.runtime.kvcache for the selection guide).
+``--mesh dp=N[,tp=M]`` spans the engine across a device mesh (relaunching
+with forced host devices when needed) and reports the measured-vs-modeled
+encrypted-interconnect (link_tax) comparison — the collective time is then
+a real all-gather on the serving mesh, not the closed-form estimate.
 """
 
 from __future__ import annotations
@@ -28,8 +32,12 @@ import numpy as np
 
 from repro.configs import get_config, list_configs, smoke_config
 from repro.core import RooflineTerms, TrustDomain
+from repro.core.overheads import (STEP_COMPUTE_FRACTION,
+                                  STEP_MEMORY_FRACTION, measured_link_tax)
+from repro.launch.mesh import ensure_host_devices
 from repro.models import build_model
-from repro.runtime import Engine, FramePolicy, GenerationRequest, SamplingParams
+from repro.runtime import (Engine, FramePolicy, GenerationRequest,
+                           SamplingParams, parse_mesh)
 
 
 def parse_buckets(spec: str):
@@ -90,7 +98,21 @@ def main():
                     help="tokens per KV page (paged backend)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool size in pages (default: dense-equivalent)")
+    ap.add_argument("--mesh", default=None, metavar="dp=N[,tp=M]",
+                    help="span the engine across a device mesh (forces host "
+                         "devices if needed) and report measured link tax")
     args = ap.parse_args()
+
+    if args.mesh is not None:
+        dp, tp = parse_mesh(args.mesh)
+        ensure_host_devices(dp * tp)
+        padded = args.slots + (-args.slots) % dp
+        if padded != args.slots:
+            # a non-divisible batch silently falls back to a replicated
+            # cache — pad instead so the sharded experiment actually runs
+            print(f"[mesh] rounding --slots {args.slots} up to {padded} "
+                  f"(a dp={dp} mesh shards whole slots per data-shard)")
+            args.slots = padded
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encdec":
@@ -112,7 +134,9 @@ def main():
                     prefill_len=args.prefill_len,
                     prefill_buckets=args.prefill_buckets, trust_domain=td,
                     kv_backend=args.kv_backend, page_size=args.page_size,
-                    num_pages=args.num_pages)
+                    num_pages=args.num_pages, mesh=args.mesh)
+    if args.mesh is not None:
+        print(f"[mesh] engine spans {engine.plan.describe()}")
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
     for i in range(args.requests):
@@ -150,6 +174,14 @@ def main():
               f"{ch.seal_bytes} B out ({ch.seal_bytes_per_event:.0f} B/seal), "
               f"{ch.restore_events} restores / {ch.restore_bytes} B back "
               f"[kv={args.kv_backend}]")
+    if args.mesh is not None:
+        # measured-vs-modeled encrypted-interconnect (link_tax) comparison:
+        # same roofline terms, collective time once from the closed form
+        # (bytes / ICI_BW) and once measured on the real mesh collective.
+        profile = args.tee if td.confidential else "cgpu"
+        _, _, line = measured_link_tax(ch, profile,
+                                       stats.mean_latency_s or 1e-3)
+        print(f"link-tax [{args.mesh}, {profile}]: {line}")
     if td.confidential:
         print(f"boundary: {ch}")
         print(f"frame coalescing: {ch.messages_out} egress frames / "
@@ -157,7 +189,8 @@ def main():
               f"{ch.crossings_per_token:.3f} crossings/token "
               f"(coalesce={args.coalesce})")
         step = stats.mean_latency_s or 1e-3
-        terms = RooflineTerms(compute_s=0.3 * step, memory_s=0.65 * step,
+        terms = RooflineTerms(compute_s=STEP_COMPUTE_FRACTION * step,
+                              memory_s=STEP_MEMORY_FRACTION * step,
                               collective_s=0.05 * step)
         print("modeled platform overhead:", td.predict_overhead(terms).as_row())
 

@@ -52,16 +52,29 @@ class SamplingParams:
     (``top_p=1.0`` = off). ``top_k`` and ``top_p`` compose: the support is
     the intersection of both restrictions.
 
+    ``repetition_penalty`` (> 1 discourages; CTRL-style: positive logits of
+    already-generated tokens divide by it, negative ones multiply) and
+    ``presence_penalty`` (a flat subtraction from every already-generated
+    token's logit; may be negative to *encourage* reuse) act on this
+    request's generated tokens only — the prompt is not penalized, and
+    neither applies to greedy requests. The neutral values (1.0 / 0.0) are
+    free: like ``top_p``, the penalty math only compiles into the decode
+    step when some live request actually uses it.
+
     ``seed`` makes the request reproducible: the engine derives one PRNG key
     from it and ``fold_in``s the output-token index at every step, so the
     same seeded request yields byte-identical tokens even across a sealed-KV
     preemption/restore cycle (the fold-in depends only on how many tokens
-    exist, not on when they were produced). Unseeded sampled requests get a
-    fresh seed at submit time (recorded in :class:`RequestOutput`).
+    exist, not on when they were produced — and the penalty history is
+    rebuilt from the request's own output list on restore). Unseeded sampled
+    requests get a fresh seed at submit time (recorded in
+    :class:`RequestOutput`).
     """
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
+    repetition_penalty: float = 1.0
+    presence_penalty: float = 0.0
     seed: Optional[int] = None
 
     def validate(self, vocab_size: int) -> None:
@@ -77,6 +90,14 @@ class SamplingParams:
             raise ValueError(
                 f"top_p must be in (0, 1], got {self.top_p}; "
                 f"use top_p=1.0 for an unrestricted distribution")
+        if not (np.isfinite(self.repetition_penalty)
+                and self.repetition_penalty > 0):
+            raise ValueError(
+                f"repetition_penalty must be finite and > 0, got "
+                f"{self.repetition_penalty}; 1.0 turns it off")
+        if not np.isfinite(self.presence_penalty):
+            raise ValueError(f"presence_penalty must be finite, got "
+                             f"{self.presence_penalty}; 0.0 turns it off")
 
     @property
     def is_greedy(self) -> bool:

@@ -1,4 +1,4 @@
-"""Inference engine v4: pluggable KV backends behind the v3 request API.
+"""Inference engine v5: one engine spans a mesh behind a ComputePlan seam.
 
 Dataflow per paper Fig 2's protected stack:
   prompt --(encrypted bounce buffer)--> bucketed batched prefill(slots)
@@ -6,34 +6,44 @@ Dataflow per paper Fig 2's protected stack:
   bounce buffer, 1..N tokens each per the request's FramePolicy)--> client.
 
 The serving API is the request-object model in :mod:`repro.runtime.api`
-(engine v3: per-request sampling with fold_in-per-token PRNG keys, coalesced
-egress frames, SLO admission with deadline policies and per-priority token-
-rate budgets). v4 adds two layers underneath:
+(per-request sampling — temperature/top-k/top-p and now repetition/presence
+penalties — coalesced egress frames, SLO admission). Underneath sit three
+pluggable layers:
 
-  * **Pluggable KV layout** — the engine no longer owns a dense cache; it
-    speaks :class:`~repro.runtime.kvcache.KVBackend`
-    (``Engine(kv_backend="slot"|"paged")``). The slot-dense backend is the
-    previous behavior, bit for bit. The paged backend
-    (:mod:`repro.runtime.paged`) stores KV as a page pool + page table:
-    admission charges ``ceil(need/page_size)`` pages instead of an implicit
-    ``max_len`` slot, and sealed preemption moves per-page ciphertext —
-    bytes across the trust boundary scale with tokens used (Insight 10:
-    boundary cost is fixed-cost dominated, so *what crosses* is the lever).
-    Capacity questions (``prompt_budget``, admission, restore room) are
-    delegated to the backend; preemption can be *partial* on the paged
-    backend (seal just the tail pages a higher-priority request needs — the
-    victim keeps its slot and resident pages and resumes by restoring only
-    that delta).
+  * **ComputePlan** (:mod:`repro.runtime.plan`) — every device-facing
+    concern (param placement, the jitted prefill/decode callables,
+    host<->device transfer policy, collective accounting) goes through one
+    seam. :class:`SingleDevicePlan` reproduces the v4 engine bit for bit;
+    :class:`ShardedPlan` (``Engine(mesh="dp=8")``) spans a jax mesh: batch
+    rows shard over the data axis, params place FSDP-style per
+    ``distributed.sharding.param_specs`` (sharded at rest, all-gathered at
+    use — real per-step interconnect traffic), the KV cache shards per
+    ``cache_specs``, and outputs stay byte-identical to one device on
+    dp-only meshes. The plan *measures* its collective path (HLO-parsed
+    bytes/step + a shard_map all-gather probe on the real mesh) into
+    ``ChannelStats.collective_bytes``/``collective_s`` — the measured input
+    ``overheads.predict(collective_s=...)`` prices link_tax with, instead
+    of the closed form the paper's §V-D4 Insight-12 estimate comes from.
 
-  * **Decode-time SLO enforcement** — ``on_deadline="abort"`` terminates a
-    mid-flight request whose deadline passed (partial tokens flushed,
-    ``finish_reason="aborted"``) and discards — rather than restores — a
-    sealed-out one, so a deadline-bound victim cannot unboundedly occupy a
-    slot its slot-mates are queued behind.
+  * **Pluggable KV layout** — the engine speaks
+    :class:`~repro.runtime.kvcache.KVBackend`
+    (``Engine(kv_backend="slot"|"paged")``): dense slots, or a page pool +
+    table where admission charges ``ceil(need/page_size)`` pages and sealed
+    preemption moves per-page ciphertext (bytes scale with tokens used;
+    preemption can be *partial* — just a victim's tail pages). Under a mesh
+    the chosen layout is wrapped by
+    :class:`~repro.runtime.kvcache.ShardedKVBackend`: seal/restore operate
+    per addressable shard (``/s{shard}`` nonce suffixes), so preemption
+    round-trips byte-identically however the cache is laid out.
 
-All device compute is jitted once per shape; decode donates the cache. The
-v2 kwargs form of ``submit``/``generate``/``stream`` (deprecated in v3) has
-been removed: these entry points take a :class:`GenerationRequest`.
+  * **SLO enforcement** — the admission and sealed-restore queues order by
+    *slack* (earliest absolute deadline, priority tiebreak) by default, so
+    ``on_deadline="abort"`` — which terminates expired mid-flight requests
+    and discards expired sealed ones — fires rarely rather than cheaply
+    (``Engine(admission_order="priority")`` restores the v4 ordering).
+
+All device compute is jitted once per shape; decode donates the cache.
+``submit``/``generate``/``stream`` take a :class:`GenerationRequest`.
 """
 
 from __future__ import annotations
@@ -53,7 +63,8 @@ from repro.runtime import sampling
 from repro.runtime.api import (FINISH_ABORTED, GenerationRequest,
                                RequestOutput)
 from repro.runtime.kvcache import (KVBackend, SlotState, make_backend,
-                                   next_pow2)
+                                   next_pow2, tail_blob_names)
+from repro.runtime.plan import ComputePlan, ShardedPlan, SingleDevicePlan
 from repro.runtime.scheduler import Request, Scheduler, ServeStats
 
 Params = Any
@@ -112,7 +123,10 @@ class Engine:
                  batch_prefill: bool = True,
                  rate_budgets: Optional[Dict[int, float]] = None,
                  kv_backend: str = "slot", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 mesh: Optional[str] = None,
+                 plan: Optional[ComputePlan] = None,
+                 admission_order: str = "slack"):
         """``prefill_buckets`` supersedes the v1 single static ``prefill_len``
         (kept as the default one-bucket config for compatibility). Buckets
         should be powers of two; each distinct (rows, bucket) prefill shape
@@ -127,9 +141,25 @@ class Engine:
         ``kv_backend`` selects the KV layout: ``"slot"`` (dense, default) or
         ``"paged"`` (page pool + table; ``page_size``/``num_pages`` size it,
         ``num_pages=None`` matches the dense footprint). See the
-        :mod:`repro.runtime.kvcache` docstring for when each wins."""
+        :mod:`repro.runtime.kvcache` docstring for when each wins.
+
+        ``mesh`` spans the engine across devices: ``"dp=4"`` shards the
+        batch (and FSDP-places params) over 4 devices, ``"dp=4,tp=2"`` adds
+        tensor parallelism over 2 more. Equivalently pass a ready
+        :class:`~repro.runtime.plan.ComputePlan` as ``plan``. Default: one
+        device, bit-identical to v4.
+
+        ``admission_order``: ``"slack"`` (default) serves
+        tightest-deadline-first with priority tiebreak; ``"priority"`` is
+        the v4 priority-only order."""
         self.model = model
-        self.params = params
+        if plan is not None and mesh is not None:
+            raise ValueError("pass mesh= or plan=, not both")
+        if plan is None:
+            plan = (ShardedPlan.from_spec(model, mesh) if mesh is not None
+                    else SingleDevicePlan(model))
+        self.plan = plan
+        self.params = self.plan.place_params(params)
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_len = prefill_len
@@ -143,11 +173,11 @@ class Engine:
                              f"({self.prefill_buckets} vs max_len={max_len})")
         self.batch_prefill = batch_prefill
         self.td = trust_domain or TrustDomain("none")
-        self.scheduler = Scheduler()
+        self.scheduler = Scheduler(order=admission_order)
         self.kv: KVBackend = make_backend(kv_backend, model,
                                           max_slots=max_slots, max_len=max_len,
                                           page_size=page_size,
-                                          num_pages=num_pages)
+                                          num_pages=num_pages, plan=self.plan)
         self._active_mask = np.zeros(max_slots, bool)
         self._last_token = np.zeros(max_slots, np.int32)
         self._preempted: List[PreemptedRequest] = []
@@ -155,12 +185,16 @@ class Engine:
         self._buckets: Dict[int, _RateBucket] = {
             prio: _RateBucket(rate) for prio, rate in (rate_budgets or {}).items()}
         self._seed_rng = np.random.default_rng()
-
-        def _prefill(params, tokens, cache):
-            return model.prefill(params, {"tokens": tokens}, cache)
-
-        self._prefill_fn = jax.jit(_prefill)
+        self._prefill_fn = self.plan.compile_prefill()
         self._vocab = model.cfg.vocab_size
+        # device mirror of slots.hist, maintained incrementally while some
+        # slot penalizes (see _hist_device) — the [slots, vocab] matrix must
+        # not be re-uploaded on every decode step. Per-token increments are
+        # queued in _hist_pending and applied as ONE batched scatter per
+        # step (a per-token .at[].add would copy the whole matrix per emit).
+        self._hist_dev = None
+        self._hist_dev_version = -1
+        self._hist_pending: List[Tuple[int, int]] = []
 
     @property
     def slots(self) -> SlotState:
@@ -229,7 +263,13 @@ class Engine:
             self.slots.clear_sampling(slot)
         else:
             self.slots.set_sampling(slot, p.temperature, p.top_k, p.top_p,
-                                    self._base_key(req))
+                                    self._base_key(req),
+                                    p.repetition_penalty, p.presence_penalty)
+            # penalty history follows the request, not the cache: rebuilt
+            # from its output list (empty at first admission; the generated
+            # prefix after a sealed restore), so a seeded penalized request
+            # re-samples byte-identically across preemption.
+            self.slots.set_hist(slot, req.output)
 
     def _static_kmax(self) -> int:
         """Pow2-rounded top_k bound → bounded set of compiled decode shapes."""
@@ -242,14 +282,46 @@ class Engine:
         state on all-greedy steps, and a ``top_p`` row only when some slot
         actually restricts (both are static pytree differences, so the
         nucleus sort and the sampling math compile only when used)."""
-        if not self.slots.any_sampled:
-            return None, 0
         s = self.slots
+        rep = jnp.asarray(s.rep_pen) if s.any_rep_pen else None
+        pres = jnp.asarray(s.presence) if s.any_presence else None
+        if rep is None and pres is None:
+            # no live penalties: drop the device mirror and its queue (also
+            # on the all-greedy path below — _emit_token must not keep
+            # feeding a queue nothing will ever drain).
+            hist = None
+            self._hist_dev = None
+            self._hist_pending.clear()
+        else:
+            hist = self._hist_device()
+        if not s.any_sampled:
+            return None, 0
         top_p = jnp.asarray(s.top_p) if s.any_top_p else None
         state = sampling.SamplingState(
             jnp.asarray(s.temp), jnp.asarray(s.top_k), jnp.asarray(s.key),
-            jnp.asarray(steps), top_p=top_p)
+            jnp.asarray(steps), top_p=top_p, rep_pen=rep, presence=pres,
+            hist=hist)
         return state, self._static_kmax()
+
+    def _hist_device(self):
+        """Device copy of the penalty history, kept in sync cheaply: bulk
+        host mutations (row rebuild/clear — admission, restore, release)
+        bump ``hist_version`` and trigger a full upload (which subsumes any
+        queued increments — the host matrix is always authoritative);
+        otherwise the per-token increments queued since the last step are
+        applied as one batched scatter, so the decode hot path ships a few
+        ints per step instead of [slots, vocab]."""
+        if (self._hist_dev is None
+                or self._hist_dev_version != self.slots.hist_version):
+            self._hist_dev = jnp.asarray(self.slots.hist)
+            self._hist_dev_version = self.slots.hist_version
+            self._hist_pending.clear()
+        elif self._hist_pending:
+            rows = jnp.asarray([s for s, _ in self._hist_pending], jnp.int32)
+            toks = jnp.asarray([t for _, t in self._hist_pending], jnp.int32)
+            self._hist_dev = self._hist_dev.at[rows, toks].add(1)
+            self._hist_pending.clear()
+        return self._hist_dev
 
     # -- egress ----------------------------------------------------------------
     def _flush_egress(self, req: Request) -> None:
@@ -275,6 +347,11 @@ class Engine:
         termination. Returns True if the request finished."""
         req = self.scheduler.running[slot]
         self.scheduler.record_token(slot, int(tok))
+        # penalty history (host), counted only for penalized slots; a
+        # counted token is queued for the device mirror so both sides agree
+        if (self.slots.note_token(slot, int(tok))
+                and self._hist_dev is not None):
+            self._hist_pending.append((slot, int(tok)))
         self._last_token[slot] = int(tok)
         done = req.done
         req.egress_buf.append(int(tok))
@@ -451,7 +528,7 @@ class Engine:
         if victim.priority >= incoming.priority:
             return False
         if (self.slots.free and victim_slot not in self._paused
-                and hasattr(self.kv, "seal_tail_pages")):
+                and self.kv.supports_partial):
             shortfall = (self.kv.pages_for(incoming.kv_need)
                          - self.kv.free_page_reserve)
             spare = self.kv.allocated_pages(victim_slot) - 1
@@ -469,10 +546,12 @@ class Engine:
         waiting for the pages (the reason the tail was sealed)."""
         for slot, paused in list(self._paused.items()):
             # every path that removes a paused slot from running (abort,
-            # whole-seal) also pops self._paused, so the victim is live here
+            # whole-seal) also pops self._paused, so the victim is live here.
+            # The gate is the strongest waiting PRIORITY (not the slack-
+            # ordered queue head — see Scheduler.peek_priority).
             victim = self.scheduler.running[slot]
-            head = self.scheduler.peek_waiting(self._admit_filter)
-            if head is not None and head.priority > victim.priority:
+            rival = self.scheduler.peek_priority(self._admit_filter)
+            if rival is not None and rival.priority > victim.priority:
                 continue
             if not self.kv.can_restore_tail(paused.n_pages):
                 continue
@@ -505,22 +584,48 @@ class Engine:
             if self._paused and self._resume_paused():
                 continue
             if self._preempted and self.slots.free:
-                best = max(self._preempted,
-                           key=lambda p: (p.req.priority, -p.req.rid))
-                head = self.scheduler.peek_waiting(self._admit_filter)
-                if ((head is None or head.priority <= best.req.priority)
-                        and self.kv.can_restore(best.req.kv_need)):
-                    self._preempted.remove(best)
-                    self.restore_slot(best.sealed, best.req)
-                    continue
+                # restore-vs-admit: only sealed requests that the strongest
+                # WAITING PRIORITY does not outrank are restorable
+                # (restoring one a waiting request outranks would just be
+                # preempted right back — livelock; gating on the slack-
+                # ordered queue head instead would let a deadline-bearing
+                # low-priority head unlock restores a waiting high-priority
+                # request should block). AMONG the eligible, the restore
+                # queue orders like the waiting queue: tightest slack first
+                # (static absolute deadlines), then priority — a sealed-out
+                # deadline-bound victim gets back in while its deadline is
+                # still meetable. Priority-only engines keep the v4
+                # selection.
+                rival = self.scheduler.peek_priority(self._admit_filter)
+                eligible = [p for p in self._preempted
+                            if rival is None
+                            or p.req.priority >= rival.priority]
+                if eligible:
+                    if self.scheduler.order == "slack":
+                        best = min(eligible,
+                                   key=lambda p: (p.req.abs_deadline,
+                                                  -p.req.priority,
+                                                  p.req.rid))
+                    else:
+                        best = max(eligible,
+                                   key=lambda p: (p.req.priority,
+                                                  -p.req.rid))
+                    if self.kv.can_restore(best.req.kv_need):
+                        self._preempted.remove(best)
+                        self.restore_slot(best.sealed, best.req)
+                        continue
             if (self.scheduler.queue and self.slots.free
                     and self._admit_batch() > 0):
                 continue
-            head = self.scheduler.peek_waiting(self._admit_filter)
-            if (head is not None
+            # preemption is a PRIORITY right, independent of queue order:
+            # the strongest waiting request may evict strictly weaker
+            # running work even when a tighter-deadline (lower-priority)
+            # request holds the slack-ordered queue head.
+            cand = self.scheduler.peek_priority(self._admit_filter)
+            if (cand is not None
                     and (not self.slots.free
-                         or not self.kv.can_admit(head.kv_need))
-                    and self._preempt_for(head)):
+                         or not self.kv.can_admit(cand.kv_need))
+                    and self._preempt_for(cand)):
                 continue
             return
 
@@ -546,6 +651,12 @@ class Engine:
         state, kmax = self._sampling_state(steps)
         next_np = self.kv.decode(self.params, self._last_token, state, kmax,
                                  write_slots=live)
+        if self.plan.is_sharded:
+            # account the step's cross-device collective traffic (bytes from
+            # the compiled HLO, seconds from the plan's measured probe)
+            n, cb, cs = self.plan.drain_collectives()
+            if n:
+                self.td.record_collective(cb, cs, steps=n)
         produced = 0
         for slot in list(live):
             if not self._active_mask[slot] or slot in self._paused:
@@ -623,13 +734,13 @@ class Engine:
                             f"kvslot/{req.stream_id}/{req.seal_epoch - 1}",
                             req.kv_need)
             # a sealed-while-paused eviction carries its earlier tail blob
-            # under an older epoch prefix; graft it back on top of the
-            # remainder (acquire() above already reserved the full need).
-            for name in sealed:
-                if name.endswith("/pagemeta"):
-                    self.kv.restore_tail_pages(
-                        self.td.sealing_key, sealed, slot,
-                        name[:-len("/pagemeta")], reserve=False)
+            # under an older epoch prefix (and, under a mesh, shard suffix);
+            # graft it back on top of the remainder (acquire() above already
+            # reserved the full need).
+            for gprefix, gsuffix in tail_blob_names(sealed):
+                self.kv.restore_tail_pages(
+                    self.td.sealing_key, sealed, slot, gprefix,
+                    reserve=False, suffix=gsuffix)
         except Exception:
             self.kv.release(slot)   # a failed (e.g. tampered) restore must
             raise                   # not leak the slot or its reservation
@@ -649,7 +760,7 @@ class Engine:
         the pool. The victim stays admitted — slot, sampling row, and head
         pages intact — but sits out of the decode batch until
         ``_resume_paused`` restores the delta."""
-        if not hasattr(self.kv, "seal_tail_pages"):
+        if not self.kv.supports_partial:
             raise RuntimeError(
                 f"the {self.kv.name} backend cannot seal at page granularity;"
                 f" use kv_backend='paged'")

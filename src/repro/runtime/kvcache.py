@@ -38,6 +38,24 @@ seal count; large pages (64–128) amortize per-page fixed costs toward
 slot-dense behavior. 16–32 is a good default at ``max_len`` ≤ 4k; scale
 page_size with context length so ``max_pages`` stays in the hundreds.
 
+**Sharded** (:class:`ShardedKVBackend`, implied by ``Engine(mesh=...)``)
+is not a third layout — it wraps either of the above when the engine spans
+a mesh (:class:`~repro.runtime.plan.ShardedPlan`). When to *shard* the
+cache vs replicate it: the slot-dense cache shards cleanly (each data-shard
+owns ``max_slots / dp`` whole sequences per
+:func:`repro.distributed.sharding.cache_specs` — shard it whenever the
+data-axis size divides ``max_slots`` (otherwise the batch dim falls back to
+replication and every seal is tagged ``/s0``), which also keeps decode
+outputs byte-identical to one device); the paged pool is *shared* by every
+sequence, so it replicates for now (its dense recurrent-state leaves still
+shard by batch) — prefer slot-dense for mesh serving until per-shard page
+pools land (ROADMAP). Sealing under a mesh is per *addressable shard*:
+every sealed name gains a ``/s{shard}`` suffix recording which data-shard
+the ciphertext left, so concurrent hosts sealing under one prefix occupy
+disjoint nonce namespaces and a preemption round-trips byte-identically
+(restore reads the shard tag back out of the sealed names — the slot it
+lands in may live on a different shard).
+
 Cache pytrees follow the model layout contract: top-level key "pos" is
 batch-major [b]; every other leaf is layer-stacked with batch at axis 1
 ([L, b, ...]). ``insert_slot``/``insert_rows``/``extract_slot`` are the
@@ -47,8 +65,9 @@ dense splice primitives both backends build on.
 from __future__ import annotations
 
 import dataclasses
+import re
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +76,7 @@ import numpy as np
 from repro.core.sealing import (SealedTensor, SealingKey, seal_tree,
                                 unseal_tree)
 from repro.runtime import sampling
+from repro.runtime.plan import ComputePlan, SingleDevicePlan
 
 Cache = Any
 Params = Any
@@ -78,14 +98,33 @@ class SlotState:
     top_k: np.ndarray   # [slots] i32; 0 → unrestricted
     top_p: np.ndarray   # [slots] f32; >= 1 → unrestricted
     key: np.ndarray     # [slots, 2] u32 per-request base PRNG keys
+    rep_pen: np.ndarray   # [slots] f32; 1.0 → no repetition penalty
+    presence: np.ndarray  # [slots] f32; 0.0 → no presence penalty
+    # [slots, vocab] i32 counts of *generated* tokens, tracked ONLY for
+    # slots whose request actually penalizes (greedy/unpenalized rows stay
+    # zero, so their churn never invalidates anything). Rebuilt from
+    # Request.output after a sealed restore, so seeded requests re-sample
+    # identically. Allocated lazily on the first penalized ``set_sampling``
+    # (engines that never see a penalty never pay max_slots x vocab ints).
+    # ``hist_version`` bumps on the BULK mutations (row rebuild/clear) so
+    # the engine's device mirror knows when an incremental update stream
+    # was broken and a re-upload is due — per-token ``note_token`` counts
+    # are mirrored incrementally instead of re-shipping the whole matrix
+    # every decode step.
+    vocab: int = 0
+    hist: Optional[np.ndarray] = None
+    hist_version: int = 0
 
     @classmethod
-    def create(cls, max_slots: int) -> "SlotState":
+    def create(cls, max_slots: int, vocab: int = 0) -> "SlotState":
         return cls(free=list(range(max_slots)), active={},
                    temp=np.zeros(max_slots, np.float32),
                    top_k=np.zeros(max_slots, np.int32),
                    top_p=np.ones(max_slots, np.float32),
-                   key=np.zeros((max_slots, 2), np.uint32))
+                   key=np.zeros((max_slots, 2), np.uint32),
+                   rep_pen=np.ones(max_slots, np.float32),
+                   presence=np.zeros(max_slots, np.float32),
+                   vocab=vocab)
 
     def acquire(self, request_id: int) -> Optional[int]:
         if not self.free:
@@ -101,17 +140,64 @@ class SlotState:
             self.clear_sampling(slot)
 
     def set_sampling(self, slot: int, temp: float, top_k: int, top_p: float,
-                     key: np.ndarray) -> None:
+                     key: np.ndarray, rep_pen: float = 1.0,
+                     presence: float = 0.0) -> None:
         self.temp[slot] = temp
         self.top_k[slot] = top_k
         self.top_p[slot] = top_p
         self.key[slot] = key
+        self.rep_pen[slot] = rep_pen
+        self.presence[slot] = presence
+        if self.penalized(slot) and self.hist is None and self.vocab > 0:
+            self.hist = np.zeros((len(self.temp), self.vocab), np.int32)
+
+    def penalized(self, slot: int) -> bool:
+        """Does this slot's request use a non-neutral penalty? Only such
+        slots have their token history tracked."""
+        return bool(self.rep_pen[slot] != 1.0 or self.presence[slot] != 0.0)
 
     def clear_sampling(self, slot: int) -> None:
         self.temp[slot] = 0.0
         self.top_k[slot] = 0
         self.top_p[slot] = 1.0
         self.key[slot] = 0
+        self.rep_pen[slot] = 1.0
+        self.presence[slot] = 0.0
+        if self.hist is not None and self.hist[slot].any():
+            # bump only when the row actually changes: routine churn of
+            # greedy/unpenalized slot-mates (whose rows are already zero)
+            # must not force a full [slots, vocab] mirror re-upload.
+            self.hist[slot] = 0
+            self.hist_version += 1
+
+    def note_token(self, slot: int, token: int) -> bool:
+        """Count one generated token into the penalty history — only for a
+        penalized slot (others keep zero rows so their churn stays free).
+        Incremental: does NOT bump hist_version — the caller mirrors the
+        increment itself. Returns whether the token was counted."""
+        if self.hist is None or not self.penalized(slot):
+            return False
+        self.hist[slot, int(token)] += 1
+        return True
+
+    def set_hist(self, slot: int, tokens: Sequence[int]) -> None:
+        """Rebuild a slot's penalty history (sealed restore: the token list
+        travels with the request, not with the cache). Unpenalized slots
+        keep zero rows; no version bump when the row is unchanged (fresh
+        admission into an already-clean row)."""
+        if self.hist is None:
+            return
+        if not self.penalized(slot):
+            if self.hist[slot].any():          # defensive: never stale
+                self.hist[slot] = 0
+                self.hist_version += 1
+            return
+        if not (len(tokens) or self.hist[slot].any()):
+            return
+        self.hist[slot] = 0
+        for t in tokens:
+            self.hist[slot, int(t)] += 1
+        self.hist_version += 1
 
     @property
     def any_sampled(self) -> bool:
@@ -120,6 +206,14 @@ class SlotState:
     @property
     def any_top_p(self) -> bool:
         return bool(((self.temp > 0) & (self.top_p < 1.0)).any())
+
+    @property
+    def any_rep_pen(self) -> bool:
+        return bool(((self.temp > 0) & (self.rep_pen != 1.0)).any())
+
+    @property
+    def any_presence(self) -> bool:
+        return bool(((self.temp > 0) & (self.presence != 0.0)).any())
 
     @property
     def max_top_k(self) -> int:
@@ -205,12 +299,15 @@ class KVBackend:
     """
 
     name: str = "?"
+    supports_partial = False   # page-granular (tail) eviction available?
 
-    def __init__(self, model, max_slots: int, max_len: int):
+    def __init__(self, model, max_slots: int, max_len: int,
+                 plan: Optional[ComputePlan] = None):
         self.model = model
         self.max_slots = max_slots
         self.max_len = max_len
-        self.slots = SlotState.create(max_slots)
+        self.plan = plan or SingleDevicePlan(model)
+        self.slots = SlotState.create(max_slots, model.cfg.vocab_size)
 
     # -- capacity -----------------------------------------------------------
     @property
@@ -268,15 +365,18 @@ class KVBackend:
         raise NotImplementedError
 
     # -- sealing --------------------------------------------------------------
-    def seal(self, key: SealingKey, slot: int,
-             prefix: str) -> Dict[str, SealedTensor]:
+    def seal(self, key: SealingKey, slot: int, prefix: str,
+             suffix: str = "") -> Dict[str, SealedTensor]:
         """Encrypt slot ``slot``'s KV for eviction across the trust boundary.
         ``prefix`` must be unique per (stream, seal epoch) — it derives the
-        nonces. Does NOT release the slot."""
+        nonces; ``suffix`` lands after the leaf path in every name (the
+        sharded wrapper's per-shard ``/s{shard}`` tag). Does NOT release the
+        slot."""
         raise NotImplementedError
 
     def restore(self, key: SealingKey, sealed: Dict[str, SealedTensor],
-                slot: int, prefix: str, n_tokens: int) -> None:
+                slot: int, prefix: str, n_tokens: int,
+                suffix: str = "") -> None:
         """Inverse of :meth:`seal` into freshly-acquired slot ``slot``."""
         raise NotImplementedError
 
@@ -288,9 +388,11 @@ class SlotDenseBackend(KVBackend):
 
     name = "slot"
 
-    def __init__(self, model, max_slots: int, max_len: int):
-        super().__init__(model, max_slots, max_len)
-        self.cache = model.init_cache(max_slots, max_len)
+    def __init__(self, model, max_slots: int, max_len: int,
+                 plan: Optional[ComputePlan] = None):
+        super().__init__(model, max_slots, max_len, plan)
+        self.cache = self.plan.place_dense_cache(
+            model.init_cache(max_slots, max_len))
 
         def _decode(params, tokens, cache, state, kmax):
             logits, cache = model.decode_step(params, tokens, cache)
@@ -298,8 +400,8 @@ class SlotDenseBackend(KVBackend):
                 return sampling.greedy(logits), cache
             return sampling.sample(logits, state, kmax=kmax), cache
 
-        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
-                                  static_argnums=(4,))
+        self._decode_fn = self.plan.compile_decode(
+            _decode, donate_argnums=(2,), static_argnums=(4,))
 
     def insert_prefill(self, prefilled: Cache, slots: List[int],
                        written_len: int) -> None:
@@ -315,24 +417,108 @@ class SlotDenseBackend(KVBackend):
     def cache_nbytes(self) -> int:
         return cache_bytes(self.cache)
 
-    def seal(self, key, slot, prefix) -> Dict[str, SealedTensor]:
+    def seal(self, key, slot, prefix, suffix="") -> Dict[str, SealedTensor]:
         single = extract_slot(self.cache, jnp.int32(slot))
-        return seal_tree(key, single, prefix=prefix)
+        return seal_tree(key, single, prefix=prefix, suffix=suffix)
 
-    def restore(self, key, sealed, slot, prefix, n_tokens) -> None:
+    def restore(self, key, sealed, slot, prefix, n_tokens,
+                suffix="") -> None:
         single_like = self.model.abstract_cache(1, self.max_len)
-        single = unseal_tree(key, sealed, single_like, prefix=prefix)
+        single = unseal_tree(key, sealed, single_like, prefix=prefix,
+                             suffix=suffix)
         self.cache = insert_slot(self.cache, single, jnp.int32(slot))
 
 
+# sealed-name anatomy for the shard tag and partial-eviction meta blobs
+_SUFFIX_RE = re.compile(r"/s(\d+)$")
+_PAGEMETA_RE = re.compile(r"^(?P<prefix>.*)/pagemeta(?P<suffix>/s\d+)?$")
+
+
+def tail_blob_names(sealed: Dict[str, SealedTensor]
+                    ) -> List[Tuple[str, str]]:
+    """(prefix, suffix) of every partial-eviction tail blob riding in a
+    sealed dict (a paused victim that was whole-sealed carries its earlier
+    tail under its own epoch prefix — and, under a mesh, shard suffix)."""
+    out = []
+    for name in sealed:
+        m = _PAGEMETA_RE.match(name)
+        if m:
+            out.append((m.group("prefix"), m.group("suffix") or ""))
+    return out
+
+
+class ShardedKVBackend:
+    """Mesh wrapper around either layout: compute/placement concerns already
+    live in the backend's :class:`~repro.runtime.plan.ShardedPlan`; what the
+    wrapper owns is keeping *sealing* correct per addressable shard. Every
+    seal gains a ``/s{shard}`` name suffix recording which data-shard the
+    slot's row was read from (concurrent hosts sealing under one prefix stay
+    in disjoint nonce namespaces), and restore recovers the tag from the
+    sealed names themselves — so a preemption round-trips byte-identically
+    even when the sequence re-lands on a different shard. Everything else
+    delegates to the wrapped backend."""
+
+    def __init__(self, inner: KVBackend):
+        self.inner = inner
+        if not inner.plan.is_sharded:
+            raise ValueError("ShardedKVBackend wants a backend built on a "
+                             "ShardedPlan")
+
+    def __getattr__(self, attr):
+        return getattr(self.inner, attr)
+
+    def _suffix_for(self, slot: int) -> str:
+        shard = self.inner.plan.shard_of_slot(slot, self.inner.max_slots)
+        return f"/s{shard}"
+
+    @staticmethod
+    def _detect_suffix(sealed: Dict[str, SealedTensor], prefix: str) -> str:
+        for name in sealed:
+            if name.startswith(prefix):
+                m = _SUFFIX_RE.search(name)
+                if m:
+                    return m.group(0)
+        return ""
+
+    def seal(self, key, slot, prefix, suffix=None):
+        return self.inner.seal(key, slot, prefix,
+                               suffix=suffix or self._suffix_for(slot))
+
+    def restore(self, key, sealed, slot, prefix, n_tokens, suffix=None):
+        if suffix is None:
+            suffix = self._detect_suffix(sealed, prefix)
+        return self.inner.restore(key, sealed, slot, prefix, n_tokens,
+                                  suffix=suffix)
+
+    def seal_tail_pages(self, key, slot, prefix, n_pages, suffix=None):
+        return self.inner.seal_tail_pages(
+            key, slot, prefix, n_pages,
+            suffix=suffix or self._suffix_for(slot))
+
+    def restore_tail_pages(self, key, sealed, slot, prefix, reserve=True,
+                           suffix=None):
+        if suffix is None:
+            suffix = self._detect_suffix(sealed, prefix)
+        return self.inner.restore_tail_pages(key, sealed, slot, prefix,
+                                             reserve=reserve, suffix=suffix)
+
+
 def make_backend(kind: str, model, *, max_slots: int, max_len: int,
-                 page_size: int = 16,
-                 num_pages: Optional[int] = None) -> KVBackend:
-    """Factory behind ``Engine(kv_backend=...)``."""
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 plan: Optional[ComputePlan] = None) -> KVBackend:
+    """Factory behind ``Engine(kv_backend=...)``. With a sharded ``plan``
+    the chosen layout is built on the mesh and wrapped for per-shard
+    sealing."""
     if kind == "slot":
-        return SlotDenseBackend(model, max_slots, max_len)
-    if kind == "paged":
+        kv: KVBackend = SlotDenseBackend(model, max_slots, max_len, plan)
+    elif kind == "paged":
         from repro.runtime.paged import PagedKVBackend
-        return PagedKVBackend(model, max_slots, max_len,
-                              page_size=page_size, num_pages=num_pages)
-    raise ValueError(f"unknown kv backend {kind!r} (want 'slot' or 'paged')")
+        kv = PagedKVBackend(model, max_slots, max_len,
+                            page_size=page_size, num_pages=num_pages,
+                            plan=plan)
+    else:
+        raise ValueError(
+            f"unknown kv backend {kind!r} (want 'slot' or 'paged')")
+    if kv.plan.is_sharded:
+        return ShardedKVBackend(kv)   # type: ignore[return-value]
+    return kv

@@ -49,6 +49,7 @@ from repro.core.sealing import (SealedTensor, SealingKey, seal_tensor,
                                 unseal_tensor)
 from repro.runtime import sampling
 from repro.runtime.kvcache import KVBackend, next_pow2
+from repro.runtime.plan import ComputePlan
 
 Cache = Any
 Params = Any
@@ -85,10 +86,12 @@ class PagedKVBackend(KVBackend):
     or ``kvcache.make_backend("paged", ...)``."""
 
     name = "paged"
+    supports_partial = True
 
     def __init__(self, model, max_slots: int, max_len: int, *,
-                 page_size: int = 16, num_pages: Optional[int] = None):
-        super().__init__(model, max_slots, max_len)
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 plan: Optional[ComputePlan] = None):
+        super().__init__(model, max_slots, max_len, plan)
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_len % page_size != 0:
@@ -121,6 +124,10 @@ class PagedKVBackend(KVBackend):
             raise ValueError(
                 f"model {model.cfg.name} has no sequence-length KV leaves to "
                 f"page; use kv_backend='slot' for pure-state families")
+        # mesh placement: pool leaves replicate (pages are shared), dense
+        # recurrent-state leaves shard their batch dim (see kvcache docs)
+        self.blocks = self.plan.place_paged_cache(self.blocks,
+                                                  self._paged_paths)
 
         # host-side sequence state
         self.pos = np.zeros(max_slots, np.int32)           # live KV positions
@@ -172,8 +179,8 @@ class PagedKVBackend(KVBackend):
                 scatter, blocks, new_cache)
             return toks, new_blocks
 
-        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
-                                  static_argnums=(8,))
+        self._decode_fn = self.plan.compile_decode(
+            _decode, donate_argnums=(2,), static_argnums=(8,))
 
         def _splice(blocks, prefilled, page_rows, page_ord, phys,
                     dense_rows, dense_slots):
@@ -187,7 +194,7 @@ class PagedKVBackend(KVBackend):
                 return pool.at[:, phys].set(picked.astype(pool.dtype))
             return jax.tree_util.tree_map_with_path(upd, blocks, prefilled)
 
-        self._splice_fn = jax.jit(_splice, donate_argnums=(0,))
+        self._splice_fn = self.plan.compile(_splice, donate_argnums=(0,))
 
     # -- page accounting ------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -322,37 +329,39 @@ class PagedKVBackend(KVBackend):
         return out
 
     def _seal_pages(self, key: SealingKey, prefix: str, ordinals: Sequence[int],
-                    phys: Sequence[int]) -> Dict[str, SealedTensor]:
+                    phys: Sequence[int],
+                    suffix: str = "") -> Dict[str, SealedTensor]:
         sealed: Dict[str, SealedTensor] = {}
         pages = self._page_arrays(phys)
         for kpath, arr in pages.items():
             for j, ordinal in enumerate(ordinals):
-                name = f"{prefix}{kpath}/p{ordinal}"
+                name = f"{prefix}{kpath}/p{ordinal}{suffix}"
                 sealed[name] = seal_tensor(key, name, arr[:, j])
         return sealed
 
-    def seal(self, key, slot, prefix) -> Dict[str, SealedTensor]:
+    def seal(self, key, slot, prefix, suffix="") -> Dict[str, SealedTensor]:
         n_alloc = int(self._alloc[slot])
         phys = [int(p) for p in self.table[slot, :n_alloc]]
-        meta_name = f"{prefix}/meta"
+        meta_name = f"{prefix}/meta{suffix}"
         sealed = {meta_name: seal_tensor(
             key, meta_name,
             np.asarray([int(self.pos[slot]), n_alloc], np.int32))}
-        sealed.update(self._seal_pages(key, prefix, range(n_alloc), phys))
+        sealed.update(self._seal_pages(key, prefix, range(n_alloc), phys,
+                                       suffix))
 
         def pull_dense(path, leaf):
             if _keystr(path) not in self._paged_paths:
-                name = f"{prefix}{_keystr(path)}"
+                name = f"{prefix}{_keystr(path)}{suffix}"
                 sealed[name] = seal_tensor(key, name,
                                            np.asarray(leaf[:, slot:slot + 1]))
             return leaf
         jax.tree_util.tree_map_with_path(pull_dense, self.blocks)
         return sealed
 
-    def restore(self, key, sealed, slot, prefix, n_tokens) -> None:
+    def restore(self, key, sealed, slot, prefix, n_tokens, suffix="") -> None:
         # the reservation was re-made when the engine re-acquired the slot
         # (acquire(rid, n_tokens)); here we only map and decrypt the pages.
-        meta = np.asarray(unseal_tensor(key, sealed[f"{prefix}/meta"]))
+        meta = np.asarray(unseal_tensor(key, sealed[f"{prefix}/meta{suffix}"]))
         pos, n_alloc = int(meta[0]), int(meta[1])
         assert n_alloc <= int(self._reserved[slot]), \
             "restore into a smaller reservation — accounting bug"
@@ -361,10 +370,10 @@ class PagedKVBackend(KVBackend):
         self._alloc[slot] = n_alloc
         self.pos[slot] = pos
         self._write_back(key, sealed, slot, prefix, range(n_alloc), taken,
-                         dense_too=True)
+                         dense_too=True, suffix=suffix)
 
     def _write_back(self, key, sealed, slot, prefix, ordinals, phys,
-                    dense_too: bool) -> None:
+                    dense_too: bool, suffix: str = "") -> None:
         ordinals, phys = list(ordinals), list(phys)
         pad_ords, idx = [], None
         if ordinals:
@@ -381,18 +390,20 @@ class PagedKVBackend(KVBackend):
                 if not ordinals:
                     return leaf
                 pages = jnp.stack(
-                    [unseal_tensor(key, sealed[f"{prefix}{kpath}/p{o}"])
+                    [unseal_tensor(key,
+                                   sealed[f"{prefix}{kpath}/p{o}{suffix}"])
                      for o in pad_ords], axis=1)
                 return _set_pages(leaf, idx, pages)
             if dense_too:
-                row = unseal_tensor(key, sealed[f"{prefix}{kpath}"])
+                row = unseal_tensor(key, sealed[f"{prefix}{kpath}{suffix}"])
                 return _set_row(leaf, jnp.int32(slot), row)
             return leaf
         self.blocks = jax.tree_util.tree_map_with_path(put, self.blocks)
 
     # -- partial eviction -----------------------------------------------------
     def seal_tail_pages(self, key: SealingKey, slot: int, prefix: str,
-                        n_pages: int) -> Dict[str, SealedTensor]:
+                        n_pages: int,
+                        suffix: str = "") -> Dict[str, SealedTensor]:
         """Seal and free the ``n_pages`` most recent pages of ``slot`` —
         a capacity loan: the pages AND their reservation go back to the
         pool for other traffic, while the victim keeps its slot, sampling
@@ -406,10 +417,10 @@ class PagedKVBackend(KVBackend):
                 f"({n_alloc}), got {n_pages}")
         ordinals = list(range(n_alloc - n_pages, n_alloc))
         phys = [int(p) for p in self.table[slot, ordinals]]
-        meta_name = f"{prefix}/pagemeta"
+        meta_name = f"{prefix}/pagemeta{suffix}"
         sealed = {meta_name: seal_tensor(
             key, meta_name, np.asarray([ordinals[0], n_pages], np.int32))}
-        sealed.update(self._seal_pages(key, prefix, ordinals, phys))
+        sealed.update(self._seal_pages(key, prefix, ordinals, phys, suffix))
         self.table[slot, ordinals] = 0
         self._alloc[slot] = n_alloc - n_pages
         self._free_pages.extend(phys)
@@ -422,13 +433,15 @@ class PagedKVBackend(KVBackend):
 
     def restore_tail_pages(self, key: SealingKey,
                            sealed: Dict[str, SealedTensor], slot: int,
-                           prefix: str, reserve: bool = True) -> int:
+                           prefix: str, reserve: bool = True,
+                           suffix: str = "") -> int:
         """Re-map and decrypt a partial eviction's pages; returns the page
         count. Physical placement is fresh — the table indirection makes
         relocation free. ``reserve=False`` skips re-reserving: used when the
         tail rides along a whole-slot restore whose ``acquire`` already
         reserved the sequence's full worst case."""
-        meta = np.asarray(unseal_tensor(key, sealed[f"{prefix}/pagemeta"]))
+        meta = np.asarray(unseal_tensor(
+            key, sealed[f"{prefix}/pagemeta{suffix}"]))
         start, n_pages = int(meta[0]), int(meta[1])
         if reserve:
             assert self.can_restore_tail(n_pages), \
@@ -440,5 +453,5 @@ class PagedKVBackend(KVBackend):
         self.table[slot, ordinals] = taken
         self._alloc[slot] = start + n_pages
         self._write_back(key, sealed, slot, prefix, ordinals, taken,
-                         dense_too=False)
+                         dense_too=False, suffix=suffix)
         return n_pages

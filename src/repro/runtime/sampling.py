@@ -14,6 +14,15 @@ Top-k uses ``jax.lax.top_k`` (O(v·k) selection) rather than a full
 must be < vocab_size — a request asking for a full-vocab "restriction"
 should say ``top_k=0``; anything >= vocab is an error, not a silent clamp.
 
+Repetition and presence penalties are ``[slots]`` rows like top-p:
+``rep_pen`` divides (positive) / multiplies (negative) the raw logits of
+already-generated tokens (CTRL-style), ``presence`` subtracts a flat amount
+from them; both read the per-slot generated-token counts in ``hist`` and
+both are static-``None`` gated so their math only compiles when some slot
+uses them. History follows the *request* (rebuilt from its output list
+after a sealed restore), so seeded penalized requests reproduce
+byte-identically across preemption.
+
 Top-p (nucleus) keeps the smallest set of tokens whose cumulative
 probability reaches ``top_p`` (the first token is always kept). It needs a
 full descending sort, so the engine only threads a ``top_p`` array into the
@@ -42,12 +51,17 @@ class SamplingState(NamedTuple):
     """Per-slot sampling parameters, shaped ``[slots]`` (a pytree the jitted
     decode step takes as one argument; see ``kvcache.SlotState`` for the
     host-side mirror). ``top_p=None`` (a static pytree difference) selects
-    the nucleus-free compiled variant."""
+    the nucleus-free compiled variant; the penalty rows (``rep_pen``,
+    ``presence``) and the ``hist`` token-count matrix they act on gate the
+    same way — an engine that never uses penalties never compiles them."""
     temp: jax.Array    # [b] f32; <= 0 selects greedy for that slot
     top_k: jax.Array   # [b] i32; 0 = unrestricted
     key: jax.Array     # [b, 2] u32 per-request base PRNG keys
     step: jax.Array    # [b] i32 output-token index (folded into the key)
     top_p: Optional[jax.Array] = None   # [b] f32; None/1.0 = unrestricted
+    rep_pen: Optional[jax.Array] = None   # [b] f32; None/1.0 = off
+    presence: Optional[jax.Array] = None  # [b] f32; None/0.0 = off
+    hist: Optional[jax.Array] = None      # [b, v] i32 generated-token counts
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -108,8 +122,24 @@ def sample(logits: jax.Array, state: SamplingState, *, kmax: int = 0) -> jax.Arr
       * else the support is the intersection of both restrictions.
     """
     greedy_toks = greedy(logits)
-    # guard the divide for greedy rows (their sampled value is discarded)
-    scaled = logits.astype(jnp.float32) / jnp.maximum(state.temp, 1e-6)[:, None]
+    logits_f = logits.astype(jnp.float32)
+    # repetition / presence penalties act on the raw logits (before the
+    # temperature divide) over tokens this sequence has already GENERATED
+    # (``hist`` counts; the prompt is not penalized). Both are per-slot rows
+    # and both no-op at their neutral values, so a fresh slot inherits
+    # nothing from a released one.
+    if state.rep_pen is not None:
+        seen = state.hist > 0
+        rp = state.rep_pen[:, None]
+        # CTRL-style: shrink positive logits by 1/rp, grow the magnitude of
+        # negative ones by rp — both push seen tokens toward less likely.
+        adj = jnp.where(logits_f > 0, logits_f / rp, logits_f * rp)
+        logits_f = jnp.where(seen, adj, logits_f)
+    if state.presence is not None:
+        logits_f = logits_f - state.presence[:, None] * (state.hist > 0)
+    # guard the divide for greedy rows (their sampled value is discarded;
+    # greedy rows also ignore penalties — argmax is over the raw logits)
+    scaled = logits_f / jnp.maximum(state.temp, 1e-6)[:, None]
     if kmax > 0:
         kmax = min(int(kmax), logits.shape[-1])
         vals = jax.lax.top_k(scaled, kmax)[0]                    # [b, kmax]

@@ -15,6 +15,19 @@ record wrapped around it (output, timing, seal/stream state) and converts
 to a :class:`~repro.runtime.api.RequestOutput` on completion.
 
 SLO machinery:
+  * the waiting queue orders by **slack** first (``order="slack"``, the
+    default): a request's slack ``deadline_s - elapsed`` shrinks as it
+    waits, but ``t_submit + deadline_s`` — its absolute deadline — is
+    time-invariant, so earliest-absolute-deadline IS the
+    tightest-slack-first order and keeps heap keys static. Priority breaks
+    ties (and deadline-less requests, whose slack is infinite, keep their
+    pure priority-then-arrival order among themselves). The point:
+    deadline-bound requests are served while their deadline is still
+    meetable, so ``on_deadline="abort"`` fires rarely instead of cheaply.
+    ``order="priority"`` restores the v4 priority-only ordering (the
+    baseline the forced-contention test measures the abort reduction
+    against). Preemption is untouched — only strict *priority* ever evicts
+    a running slot;
   * ``drop_expired`` removes queued requests whose relative deadline has
     passed (``on_deadline="drop"`` or ``"abort"``) before they waste
     prefill compute; ``abort_expired`` additionally marks *mid-flight*
@@ -112,6 +125,14 @@ class Request:
         return self.finish_reason == FINISH_ABORTED
 
     @property
+    def abs_deadline(self) -> float:
+        """Absolute deadline (monotonic clock); inf when none. Static per
+        request, which is what makes slack ordering heap-safe."""
+        if self.gen.deadline_s is None:
+            return float("inf")
+        return self.t_submit + self.gen.deadline_s
+
+    @property
     def deadline_missed(self) -> bool:
         return (not self.dropped and self.finished
                 and self.gen.deadline_s is not None
@@ -189,19 +210,30 @@ def _pct(xs: Sequence[float], q: float) -> float:
 
 
 class Scheduler:
-    def __init__(self):
-        # waiting heap entries: (-priority, rid, Request) — rid ties keep
-        # submission order within a priority level, and survive requeueing.
+    def __init__(self, order: str = "slack"):
+        # waiting heap entries: (key, rid, Request) — rid ties keep
+        # submission order, and survive requeueing. The key is
+        # (abs_deadline, -priority) in slack order (tightest deadline first,
+        # priority tiebreak) or (-priority,) in priority order.
+        if order not in ("slack", "priority"):
+            raise ValueError(
+                f"order must be 'slack' or 'priority', got {order!r}")
+        self.order = order
         self.queue: List[tuple] = []
         self.running: Dict[int, Request] = {}   # slot -> request
         self.finished: List[Request] = []
         self.dropped: List[Request] = []
         self._next_rid = 0
 
+    def _key(self, req: Request) -> tuple:
+        if self.order == "slack":
+            return (req.abs_deadline, -req.priority)
+        return (-req.priority,)
+
     def submit(self, gen: GenerationRequest) -> Request:
         req = Request(self._next_rid, gen, t_submit=time.monotonic())
         self._next_rid += 1
-        heapq.heappush(self.queue, (-req.priority, req.rid, req))
+        heapq.heappush(self.queue, (self._key(req), req.rid, req))
         return req
 
     def drop_expired(self, now: Optional[float] = None) -> List[Request]:
@@ -226,14 +258,33 @@ class Scheduler:
 
     def peek_waiting(self, admissible: Optional[AdmitPredicate] = None
                      ) -> Optional[Request]:
-        """Highest-priority waiting request, optionally skipping entries the
-        predicate rejects (e.g. a priority class over its token-rate budget)."""
+        """Best-ordered waiting request (tightest slack first in the default
+        order, then priority), optionally skipping entries the predicate
+        rejects (e.g. a priority class over its token-rate budget)."""
         if admissible is None:
             return self.queue[0][2] if self.queue else None
         for _, _, req in sorted(self.queue):
             if admissible(req):
                 return req
         return None
+
+    def peek_priority(self, admissible: Optional[AdmitPredicate] = None
+                      ) -> Optional[Request]:
+        """The highest-PRIORITY waiting request regardless of queue order —
+        the gatekeeper for restore/preemption decisions. In slack order the
+        queue head is the tightest *deadline* (possibly low priority), but
+        priority gates must still see the strongest waiting contender, or a
+        deadline-less high-priority request could neither block restores of
+        weaker sealed work nor exercise its preemption right. In priority
+        order this coincides with :meth:`peek_waiting`."""
+        best = None
+        for _, _, req in self.queue:
+            if admissible is not None and not admissible(req):
+                continue
+            if best is None or (req.priority, -req.rid) > (best.priority,
+                                                           -best.rid):
+                best = req
+        return best
 
     def next_waiting(self, admissible: Optional[AdmitPredicate] = None
                      ) -> Optional[Request]:
