@@ -22,6 +22,29 @@ python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
     --priority-mix 0:3,5:1 --kv-backend paged --page-size 8 --seed 1 \
     --sample-temp 0.7
 
+# prefix-sharing smoke: the same shared-prefix workload (common 8-token
+# head) on a deliberately tight on-demand page pool, with sharing off and
+# on. Off must survive via capacity preemption (sealed evictions); on must
+# map shared pages (nonzero shared-page maps) and seal strictly fewer
+# bytes — the shared head is resident once, so the pool never runs dry.
+SHARE_ARGS="--arch deepseek-7b --smoke --tee tdx --requests 6 \
+    --max-new-tokens 4 --prefill-buckets 16 --prefill-len 16 --slots 3 \
+    --kv-backend paged --page-size 8 --num-pages 7 --kv-alloc ondemand \
+    --seed 1 --sample-temp 0.7 --shared-prefix-len 8"
+python -m repro.launch.serve $SHARE_ARGS | tee /tmp/ci_share_off.out
+python -m repro.launch.serve $SHARE_ARGS --prefix-sharing \
+    | tee /tmp/ci_share_on.out
+SEALED_OFF=$(sed -n 's/.*evictions \/ \([0-9]*\) B out.*/\1/p' /tmp/ci_share_off.out)
+SEALED_ON=$(sed -n 's/.*evictions \/ \([0-9]*\) B out.*/\1/p' /tmp/ci_share_on.out)
+SHARED_MAPS=$(sed -n 's/.*prefix sharing: \([0-9]*\) shared-page maps.*/\1/p' /tmp/ci_share_on.out)
+[ -n "$SEALED_OFF" ] && [ "$SEALED_OFF" -gt 0 ] \
+    || { echo "unshared run sealed nothing — smoke lost its preemptions"; exit 1; }
+[ -n "$SHARED_MAPS" ] && [ "$SHARED_MAPS" -gt 0 ] \
+    || { echo "prefix-sharing run mapped no shared pages"; exit 1; }
+[ "${SEALED_ON:-0}" -lt "$SEALED_OFF" ] \
+    || { echo "sharing did not reduce sealed bytes (${SEALED_ON:-0} vs $SEALED_OFF)"; exit 1; }
+echo "prefix-sharing smoke OK: $SHARED_MAPS shared maps, sealed ${SEALED_ON:-0}B < ${SEALED_OFF}B"
+
 # mesh smoke: 2 forced host devices, the engine spanning a dp=2 mesh (batch
 # sharded, params FSDP-placed and gathered per step). Must print the
 # measured-vs-modeled link-tax line — the collective path is live, not

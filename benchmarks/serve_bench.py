@@ -30,6 +30,13 @@ bytes per preemption for paged — the Insight-10 claim that what crosses
 the boundary (pages actually holding tokens vs a whole max_len slot) is
 the lever.
 
+The prefix-sharing sweep serves a shared-prefix workload (one long common
+head + distinct same-length tails) with ``prefix_sharing`` off and on,
+both under on-demand allocation, forcing preemption with a high-priority
+wave. It asserts byte-identical outputs, strictly fewer physical pages
+written, and strictly lower sealed bytes with sharing on — the tentpole
+claim that a shared prefix is stored once and sealed at most once.
+
 The mesh sweep (``--mesh dp=2`` or ``dp=2,tp=2``; relaunches itself with
 forced host devices when needed) serves the same seeded workload on a
 single device and on a mesh-spanning engine, asserts byte-identical
@@ -210,6 +217,87 @@ def kv_backend_sweep(model, params, vocab, *, tee: str, max_slots: int,
               f"{ratio:.1f}x fewer bytes per eviction")
 
 
+def prefix_sharing_sweep(model, params, vocab, *, tee: str, max_slots: int,
+                         requests: int, page_size: int):
+    """Shared-prefix workload (one long common head — a RAG context / system
+    prompt — plus distinct same-length tails) served with prefix sharing
+    off and on, both under on-demand allocation so sharing is the only
+    delta. Asserts byte-identical outputs, strictly fewer physical pages
+    written, and strictly lower sealed bytes with sharing — the shared head
+    is stored once, and a victim's shared pages seal by reference (parked
+    at most once at last-reference drop) instead of as per-victim
+    ciphertext."""
+    max_len, bucket, head_len = 256, 128, 96
+    rng = np.random.default_rng(17)
+    head = rng.integers(1, vocab, size=head_len).astype(np.int32)
+    prompts = [np.concatenate([head, rng.integers(
+                   1, vocab, size=bucket - head_len).astype(np.int32)])
+               for _ in range(requests)]
+    print(f"\nprefix-sharing sweep (tee={tee}, page_size={page_size}): "
+          f"{requests} requests sharing a {head_len}-token head of "
+          f"{bucket}-token prompts, + {max_slots} high-prio preemptors")
+
+    results = {}
+    for mode in ("off", "on"):
+        td = TrustDomain(tee)
+        eng = Engine(model, params, max_slots=max_slots, max_len=max_len,
+                     trust_domain=td, prefill_buckets=(bucket,),
+                     kv_backend="paged", page_size=page_size,
+                     kv_alloc="ondemand", prefix_sharing=(mode == "on"))
+        # warmup wave: pay the compile cost outside the measured window
+        for p in prompts[:max_slots]:
+            eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+        eng.run(max_steps=100_000)
+        td.channel.stats.reset()
+        pages0 = eng.kv.pages_written
+
+        t0 = time.monotonic()
+        low = [eng.submit(GenerationRequest(
+                   prompt=p, max_new_tokens=16, priority=0,
+                   params=SamplingParams(temperature=0.8, top_k=32, seed=i)))
+               for i, p in enumerate(prompts)]
+        for _ in range(4):
+            eng.step()
+        high = [eng.submit(GenerationRequest(
+                    prompt=prompts[i % len(prompts)], max_new_tokens=8,
+                    priority=5,
+                    params=SamplingParams(temperature=0.8, top_k=32,
+                                          seed=1000 + i)))
+                for i in range(max_slots)]
+        eng.run(max_steps=200_000)
+        wall = time.monotonic() - t0
+        assert all(r.finished for r in low + high)
+        stats = stats_from_requests(low + high)
+        ch = td.channel.stats
+        pages = eng.kv.pages_written - pages0
+        print(f"  sharing={mode:3s} {stats.total_tokens:6d} tok  {wall:6.2f}s "
+              f" {stats.throughput_tps:8.1f} tok/s  preempt "
+              f"{stats.preemptions:2d}  pages written {pages:4d}  shared "
+              f"maps {eng.kv.shared_page_maps:3d}  CoW {eng.kv.cow_copies:2d}"
+              f"  sealed {ch.seal_bytes:8d}B")
+        results[mode] = dict(outputs=[r.output for r in low + high],
+                             pages=pages, sealed=ch.seal_bytes,
+                             shared=eng.kv.shared_page_maps,
+                             preemptions=stats.preemptions)
+
+    a, b = results["off"], results["on"]
+    assert a["outputs"] == b["outputs"], \
+        "prefix sharing must not change decoded output"
+    assert a["preemptions"] > 0 and b["preemptions"] > 0, \
+        "the sweep must actually exercise sealed preemption"
+    assert b["shared"] > 0, "no page was ever shared — sweep is broken"
+    assert b["pages"] < a["pages"], \
+        (f"sharing must write strictly fewer physical pages "
+         f"({b['pages']} vs {a['pages']})")
+    assert b["sealed"] < a["sealed"], \
+        (f"sharing must seal strictly fewer bytes "
+         f"({b['sealed']} vs {a['sealed']})")
+    print(f"prefix-sharing sweep OK: identical tokens; "
+          f"{a['pages']}→{b['pages']} pages written, "
+          f"{a['sealed']}→{b['sealed']} sealed bytes "
+          f"({a['sealed'] / max(b['sealed'], 1):.2f}x)")
+
+
 def mesh_sweep(model, params, vocab, *, mesh: str, tee: str, max_slots: int,
                requests: int):
     """Single-device vs mesh-spanning engine over one seeded workload:
@@ -279,6 +367,10 @@ def main():
                          "asserts; 'none' skips)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged-backend page size for the KV sweep")
+    ap.add_argument("--prefix-sharing", default="both",
+                    choices=["both", "none"],
+                    help="shared-prefix workload sweep: sharing off vs on "
+                         "under on-demand allocation ('none' skips)")
     ap.add_argument("--mesh", default=None, metavar="dp=N[,tp=M]",
                     help="also run the mesh sweep: single-device vs "
                          "mesh-spanning engine with measured-vs-modeled "
@@ -314,6 +406,12 @@ def main():
                          tee=args.tee if args.tee != "none" else "cgpu",
                          max_slots=args.max_slots, requests=args.requests,
                          page_size=args.page_size, backends=backends)
+    if args.prefix_sharing != "none":
+        prefix_sharing_sweep(model, params, cfg.vocab_size,
+                             tee=args.tee if args.tee != "none" else "cgpu",
+                             max_slots=args.max_slots,
+                             requests=args.requests,
+                             page_size=args.page_size)
     if args.mesh is not None:
         mesh_sweep(model, params, cfg.vocab_size, mesh=args.mesh,
                    tee=args.tee, max_slots=args.max_slots,

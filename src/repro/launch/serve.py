@@ -20,6 +20,10 @@ admission and sealing; see repro.runtime.kvcache for the selection guide).
 with forced host devices when needed) and reports the measured-vs-modeled
 encrypted-interconnect (link_tax) comparison — the collective time is then
 a real all-gather on the serving mesh, not the closed-form estimate.
+``--prefix-sharing`` (with ``--shared-prefix-len K`` to give the generated
+workload a common K-token opening) turns on content-indexed shared prompt
+pages with copy-on-write and on-demand page allocation, and reports the
+shared-page map / CoW counters next to the sealed-traffic line.
 """
 
 from __future__ import annotations
@@ -98,6 +102,19 @@ def main():
                     help="tokens per KV page (paged backend)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool size in pages (default: dense-equivalent)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="content-indexed shared prompt pages with "
+                         "copy-on-write (paged backend; implies on-demand "
+                         "page allocation)")
+    ap.add_argument("--kv-alloc", default=None,
+                    choices=["reserve", "ondemand"],
+                    help="paged page-allocation mode: worst-case admission "
+                         "reservations or vLLM-style step-time grants with "
+                         "capacity preemption")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    metavar="K",
+                    help="give every generated prompt the same K-token head "
+                         "(a shared-prefix workload for --prefix-sharing)")
     ap.add_argument("--mesh", default=None, metavar="dp=N[,tp=M]",
                     help="span the engine across a device mesh (forces host "
                          "devices if needed) and report measured link tax")
@@ -134,14 +151,20 @@ def main():
                     prefill_len=args.prefill_len,
                     prefill_buckets=args.prefill_buckets, trust_domain=td,
                     kv_backend=args.kv_backend, page_size=args.page_size,
-                    num_pages=args.num_pages, mesh=args.mesh)
+                    num_pages=args.num_pages,
+                    prefix_sharing=args.prefix_sharing,
+                    kv_alloc=args.kv_alloc, mesh=args.mesh)
     if args.mesh is not None:
         print(f"[mesh] engine spans {engine.plan.describe()}")
     rng = np.random.default_rng(0)
+    shared_head = rng.integers(
+        1, min(cfg.vocab_size, 200),
+        min(args.shared_prefix_len, args.prefill_len)).astype(np.int32)
     t0 = time.monotonic()
     for i in range(args.requests):
         prompt = rng.integers(1, min(cfg.vocab_size, 200),
                               args.prefill_len).astype(np.int32)
+        prompt[:len(shared_head)] = shared_head   # common K-token opening
         priority = 0
         if args.priority_mix is not None:
             prios, weights = args.priority_mix
@@ -174,6 +197,11 @@ def main():
               f"{ch.seal_bytes} B out ({ch.seal_bytes_per_event:.0f} B/seal), "
               f"{ch.restore_events} restores / {ch.restore_bytes} B back "
               f"[kv={args.kv_backend}]")
+    if getattr(engine.kv, "supports_sharing", False):
+        print(f"prefix sharing: {stats.shared_pages} shared-page maps, "
+              f"{stats.cow_copies} CoW copies, "
+              f"{engine.kv.pages_written} pages written "
+              f"[alloc={'ondemand' if engine.kv.on_demand else 'reserve'}]")
     if args.mesh is not None:
         # measured-vs-modeled encrypted-interconnect (link_tax) comparison:
         # same roofline terms, collective time once from the closed form

@@ -83,7 +83,11 @@ class RAGPipeline:
             prompt = self.tok.encode(f"context: {context} question: {query_clear}")
             # explicit context budget: the engine refuses prompts that cannot
             # fit its KV cache, so trim the context head (the question sits at
-            # the tail) rather than overflow.
+            # the tail) rather than overflow. On a prefix-sharing engine a
+            # repeated (resident) context additionally stops charging the
+            # page pool at admission — engine.effective_kv_need reports the
+            # discount — but the per-request budget itself is physical and
+            # unchanged: every page of one sequence is mapped simultaneously.
             limit = self.engine.prompt_budget(max_new_tokens)
             if limit <= 0:
                 raise ValueError(

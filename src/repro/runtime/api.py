@@ -139,6 +139,15 @@ class GenerationRequest:
     served anyway and a late finish is counted in
     ``ServeStats.deadline_misses``. Requests are single-use: submit a fresh
     object per call.
+
+    ``share_prefix`` (default True) lets a prefix-sharing engine
+    (``Engine(kv_backend="paged", prefix_sharing=True)``) map this
+    request's prompt pages onto resident shared physical pages and register
+    its own pages in the content index. Opting out (``share_prefix=False``)
+    keeps every page private — for tenants whose prompts must not be
+    content-addressed alongside other traffic, at worst-case memory cost.
+    On a non-sharing engine the flag is inert. Decoded output is identical
+    either way.
     """
     prompt: np.ndarray
     max_new_tokens: int = 32
@@ -148,6 +157,7 @@ class GenerationRequest:
     frame: FramePolicy = dataclasses.field(default_factory=FramePolicy)
     deadline_s: Optional[float] = None
     on_deadline: str = "serve"         # "serve" | "drop" | "abort"
+    share_prefix: bool = True
     on_token: Optional[TokenCallback] = None
 
     def __post_init__(self):

@@ -30,8 +30,12 @@ pluggable layers:
     (``Engine(kv_backend="slot"|"paged")``): dense slots, or a page pool +
     table where admission charges ``ceil(need/page_size)`` pages and sealed
     preemption moves per-page ciphertext (bytes scale with tokens used;
-    preemption can be *partial* — just a victim's tail pages). Under a mesh
-    the chosen layout is wrapped by
+    preemption can be *partial* — just a victim's tail pages). The paged
+    layout additionally offers content-indexed **prefix sharing** with
+    copy-on-write (``prefix_sharing=True``) and vLLM-style **on-demand**
+    page grants with step-time capacity preemption
+    (``kv_alloc="ondemand"``) — see the kvcache selection guide. Under a
+    mesh the chosen layout is wrapped by
     :class:`~repro.runtime.kvcache.ShardedKVBackend`: seal/restore operate
     per addressable shard (``/s{shard}`` nonce suffixes), so preemption
     round-trips byte-identically however the cache is laid out.
@@ -57,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.confidential import TrustDomain
-from repro.core.sealing import sealed_nbytes
+from repro.core.sealing import IntegrityError, sealed_nbytes
 from repro.models.model import Model
 from repro.runtime import sampling
 from repro.runtime.api import (FINISH_ABORTED, GenerationRequest,
@@ -124,6 +128,8 @@ class Engine:
                  rate_budgets: Optional[Dict[int, float]] = None,
                  kv_backend: str = "slot", page_size: int = 16,
                  num_pages: Optional[int] = None,
+                 prefix_sharing: bool = False,
+                 kv_alloc: Optional[str] = None,
                  mesh: Optional[str] = None,
                  plan: Optional[ComputePlan] = None,
                  admission_order: str = "slack"):
@@ -142,6 +148,14 @@ class Engine:
         ``"paged"`` (page pool + table; ``page_size``/``num_pages`` size it,
         ``num_pages=None`` matches the dense footprint). See the
         :mod:`repro.runtime.kvcache` docstring for when each wins.
+
+        ``prefix_sharing`` (paged only) turns on content-indexed shared
+        prompt pages with copy-on-write; ``kv_alloc`` picks the page
+        allocation mode — ``"reserve"`` (worst-case admission reservations,
+        the default) or ``"ondemand"`` (step-time grants with capacity
+        preemption when the pool runs dry; implied by ``prefix_sharing``).
+        Decoded outputs are byte-identical across all of these — only
+        memory, sealing traffic, and scheduling change.
 
         ``mesh`` spans the engine across devices: ``"dp=4"`` shards the
         batch (and FSDP-places params) over 4 devices, ``"dp=4,tp=2"`` adds
@@ -177,7 +191,9 @@ class Engine:
         self.kv: KVBackend = make_backend(kv_backend, model,
                                           max_slots=max_slots, max_len=max_len,
                                           page_size=page_size,
-                                          num_pages=num_pages, plan=self.plan)
+                                          num_pages=num_pages, plan=self.plan,
+                                          prefix_sharing=prefix_sharing,
+                                          alloc=kv_alloc)
         self._active_mask = np.zeros(max_slots, bool)
         self._last_token = np.zeros(max_slots, np.int32)
         self._preempted: List[PreemptedRequest] = []
@@ -217,10 +233,19 @@ class Engine:
         # KV. Past the backend's capacity, writes would clamp onto the last
         # cache row and silently corrupt the sequence — reject up front,
         # BEFORE the prompt crosses the boundary (a rejected request must
-        # not skew ChannelStats).
-        need = (max(self._bucket_for(len(gen.prompt)), len(gen.prompt))
-                + gen.max_new_tokens - 1)
-        if need > self.kv.request_capacity:
+        # not skew ChannelStats). On a prefix-sharing backend the capacity
+        # check (and kv_need) is *effective*: pages whose content is already
+        # resident in the index charge nothing against the pool, so a RAG
+        # request whose context prefix is resident is not rejected for
+        # memory it will never allocate.
+        bucket = self._bucket_for(len(gen.prompt))
+        need = max(bucket, len(gen.prompt)) + gen.max_new_tokens - 1
+        keys = None
+        if self.kv.supports_sharing and gen.share_prefix:
+            keys = self.kv.page_keys(self._padded_bucket(gen.prompt, bucket),
+                                     bucket)
+        fits, eff_need = self.kv.admission_check(need, keys)
+        if not fits:
             raise ValueError(
                 f"request needs up to {need} KV positions "
                 f"(prompt {len(gen.prompt)} + {gen.max_new_tokens} new) "
@@ -229,7 +254,8 @@ class Engine:
                 f"shorten the prompt or raise max_len")
         gen.prompt = self.td.ingress(gen.prompt)
         req = self.scheduler.submit(gen)
-        req.kv_need = need
+        req.kv_need = eff_need
+        req.page_keys = keys
         req.ingress_messages = 1 if self.td.confidential else 0
         # resolve the sampling seed NOW so the request is reproducible from
         # this point on (including across seal/restore preemption cycles).
@@ -242,8 +268,30 @@ class Engine:
     def prompt_budget(self, max_new_tokens: int) -> int:
         """Longest prompt submit() will accept for ``max_new_tokens``
         (backend-delegated: the slot-dense answer is bounded by ``max_len``
-        and bucket padding, the paged one also by the page pool)."""
+        and bucket padding, the paged one also by the page pool). Prefix
+        sharing never raises this bound — a sequence's pages all hold
+        simultaneous table mappings, shared or not; what sharing lowers is
+        the *effective demand* a request charges at admission, which
+        :meth:`effective_kv_need` reports."""
         return self.kv.prompt_budget(max_new_tokens, self.prefill_buckets)
+
+    def effective_kv_need(self, prompt: np.ndarray,
+                          max_new_tokens: int) -> Tuple[int, int]:
+        """(worst_case, effective) KV positions this prompt would charge at
+        admission right now: on a prefix-sharing engine the effective
+        figure discounts pages of this prompt already resident in the
+        content index — a resident RAG context stops counting against the
+        pool, so such requests admit alongside traffic that would
+        otherwise have reserved it away."""
+        prompt = np.asarray(prompt, np.int32)
+        bucket = self._bucket_for(len(prompt))
+        need = max(bucket, len(prompt)) + max_new_tokens - 1
+        keys = None
+        if self.kv.supports_sharing:
+            keys = self.kv.page_keys(self._padded_bucket(prompt, bucket),
+                                     bucket)
+        _, eff = self.kv.admission_check(need, keys)
+        return need, eff
 
     def _bucket_for(self, prompt_len: int) -> int:
         """Smallest bucket that fits the prompt, else the largest bucket
@@ -252,6 +300,30 @@ class Engine:
             if prompt_len <= b:
                 return b
         return self.prefill_buckets[-1]
+
+    @staticmethod
+    def _padded_bucket(prompt: np.ndarray, bucket: int) -> np.ndarray:
+        """The token content the prefill writes into the bucket region —
+        left-padded exactly as _admit_batch lays it out (content keys must
+        hash what the cache will actually hold)."""
+        chunk = np.asarray(prompt[:bucket], np.int32)
+        padded = np.zeros(bucket, np.int32)
+        padded[bucket - len(chunk):] = chunk
+        return padded
+
+    def _admit_need(self, req: Request) -> int:
+        """KV positions admission must cover *now*: the full effective worst
+        case under reservation accounting; on demand, the prefill's own
+        page demand (net of currently-resident shared pages) plus one page
+        of append/CoW headroom — without it a fully-resident-prompt request
+        admits into a dry pool only for its first decode append to evict it
+        straight back out (admission churn, no forward progress)."""
+        if not self.kv.on_demand:
+            return req.kv_need
+        bucket = self._bucket_for(len(req.prompt))
+        resident = self.kv.resident_pages(req.page_keys)
+        return max(0, bucket - resident * self.kv.page_size) \
+            + self.kv.page_size
 
     # -- sampling plumbing -----------------------------------------------------
     def _base_key(self, req: Request) -> np.ndarray:
@@ -419,6 +491,17 @@ class Engine:
             self._preempted.remove(p)
             self._flush_egress(p.req)   # coalesced tokens sealed with it must
             p.req.finish_reason = FINISH_ABORTED     # still reach the client
+            # its sealed state may reference shared pages: release those
+            # refs so parked ciphertext does not outlive every reader (the
+            # blob itself is just dropped — that is what makes abort cheap).
+            # Only tampered/garbled blobs are tolerated here; accounting
+            # bugs (asserts, refcount underflows) must still surface.
+            try:
+                self.kv.discard_sealed(
+                    self.td.sealing_key, p.sealed,
+                    f"kvslot/{p.req.stream_id}/{p.req.seal_epoch - 1}")
+            except (IntegrityError, ValueError):
+                pass
             self.scheduler.finish_detached(p.req)
             self.td.close_stream(p.req.stream_id)
             self.td._log("abort_deadline",
@@ -430,12 +513,12 @@ class Engine:
         and prefill them in one jitted call."""
         head = self.scheduler.peek_waiting(self._admit_filter)
         if (head is None or not self.slots.free
-                or not self.kv.can_admit(head.kv_need)):
+                or not self.kv.can_admit(self._admit_need(head))):
             return 0
         bucket = self._bucket_for(len(head.prompt))
         first = self.scheduler.next_waiting(self._admit_filter)
         self._charge_budget(first)
-        slots = [self.kv.acquire(first.rid, first.kv_need)]
+        slots = [self.kv.acquire(first.rid, self._admit_need(first))]
         assert slots[0] is not None, "admission raced KV accounting"
         group: List[Request] = [first]
         if self.batch_prefill:
@@ -451,11 +534,11 @@ class Engine:
                     break
                 if best_sealed is not None and nxt.priority <= best_sealed:
                     break
-                if not self.kv.can_admit(nxt.kv_need):
+                if not self.kv.can_admit(self._admit_need(nxt)):
                     break
                 nxt = self.scheduler.next_waiting(self._admit_filter)
                 self._charge_budget(nxt)
-                slot = self.kv.acquire(nxt.rid, nxt.kv_need)
+                slot = self.kv.acquire(nxt.rid, self._admit_need(nxt))
                 assert slot is not None, "admission raced KV accounting"
                 group.append(nxt)
                 slots.append(slot)
@@ -472,7 +555,11 @@ class Engine:
                                              fresh)
         first_np = self._first_tokens(logits, group, rows)
 
-        self.kv.insert_prefill(prefilled, slots, bucket)
+        group_keys = None
+        if self.kv.supports_sharing:
+            group_keys = [req.page_keys for req in group]
+        self.kv.insert_prefill(prefilled, slots, bucket,
+                               page_keys=group_keys)
         for i, req in enumerate(group):
             slot = slots[i]
             self.scheduler.start(slot, req)
@@ -529,9 +616,9 @@ class Engine:
             return False
         if (self.slots.free and victim_slot not in self._paused
                 and self.kv.supports_partial):
-            shortfall = (self.kv.pages_for(incoming.kv_need)
+            shortfall = (self.kv.pages_for(self._admit_need(incoming))
                          - self.kv.free_page_reserve)
-            spare = self.kv.allocated_pages(victim_slot) - 1
+            spare = self.kv.evictable_tail_pages(victim_slot)
             if 0 < shortfall <= spare:
                 self.partial_preempt(victim_slot, shortfall)
                 return True
@@ -610,7 +697,9 @@ class Engine:
                         best = max(eligible,
                                    key=lambda p: (p.req.priority,
                                                   -p.req.rid))
-                    if self.kv.can_restore(best.req.kv_need):
+                    if self.kv.can_restore(
+                            best.req.kv_need,
+                            n_pages=best.req.sealed_pages or None):
                         self._preempted.remove(best)
                         self.restore_slot(best.sealed, best.req)
                         continue
@@ -624,10 +713,62 @@ class Engine:
             cand = self.scheduler.peek_priority(self._admit_filter)
             if (cand is not None
                     and (not self.slots.free
-                         or not self.kv.can_admit(cand.kv_need))
+                         or not self.kv.can_admit(self._admit_need(cand)))
                     and self._preempt_for(cand)):
                 continue
             return
+
+    def _drain_kv_events(self) -> None:
+        """Account boundary traffic the backend generated on its own:
+        shared-page parking (a last live reference dropped while sealed
+        references remain — the page crosses out once, content-named) and
+        re-materialization (the first restore that needed it brings it
+        back)."""
+        for kind, nb, n in self.kv.drain_events():
+            if kind == "park":
+                self.td.record_seal(nb, n, "shared page parked (last ref)")
+            else:
+                self.td.record_restore(nb, n, "shared page rematerialized")
+
+    def _grant_step_pages(self, live: List[int]) -> List[int]:
+        """On-demand allocation: make sure the pool can grant every live
+        slot's append (and copy-on-write) page this step. When it runs dry,
+        free capacity by *evict-by-slack*: the laxest running victim
+        (latest absolute deadline, weakest priority; pure weakest-priority
+        under ``admission_order="priority"``) loses just its private tail
+        pages through ``seal_tail_pages`` when that covers the shortfall,
+        else its whole slot. Terminates: every round either frees pages or
+        removes a victim from the batch, and a lone survivor's demand
+        always fits (its pages are bounded by request_capacity <= pool).
+        Returns the live set minus evicted/paused victims."""
+        while True:
+            live = [s for s in live if s in self.scheduler.running
+                    and s not in self._paused]
+            demand = sum(self.kv.step_page_need(s) for s in live)
+            free = self.kv.free_physical_pages
+            if demand <= free:
+                return live
+            # paused slots are eviction candidates too: a lone live slot
+            # must be able to reclaim pages a paused victim still holds
+            # (whole-seal grafts the paused tail blob along — tested).
+            candidates = list(self.scheduler.running)
+            assert len(candidates) > 1, \
+                "single-slot page demand exceeded the pool — capacity bug"
+
+            def laxness(slot):
+                r = self.scheduler.running[slot]
+                if self.scheduler.order == "slack":
+                    return (r.abs_deadline, -r.priority, r.rid)
+                return (-r.priority, r.rid)
+            victim = max(candidates, key=laxness)
+            shortfall = demand - free
+            spare = self.kv.evictable_tail_pages(victim)
+            if victim not in self._paused and shortfall <= spare:
+                self.partial_preempt(victim, shortfall)
+            else:
+                sealed, vreq = self.seal_slot(victim)
+                vreq.n_preemptions += 1
+                self._preempted.append(PreemptedRequest(sealed, vreq))
 
     # -- serving loop ----------------------------------------------------------
     def step(self) -> int:
@@ -636,7 +777,10 @@ class Engine:
         (prompt-chunk feeding steps count zero)."""
         self._admit_ready()
         live = [s for s in self.slots.active if s not in self._paused]
+        if live and self.kv.on_demand:
+            live = self._grant_step_pages(live)
         if not live:
+            self._drain_kv_events()
             return 0
         feeding_prompt = {}   # slot -> tail still pending after this step?
         steps = np.zeros(self.max_slots, np.int32)
@@ -665,6 +809,7 @@ class Engine:
                 continue   # mid-prompt chunk: this step's sample is discarded
             self._emit_token(slot, int(next_np[slot]))
             produced += 1
+        self._drain_kv_events()
         return produced
 
     @property
@@ -680,7 +825,10 @@ class Engine:
                 # every waiting request is rate-budget gated: yield briefly
                 # so the token buckets refill instead of busy-spinning.
                 time.sleep(1e-3)
-        return self.scheduler.stats()
+        stats = self.scheduler.stats()
+        stats.shared_pages = getattr(self.kv, "shared_page_maps", 0)
+        stats.cow_copies = getattr(self.kv, "cow_copies", 0)
+        return stats
 
     # -- sealed KV preemption ----------------------------------------------------
     # The KV cache holds user conversation state; when a slot is preempted
@@ -711,6 +859,12 @@ class Engine:
         paused = self._paused.pop(slot, None)
         req = self.scheduler.running.pop(slot)
         prefix = self._seal_prefix(req)
+        if self.kv.supports_partial:
+            # what an on-demand restore must find free: the resident pages
+            # plus any earlier-sealed tail riding along (shared pages may
+            # re-link for less — this is the conservative bound).
+            req.sealed_pages = (self.kv.allocated_pages(slot)
+                                + (paused.n_pages if paused else 0))
         sealed = self.kv.seal(self.td.sealing_key, slot, prefix)
         req.seal_epoch += 1
         nb = sealed_nbytes(sealed)   # the paused tail was recorded at its seal
@@ -722,16 +876,21 @@ class Engine:
             sealed.update(paused.sealed)
         self.kv.release(slot)
         self._active_mask[slot] = False
+        self._drain_kv_events()
         return sealed, req
 
     def restore_slot(self, sealed, req: Request) -> int:
-        """Re-admit a sealed-out request into a free slot."""
-        slot = self.kv.acquire(req.rid, req.kv_need)
+        """Re-admit a sealed-out request into a free slot. On-demand pools
+        acquire without a pledge (the restore's page takes were gated by
+        ``can_restore(n_pages=...)``); reservation pools re-reserve the
+        effective worst case."""
+        slot = self.kv.acquire(req.rid,
+                               0 if self.kv.on_demand else req.kv_need)
         if slot is None:
             raise RuntimeError("no free slot/KV room to restore into")
+        prefix = f"kvslot/{req.stream_id}/{req.seal_epoch - 1}"
         try:
-            self.kv.restore(self.td.sealing_key, sealed, slot,
-                            f"kvslot/{req.stream_id}/{req.seal_epoch - 1}",
+            self.kv.restore(self.td.sealing_key, sealed, slot, prefix,
                             req.kv_need)
             # a sealed-while-paused eviction carries its earlier tail blob
             # under an older epoch prefix (and, under a mesh, shard suffix);
@@ -744,6 +903,10 @@ class Engine:
         except Exception:
             self.kv.release(slot)   # a failed (e.g. tampered) restore must
             raise                   # not leak the slot or its reservation
+        # the WHOLE restore succeeded: only now are this sealed dict's
+        # shared-page references spent (a rolled-back restore must leave
+        # _sealed_refs and parked ciphertext intact for co-sharers)
+        self.kv.discard_sealed(self.td.sealing_key, sealed, prefix)
         self.scheduler.running[slot] = req
         self._active_mask[slot] = True
         self._set_slot_sampling(slot, req)
@@ -752,6 +915,7 @@ class Engine:
         self._last_token[slot] = req.output[-1] if req.output else 0
         self.td.record_restore(sealed_nbytes(sealed), len(sealed),
                                f"slot={slot} rid={req.rid}")
+        self._drain_kv_events()
         return slot
 
     def partial_preempt(self, slot: int, n_pages: int) -> None:

@@ -38,6 +38,51 @@ seal count; large pages (64–128) amortize per-page fixed costs toward
 slot-dense behavior. 16–32 is a good default at ``max_len`` ≤ 4k; scale
 page_size with context length so ``max_pages`` stays in the hundreds.
 
+**Prefix sharing and on-demand allocation**
+(``Engine(kv_backend="paged", prefix_sharing=True)``; paged only). A
+content index maps the cumulative hash of the token ids up to each aligned
+page boundary to one shared physical page with a per-page refcount;
+requests whose (padded) prompts agree on a page-aligned prefix map the
+same physical pages instead of storing copies. When sharing pays: any
+workload where many requests open identically — RAG system prompts,
+few-shot headers, agent scaffolds — provided the shared region is *page
+aligned and position aligned* (prefill left-pads prompts into their
+bucket, so equal-length prompts with a common head share; KV entries are
+position-dependent, so a prefix at a different offset is different
+content). Capacity multiplies: N requests over one B-page context cost
+B + N·(suffix pages), not N·B — which in a TEE is the difference between
+fitting in the attested enclave memory or paying sealed-eviction traffic.
+
+COW cost model: shared *full* pages are never written again and cost
+nothing; the final partial prompt page is written by the first decode
+append, which triggers one page copy (copy-on-write) per sharer that
+diverges while others still read the page — worst case ``ceil(one page)``
+extra write per request, amortized against ``shared pages × page_size``
+tokens of prefill KV never recomputed or stored. Sharing a page whose
+writer was its sole reader degrades to an index unregistration (free).
+
+Sealing semantics under sharing: a victim's *private* pages seal per-page
+under its epoch prefix as usual; its *shared* pages seal **by reference**
+— the sealed meta records each page's content key (and refcount), and
+restore re-links the resident page (no ciphertext moved either way). The
+page's data crosses the boundary only when its **last** live reference
+drops while sealed references remain: it is then *parked* once under a
+content-derived name (same content => same nonce AND same plaintext, so
+re-parking identical content can never pair one nonce with two
+plaintexts), and the first restore that needs it re-materializes it into
+the pool. Net: sealed bytes per preemption shrink by the shared fraction,
+and K victims sharing a prefix pay for its eviction at most once.
+
+On-demand allocation (``alloc="ondemand"``, implied by sharing — COW
+grants cannot be covered by any admission-time worst case): admission
+checks only the prompt's immediate page need (minus resident shared
+pages) against the free pool, and decode appends are granted at step
+time. The pool may be oversubscribed against worst cases; when it runs
+dry the engine frees capacity by evict-by-slack *capacity preemption*
+(partial ``seal_tail_pages`` of the laxest victim's private tail, else a
+whole-slot seal). ``alloc="reserve"`` (the default without sharing) keeps
+the PR-3 worst-case reservations, under which appends can never fail.
+
 **Sharded** (:class:`ShardedKVBackend`, implied by ``Engine(mesh=...)``)
 is not a third layout — it wraps either of the above when the engine spans
 a mesh (:class:`~repro.runtime.plan.ShardedPlan`). When to *shard* the
@@ -300,6 +345,8 @@ class KVBackend:
 
     name: str = "?"
     supports_partial = False   # page-granular (tail) eviction available?
+    supports_sharing = False   # content-indexed prefix page sharing on?
+    on_demand = False          # step-time page grants (vs admission reserve)
 
     def __init__(self, model, max_slots: int, max_len: int,
                  plan: Optional[ComputePlan] = None):
@@ -319,16 +366,61 @@ class KVBackend:
         """Beyond a free slot, is there KV room for ``n_tokens`` positions?"""
         return True
 
-    def can_restore(self, n_tokens: int) -> bool:
+    def can_restore(self, n_tokens: int,
+                    n_pages: Optional[int] = None) -> bool:
         """Room to re-admit a sealed-out sequence of ``n_tokens`` positions
-        (a free slot is checked separately via ``slots.free``)."""
+        (a free slot is checked separately via ``slots.free``). ``n_pages``
+        is the page count the sequence actually held at seal time — the
+        unit an on-demand paged pool gates on instead of the worst case."""
         return True
+
+    def page_keys(self, tokens: np.ndarray,
+                  written_len: int) -> Optional[List[bytes]]:
+        """Content keys for a prompt's prefill pages, or None when the
+        backend does no prefix sharing (the accounting hooks below accept
+        None and fall back to unshared behavior)."""
+        return None
+
+    def resident_pages(self, page_keys: Optional[Sequence[Any]]) -> int:
+        """How many of these content keys are resident in the sharing
+        index right now (0 without sharing)."""
+        return 0
+
+    @property
+    def free_physical_pages(self) -> int:
+        """Free pages an on-demand grant can draw on (page backends only;
+        the engine consults this behind the ``on_demand`` flag)."""
+        return 0
+
+    def step_page_need(self, slot: int) -> int:
+        """Pages the next decode step will take for this slot's append
+        (fresh page / copy-on-write); the engine's step-time grant loop
+        sums this over the batch in on-demand mode."""
+        return 0
+
+    def evictable_tail_pages(self, slot: int) -> int:
+        """Tail pages a partial eviction may seal off this slot (page
+        backends with ``supports_partial`` only)."""
+        return 0
+
+    def admission_check(self, need: int,
+                        page_keys: Optional[Sequence[Any]] = None
+                        ) -> Tuple[bool, int]:
+        """(fits, effective_need): can ``need`` worst-case KV positions ever
+        be served, and what does the request *effectively* demand once
+        resident shared pages are discounted? Default: no sharing, the
+        plain capacity bound."""
+        return need <= self.request_capacity, need
 
     def prompt_budget(self, max_new_tokens: int,
                       buckets: Sequence[int]) -> int:
         """Longest prompt a submit will accept for ``max_new_tokens``,
         accounting for prefill-bucket padding: a short prompt still occupies
-        its whole (left-padded) bucket in the cache."""
+        its whole (left-padded) bucket in the cache. Prefix sharing does
+        NOT raise this bound — every page of one sequence holds its own
+        simultaneous table mapping whether shared or private — it lowers
+        the *effective demand* admission charges (see
+        :meth:`admission_check`)."""
         cand = self.request_capacity - max_new_tokens + 1  # last token: no KV
         if cand >= buckets[-1]:
             return cand
@@ -349,8 +441,25 @@ class KVBackend:
         return self.model.init_cache(rows, self.max_len)
 
     def insert_prefill(self, prefilled: Cache, slots: List[int],
-                       written_len: int) -> None:
+                       written_len: int,
+                       page_keys: Optional[List[Any]] = None) -> None:
+        """Splice a prefilled dense group into backend storage.
+        ``page_keys`` (sharing backends) carries one entry per slot: the
+        prompt's content keys, or None for a request that opted out."""
         raise NotImplementedError
+
+    def drain_events(self) -> List[Tuple[str, int, int]]:
+        """(kind, nbytes, n_tensors) boundary traffic generated outside an
+        explicit seal/restore call — shared-page parking and
+        re-materialization on the paged backend. The engine drains this
+        into TrustDomain accounting; default backends generate none."""
+        return []
+
+    def discard_sealed(self, key: SealingKey, sealed: Dict[str, SealedTensor],
+                       prefix: str, suffix: str = "") -> None:
+        """A sealed dict is spent — restored in full, or dropped unrestored
+        (deadline abort): release whatever references it holds (shared-page
+        sealed refcounts on the sharing backend). Default: nothing."""
 
     def decode(self, params: Params, tokens: np.ndarray,
                state: Optional[sampling.SamplingState], kmax: int,
@@ -404,7 +513,7 @@ class SlotDenseBackend(KVBackend):
             _decode, donate_argnums=(2,), static_argnums=(4,))
 
     def insert_prefill(self, prefilled: Cache, slots: List[int],
-                       written_len: int) -> None:
+                       written_len: int, page_keys=None) -> None:
         # one donated scatter for the whole group (not k full-cache copies)
         self.cache = insert_rows(self.cache, prefilled,
                                  jnp.asarray(slots, jnp.int32))
@@ -502,20 +611,33 @@ class ShardedKVBackend:
         return self.inner.restore_tail_pages(key, sealed, slot, prefix,
                                              reserve=reserve, suffix=suffix)
 
+    def discard_sealed(self, key, sealed, prefix, suffix=None):
+        if suffix is None:
+            suffix = self._detect_suffix(sealed, prefix)
+        return self.inner.discard_sealed(key, sealed, prefix, suffix=suffix)
+
 
 def make_backend(kind: str, model, *, max_slots: int, max_len: int,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 plan: Optional[ComputePlan] = None) -> KVBackend:
+                 plan: Optional[ComputePlan] = None,
+                 prefix_sharing: bool = False,
+                 alloc: Optional[str] = None) -> KVBackend:
     """Factory behind ``Engine(kv_backend=...)``. With a sharded ``plan``
     the chosen layout is built on the mesh and wrapped for per-shard
-    sealing."""
+    sealing. ``prefix_sharing``/``alloc`` are paged-only (see the module
+    docstring's prefix-sharing section)."""
     if kind == "slot":
+        if prefix_sharing or alloc is not None:
+            raise ValueError("prefix_sharing / kv_alloc need "
+                             "kv_backend='paged' (the dense slot layout has "
+                             "no pages to share or grant)")
         kv: KVBackend = SlotDenseBackend(model, max_slots, max_len, plan)
     elif kind == "paged":
         from repro.runtime.paged import PagedKVBackend
         kv = PagedKVBackend(model, max_slots, max_len,
                             page_size=page_size, num_pages=num_pages,
-                            plan=plan)
+                            plan=plan, prefix_sharing=prefix_sharing,
+                            alloc=alloc)
     else:
         raise ValueError(
             f"unknown kv backend {kind!r} (want 'slot' or 'paged')")

@@ -20,33 +20,54 @@ bit-identical to the slot-dense backend. Only the single appended position
 is scattered back per step (``pool.at[:, write_phys, write_off]``); rows
 that are not appending route their write to the null page.
 
-Accounting. Admission reserves ``ceil(need / page_size)`` pages — the
-request's own worst case, not the engine-wide ``max_len`` a dense slot
-implicitly pins — and physical pages are allocated lazily as positions are
-actually written, so reservations make append failure impossible
-(allocated <= reserved <= num_pages) while admission stays proportional to
-the tokens a request can touch.
+Allocation. Two modes (``alloc=``):
 
-Sealing. Preemption seals *per page*: each allocated page of each paged
-leaf becomes its own ciphertext+MAC with a nonce derived from
+  * ``"reserve"`` (default): admission reserves ``ceil(need / page_size)``
+    pages — the request's own worst case — and physical pages are mapped
+    lazily as positions are written, so reservations make append failure
+    impossible (allocated <= reserved <= num_pages).
+  * ``"ondemand"`` (vLLM-style; implied by ``prefix_sharing``): admission
+    checks only the *prompt's* immediate page need against the free pool
+    and decode-time appends are granted at step time. The pool may be
+    oversubscribed against worst cases; when it runs dry mid-step the
+    engine frees capacity by *capacity preemption* — evict-by-slack
+    through the existing ``seal_tail_pages`` / whole-seal machinery.
+
+Prefix sharing (``prefix_sharing=True``). A content index maps the
+*cumulative* hash of the token ids up to each aligned page boundary to a
+shared physical page with a per-page refcount. ``insert_prefill`` maps an
+index hit instead of allocating+writing a copy (prefill KV rows are
+bitwise row-count-invariant, so the resident page is exactly what this
+request would have computed); the refcount equals the number of live table
+mappings. A write into an indexed page (only ever the *tail* page a slot
+appends into) triggers copy-on-write when other mappings remain, or simply
+unregisters the page when the writer is its sole user.
+
+Sealing. Preemption seals *per page*: each private page of each paged leaf
+becomes its own ciphertext+MAC with a nonce derived from
 ``{prefix}{leaf}/p{ordinal}`` — sealed bytes scale with tokens used, not
-capacity reserved. ``seal_tail_pages``/``restore_tail_pages`` support
-partial eviction: the tail pages (and their reservation) are released for
-other traffic while the victim keeps its slot and resident pages, and only
-that delta is restored before it resumes.
+capacity reserved. Shared (content-indexed) pages are refcount-aware: a
+victim's sealed meta records the page's content key (and refcount) instead
+of moving ciphertext, restore *re-links* the resident page, and the page's
+data only crosses the boundary when its **last** reference drops — sealed
+once, under its content-derived name (same content => same nonce => the
+identical ciphertext, so repeated parking can never pair one nonce with two
+plaintexts). ``seal_tail_pages``/``restore_tail_pages`` support partial
+eviction of the (always private) tail.
 """
 
 from __future__ import annotations
 
+import hashlib
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sealing import (SealedTensor, SealingKey, seal_tensor,
-                                unseal_tensor)
+from repro.core.sealing import (IntegrityError, SealedTensor, SealingKey,
+                                seal_tensor, unseal_tensor)
 from repro.runtime import sampling
 from repro.runtime.kvcache import KVBackend, next_pow2
 from repro.runtime.plan import ComputePlan
@@ -64,6 +85,22 @@ def _keystr(path) -> str:
 
 def _leaf_key(path) -> Optional[str]:
     return getattr(path[-1], "key", None) if path else None
+
+
+def prefix_page_keys(tokens: np.ndarray, page_size: int, written_len: int,
+                     salt: bytes = b"") -> List[bytes]:
+    """Content keys for the pages covering ``tokens[:written_len]``: key j is
+    the running hash of every token id up to the end of page j (KV at a
+    position depends on *all* earlier tokens, so only a true prefix match
+    may share), truncated chains for the final partial page. 16-byte sha256
+    prefixes — collisions are negligible against 2^64 pages."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32)[:written_len])
+    h = hashlib.sha256(salt)
+    keys = []
+    for j in range(-(-int(written_len) // page_size)):
+        h.update(toks[j * page_size:(j + 1) * page_size].tobytes())
+        keys.append(h.digest()[:16])
+    return keys
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -90,13 +127,27 @@ class PagedKVBackend(KVBackend):
 
     def __init__(self, model, max_slots: int, max_len: int, *,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 plan: Optional[ComputePlan] = None):
+                 plan: Optional[ComputePlan] = None,
+                 prefix_sharing: bool = False, alloc: Optional[str] = None):
         super().__init__(model, max_slots, max_len, plan)
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_len % page_size != 0:
             raise ValueError(f"max_len={max_len} must be a multiple of "
                              f"page_size={page_size}")
+        if alloc is None:
+            alloc = "ondemand" if prefix_sharing else "reserve"
+        if alloc not in ("reserve", "ondemand"):
+            raise ValueError(f"alloc must be 'reserve' or 'ondemand', "
+                             f"got {alloc!r}")
+        if prefix_sharing and alloc != "ondemand":
+            # COW converts a shared mapping into a private page at step
+            # time, which no admission-time worst case can cover — sharing
+            # therefore runs on step-time grants.
+            raise ValueError("prefix_sharing requires alloc='ondemand'")
+        self.on_demand = alloc == "ondemand"
+        self.prefix_sharing = prefix_sharing
+        self.supports_sharing = prefix_sharing
         self.page_size = page_size
         self.max_pages = max_len // page_size
         if num_pages is None:
@@ -106,6 +157,7 @@ class PagedKVBackend(KVBackend):
         # a pool smaller than max_pages is legal: request_capacity shrinks
         # to num_pages * page_size and submit rejects what cannot ever fit.
         self.num_pages = num_pages
+        self._key_salt = f"{model.cfg.name}|{page_size}|{max_len}".encode()
 
         # classify leaves once; paged leaves move to pool layout
         dense = model.init_cache(max_slots, max_len)
@@ -136,6 +188,28 @@ class PagedKVBackend(KVBackend):
         self._alloc = np.zeros(max_slots, np.int32)        # pages mapped
         self._reserved = np.zeros(max_slots, np.int32)     # pages promised
         self._reserve_free = num_pages
+        # on-demand admission promises: pages pledged to an admitted-but-
+        # not-yet-prefilled slot so a batched admission group cannot
+        # overcommit the free list between acquire() and insert_prefill().
+        self._promised = np.zeros(max_slots, np.int32)
+        self._promised_total = 0
+
+        # prefix-sharing state. _page_ref counts live table mappings per
+        # physical page (private pages hold exactly 1); _index/_page_key is
+        # the content index both ways; _sealed_refs counts sealed-out
+        # requests whose meta references a content key; _parked holds the
+        # content-named ciphertext of pages whose last live reference
+        # dropped while sealed references remain.
+        self._page_ref = np.zeros(num_pages + 1, np.int32)
+        self._index: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        self._sealed_refs: Dict[bytes, int] = {}
+        self._parked: Dict[bytes, Dict[str, SealedTensor]] = {}
+        self._seal_key_cache: Optional[SealingKey] = None
+        self._events: List[Tuple[str, int, int]] = []  # (kind, nbytes, n)
+        self.shared_page_maps = 0     # mappings served by an index hit
+        self.cow_copies = 0           # tail-page copy-on-write events
+        self.pages_written = 0        # physical pages taken + written
 
         paged = self._paged_paths
 
@@ -196,12 +270,26 @@ class PagedKVBackend(KVBackend):
 
         self._splice_fn = self.plan.compile(_splice, donate_argnums=(0,))
 
+        def _copy_page(blocks, src, dst):
+            def upd(path, pool):
+                if _keystr(path) not in paged:
+                    return pool
+                return pool.at[:, dst].set(pool[:, src])
+            return jax.tree_util.tree_map_with_path(upd, blocks)
+
+        self._copy_page_fn = self.plan.compile(_copy_page,
+                                               donate_argnums=(0,))
+
     # -- page accounting ------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
         return -(-int(n_tokens) // self.page_size)
 
     @property
     def free_page_reserve(self) -> int:
+        """Pages an admission may still promise: unreserved pages in reserve
+        mode, unpromised free physical pages on demand."""
+        if self.on_demand:
+            return len(self._free_pages) - self._promised_total
         return self._reserve_free
 
     @property
@@ -217,57 +305,172 @@ class PagedKVBackend(KVBackend):
         # cannot out-reserve the pool.
         return min(self.max_len, self.num_pages * self.page_size)
 
-    def can_admit(self, n_tokens: int) -> bool:
-        return self.pages_for(n_tokens) <= self._reserve_free
+    def page_keys(self, tokens: np.ndarray, written_len: int
+                  ) -> Optional[List[bytes]]:
+        """Content keys for a prompt's prefill pages (None when sharing is
+        off — callers pass the result straight back to admission hooks)."""
+        if not self.prefix_sharing:
+            return None
+        return prefix_page_keys(tokens, self.page_size, written_len,
+                                self._key_salt)
 
-    def can_restore(self, n_tokens: int) -> bool:
-        return self.pages_for(n_tokens) <= self._reserve_free
+    def resident_pages(self, page_keys: Optional[Sequence[bytes]]) -> int:
+        """How many of these content keys are resident in the index now."""
+        if not page_keys:
+            return 0
+        return sum(1 for k in page_keys if k in self._index)
+
+    def admission_check(self, need: int, page_keys: Optional[Sequence[bytes]]
+                        = None) -> Tuple[bool, int]:
+        """(fits, effective_need). The capacity bound is NOT relaxed by
+        sharing: every page of one sequence — shared or private — occupies
+        its own simultaneous page-table mapping, so a single request can
+        never exceed ``min(max_len, num_pages * page_size)`` however warm
+        the index is. What sharing discounts is the *effective demand*
+        (``need`` minus resident shared positions): the unit admission
+        charges against the pool, which is what lets a RAG request whose
+        context prefix is resident admit alongside traffic that would
+        otherwise have reserved the pool away."""
+        resident = self.resident_pages(page_keys)
+        eff = max(1, int(need) - resident * self.page_size)
+        return need <= self.request_capacity, eff
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= self.free_page_reserve
+
+    def can_restore(self, n_tokens: int,
+                    n_pages: Optional[int] = None) -> bool:
+        if not self.on_demand:
+            return self.pages_for(n_tokens) <= self._reserve_free
+        pages = n_pages if n_pages is not None else self.pages_for(n_tokens)
+        # headroom: leave one page per active slot so the restore is not
+        # immediately re-evicted by the next step's appends (thrash damping;
+        # with nothing else active the pool is all the restore's).
+        return pages + len(self.slots.active) <= len(self._free_pages)
 
     def _take_pages(self, n: int) -> List[int]:
         assert n <= len(self._free_pages), \
-            "page allocation exceeded reservation — accounting bug"
+            "page allocation exceeded reservation/grant — accounting bug"
         taken, self._free_pages = self._free_pages[:n], self._free_pages[n:]
+        for p in taken:
+            self._page_ref[p] = 1
         return taken
+
+    def _drop_ref(self, phys: int) -> None:
+        """One table mapping of ``phys`` goes away; the page is freed (and
+        unregistered — parked first if sealed references remain) only when
+        the LAST mapping drops."""
+        phys = int(phys)
+        self._page_ref[phys] -= 1
+        assert self._page_ref[phys] >= 0, "double-free — refcount bug"
+        if self._page_ref[phys] == 0:
+            self._unregister(phys)
+            self._free_pages.append(phys)
+
+    def _unregister(self, phys: int) -> None:
+        key = self._page_key.pop(phys, None)
+        if key is not None:
+            del self._index[key]
+            if self._sealed_refs.get(key, 0) > 0:
+                self._park(key, phys)
+
+    def _park(self, key_bytes: bytes, phys: int) -> None:
+        """Last reference to a sealed-referenced shared page is dropping:
+        move its data across the boundary ONCE, under its content-derived
+        name (deterministic: same content => same nonce AND same plaintext,
+        so a later identical parking can never violate nonce uniqueness)."""
+        assert self._seal_key_cache is not None, \
+            "sealed refs exist but no sealing key was ever seen"
+        if key_bytes in self._parked:
+            return
+        pages = self._page_arrays([phys])
+        blobs = {}
+        for kpath, arr in pages.items():
+            name = f"kvshared/{key_bytes.hex()}{kpath}"
+            blobs[kpath] = seal_tensor(self._seal_key_cache, name, arr[:, 0])
+        self._parked[key_bytes] = blobs
+        nb = sum(b.n_bytes for b in blobs.values())
+        self._events.append(("park", nb, len(blobs)))
+
+    def drain_events(self) -> List[Tuple[str, int, int]]:
+        """Boundary traffic the backend generated outside an explicit
+        seal/restore call (shared-page parking and re-materialization); the
+        engine drains this into the TrustDomain accounting."""
+        ev, self._events = self._events, []
+        return ev
 
     # -- sequence lifecycle ---------------------------------------------------
     def acquire(self, rid: int, n_tokens: int) -> Optional[int]:
-        need = self.pages_for(n_tokens)
-        if need > self._reserve_free:
+        need = self.pages_for(n_tokens) if n_tokens > 0 else 0
+        if need > self.free_page_reserve:
             return None
         slot = self.slots.acquire(rid)
         if slot is None:
             return None
-        self._reserved[slot] = need
-        self._reserve_free -= need
+        if self.on_demand:
+            # promise only the immediate (prompt) need the engine passed;
+            # decode-time pages are granted at step time.
+            self._promised[slot] = need
+            self._promised_total += need
+        else:
+            self._reserved[slot] = need
+            self._reserve_free -= need
         return slot
 
     def release(self, slot: int) -> None:
         n = int(self._alloc[slot])
-        if n:
-            self._free_pages.extend(int(p) for p in self.table[slot, :n])
+        for j in range(n):
+            self._drop_ref(self.table[slot, j])
         self.table[slot] = 0
         self._alloc[slot] = 0
         self._reserve_free += int(self._reserved[slot])
         self._reserved[slot] = 0
+        self._promised_total -= int(self._promised[slot])
+        self._promised[slot] = 0
         self.pos[slot] = 0
         self.slots.release(slot)
 
     # -- device compute -------------------------------------------------------
     def insert_prefill(self, prefilled: Cache, slots: List[int],
-                       written_len: int) -> None:
+                       written_len: int,
+                       page_keys: Optional[List[Optional[List[bytes]]]] = None
+                       ) -> None:
         k = len(slots)
         rows = prefilled["pos"].shape[0]
         n_pages = self.pages_for(written_len)
         src_rows, page_ord, phys = [], [], []
         for i, slot in enumerate(slots):
-            taken = self._take_pages(n_pages)
-            self.table[slot, :n_pages] = taken
-            self._alloc[slot] = n_pages
-            self.pos[slot] = written_len
-            for j, p in enumerate(taken):
+            keys = page_keys[i] if page_keys else None
+            misses = []
+            for j in range(n_pages):
+                key = keys[j] if keys else None
+                hit = self._index.get(key) if key is not None else None
+                if hit is not None:
+                    # shared: map the resident page, write nothing
+                    self._page_ref[hit] += 1
+                    self.table[slot, j] = hit
+                    self.shared_page_maps += 1
+                else:
+                    misses.append((j, key))
+            # one batched take per slot (not one free-list reslice per page)
+            for (j, key), p in zip(misses, self._take_pages(len(misses))):
+                self.table[slot, j] = p
+                if key is not None:
+                    self._index[key] = p
+                    self._page_key[p] = key
                 src_rows.append(i)
                 page_ord.append(j)
                 phys.append(p)
+            self._alloc[slot] = n_pages
+            self.pos[slot] = written_len
+            self._promised_total -= int(self._promised[slot])
+            self._promised[slot] = 0
+        self.pages_written += len(phys)
+        if not phys:
+            # every page of every group member was an index hit: route one
+            # dummy write to the null scratch page (the same sink idle rows
+            # use) so the splice shape machinery stays uniform.
+            src_rows, page_ord, phys = [0], [0], [0]
         # pad the scatter lists to a power of two by repeating the last real
         # entry (an identical duplicate write — harmless) so compiled splice
         # shapes stay bounded; same for the dense-row scatter.
@@ -285,23 +488,56 @@ class PagedKVBackend(KVBackend):
             jnp.asarray(phys, jnp.int32), jnp.asarray(dense_rows, jnp.int32),
             jnp.asarray(dense_slots, jnp.int32))
 
-    def _ensure_append(self, slot: int) -> None:
-        """Map a physical page under position ``pos[slot]`` if the append
-        crosses into a new logical page (reservation guarantees success)."""
+    def step_page_need(self, slot: int) -> int:
+        """Physical pages decode() will take for this slot's next append:
+        1 for a fresh page when the append crosses a page boundary, 1 for a
+        copy-on-write when the append lands in a page other live mappings
+        still read. The engine sums this over the step's write slots and
+        frees capacity (on-demand mode) before the decode call."""
         ordinal = int(self.pos[slot]) // self.page_size
         if ordinal >= int(self._alloc[slot]):
-            assert ordinal == int(self._alloc[slot]) < int(self._reserved[slot])
+            return 1
+        p = int(self.table[slot, ordinal])
+        if p in self._page_key and self._page_ref[p] > 1:
+            return 1
+        return 0
+
+    def _prepare_write(self, slot: int) -> Tuple[int, int]:
+        """Resolve the physical (page, offset) for this slot's append,
+        mapping a fresh page at a page boundary and resolving writes into
+        indexed pages: copy-on-write while other mappings remain, plain
+        unregistration (parking the content for sealed references first)
+        when the writer is the sole user."""
+        ordinal = int(self.pos[slot]) // self.page_size
+        if ordinal >= int(self._alloc[slot]):
+            assert ordinal == int(self._alloc[slot])
+            assert self.on_demand or ordinal < int(self._reserved[slot])
             self.table[slot, ordinal] = self._take_pages(1)[0]
             self._alloc[slot] = ordinal + 1
+            self.pages_written += 1
+        p = int(self.table[slot, ordinal])
+        if p in self._page_key:
+            if self._page_ref[p] > 1:
+                new = self._take_pages(1)[0]
+                self.blocks = self._copy_page_fn(
+                    self.blocks, jnp.int32(p), jnp.int32(new))
+                self._page_ref[p] -= 1
+                self.table[slot, ordinal] = new
+                self.cow_copies += 1
+                self.pages_written += 1
+                p = new
+            else:
+                # sole live user about to diverge: the page leaves the
+                # index (its registered content is about to change)
+                self._unregister(p)
+        return p, int(self.pos[slot]) % self.page_size
 
     def decode(self, params, tokens, state, kmax,
                write_slots: Sequence[int]) -> np.ndarray:
         write_phys = np.zeros(self.max_slots, np.int32)   # default: null page
         write_off = np.zeros(self.max_slots, np.int32)
         for s in write_slots:
-            self._ensure_append(s)
-            write_phys[s] = self.table[s, int(self.pos[s]) // self.page_size]
-            write_off[s] = int(self.pos[s]) % self.page_size
+            write_phys[s], write_off[s] = self._prepare_write(s)
         next_tokens, self.blocks = self._decode_fn(
             params, jnp.asarray(tokens[:, None]), self.blocks,
             jnp.asarray(self.table), jnp.asarray(self.pos),
@@ -332,6 +568,8 @@ class PagedKVBackend(KVBackend):
                     phys: Sequence[int],
                     suffix: str = "") -> Dict[str, SealedTensor]:
         sealed: Dict[str, SealedTensor] = {}
+        if not ordinals:
+            return sealed
         pages = self._page_arrays(phys)
         for kpath, arr in pages.items():
             for j, ordinal in enumerate(ordinals):
@@ -339,15 +577,41 @@ class PagedKVBackend(KVBackend):
                 sealed[name] = seal_tensor(key, name, arr[:, j])
         return sealed
 
+    def _split_ordinals(self, slot: int) -> Tuple[List[int], List[int]]:
+        """(shared, private) page ordinals of a slot: shared pages are the
+        content-indexed ones (sealed by reference), private ones move as
+        per-page ciphertext."""
+        shared, private = [], []
+        for j in range(int(self._alloc[slot])):
+            p = int(self.table[slot, j])
+            (shared if p in self._page_key else private).append(j)
+        return shared, private
+
     def seal(self, key, slot, prefix, suffix="") -> Dict[str, SealedTensor]:
+        self._seal_key_cache = key
         n_alloc = int(self._alloc[slot])
-        phys = [int(p) for p in self.table[slot, :n_alloc]]
+        shared, private = self._split_ordinals(slot)
+        # meta v2: [pos, n_alloc, n_shared, (ordinal, refcount) per shared
+        # page]; the content keys ride in their own sealed blob. The
+        # refcount is recorded at seal time (audit/diagnostic — the live
+        # count changes legitimately while this request is out).
+        meta = [int(self.pos[slot]), n_alloc, len(shared)]
+        keys_cat = b""
+        for j in shared:
+            k = self._page_key[int(self.table[slot, j])]
+            meta += [j, int(self._page_ref[int(self.table[slot, j])])]
+            keys_cat += k
+            self._sealed_refs[k] = self._sealed_refs.get(k, 0) + 1
         meta_name = f"{prefix}/meta{suffix}"
-        sealed = {meta_name: seal_tensor(
-            key, meta_name,
-            np.asarray([int(self.pos[slot]), n_alloc], np.int32))}
-        sealed.update(self._seal_pages(key, prefix, range(n_alloc), phys,
-                                       suffix))
+        sealed = {meta_name: seal_tensor(key, meta_name,
+                                         np.asarray(meta, np.int32))}
+        if shared:
+            keys_name = f"{prefix}/sharedkeys{suffix}"
+            sealed[keys_name] = seal_tensor(
+                key, keys_name, np.frombuffer(keys_cat, np.uint8))
+        sealed.update(self._seal_pages(
+            key, prefix, private,
+            [int(self.table[slot, j]) for j in private], suffix))
 
         def pull_dense(path, leaf):
             if _keystr(path) not in self._paged_paths:
@@ -360,47 +624,154 @@ class PagedKVBackend(KVBackend):
 
     def restore(self, key, sealed, slot, prefix, n_tokens, suffix="") -> None:
         # the reservation was re-made when the engine re-acquired the slot
-        # (acquire(rid, n_tokens)); here we only map and decrypt the pages.
+        # (reserve mode); decrypt-then-commit: every MAC is verified before
+        # any accounting state moves, so a tampered blob fails the restore
+        # without leaking the slot, pages, or a refcount.
+        self._seal_key_cache = key
         meta = np.asarray(unseal_tensor(key, sealed[f"{prefix}/meta{suffix}"]))
-        pos, n_alloc = int(meta[0]), int(meta[1])
-        assert n_alloc <= int(self._reserved[slot]), \
+        pos, n_alloc, n_shared = int(meta[0]), int(meta[1]), int(meta[2])
+        shared_ords = [int(meta[3 + 2 * i]) for i in range(n_shared)]
+        keys: List[bytes] = []
+        if n_shared:
+            cat = bytes(np.asarray(unseal_tensor(
+                key, sealed[f"{prefix}/sharedkeys{suffix}"])))
+            keys = [cat[16 * i:16 * (i + 1)] for i in range(n_shared)]
+        shared_set = set(shared_ords)
+        private_ords = [j for j in range(n_alloc) if j not in shared_set]
+        # phase 1: decrypt (and thereby MAC-verify) everything this restore
+        # will need — resident re-links included get no blob to verify (the
+        # live pool IS the authority), parked pages are verified here.
+        private_pages = {
+            j: {kpath: np.asarray(unseal_tensor(
+                    key, sealed[f"{prefix}{kpath}/p{j}{suffix}"]))
+                for kpath in self._paged_paths}
+            for j in private_ords}
+        plans: List[Tuple[str, int, bytes, Optional[Dict[str, np.ndarray]]]] = []
+        for j, k in zip(shared_ords, keys):
+            if k in self._index:
+                plans.append(("relink", j, k, None))
+            elif k in self._parked:
+                blobs = {kpath: np.asarray(unseal_tensor(key, st))
+                         for kpath, st in self._parked[k].items()}
+                plans.append(("remat", j, k, blobs))
+            else:
+                raise IntegrityError(
+                    f"shared page (ordinal {j}) is neither resident nor "
+                    f"parked — sealed state references lost content")
+        dense_rows = {}
+
+        def pull_names(path, leaf):
+            kpath = _keystr(path)
+            if kpath not in self._paged_paths:
+                dense_rows[kpath] = np.asarray(unseal_tensor(
+                    key, sealed[f"{prefix}{kpath}{suffix}"]))
+            return leaf
+        jax.tree_util.tree_map_with_path(pull_names, self.blocks)
+
+        # phase 2: commit — map, write, and account.
+        assert self.on_demand or n_alloc <= int(self._reserved[slot]), \
             "restore into a smaller reservation — accounting bug"
-        taken = self._take_pages(n_alloc)
-        self.table[slot, :n_alloc] = taken
+        n_fresh = len(private_ords) + sum(1 for p in plans if p[0] == "remat")
+        taken = self._take_pages(n_fresh)
+        it = iter(taken)
+        writes: Dict[int, Dict[str, np.ndarray]] = {}
+        for j in private_ords:
+            p = next(it)
+            self.table[slot, j] = p
+            writes[p] = private_pages[j]
+        # NOTE: sealed references are NOT consumed here — a whole-slot
+        # restore may still fail after this commit (the engine grafts
+        # sealed-while-paused tail blobs afterwards), and an under-counted
+        # _sealed_refs would let parked ciphertext an innocent co-sharer
+        # still needs be deleted. The engine releases the references via
+        # discard_sealed only once the entire restore has succeeded; a
+        # rolled-back restore leaves refs (and parked blobs) untouched.
+        for kind, j, k, blobs in plans:
+            if kind == "relink":
+                p = self._index[k]
+                self._page_ref[p] += 1
+                self.table[slot, j] = p
+                self.shared_page_maps += 1
+            else:
+                p = next(it)
+                self.table[slot, j] = p
+                self._index[k] = p
+                self._page_key[p] = k
+                writes[p] = blobs
+                nb = sum(st.n_bytes for st in self._parked[k].values())
+                self._events.append(("rematerialize", nb,
+                                     len(self._parked[k])))
         self._alloc[slot] = n_alloc
         self.pos[slot] = pos
-        self._write_back(key, sealed, slot, prefix, range(n_alloc), taken,
-                         dense_too=True, suffix=suffix)
+        self.pages_written += len(writes)
+        self._scatter_pages(writes)
+        self._put_dense_rows(slot, dense_rows)
 
-    def _write_back(self, key, sealed, slot, prefix, ordinals, phys,
-                    dense_too: bool, suffix: str = "") -> None:
-        ordinals, phys = list(ordinals), list(phys)
-        pad_ords, idx = [], None
-        if ordinals:
-            # pad the scatter to a power of two by repeating the last
-            # (ordinal, phys) pair — an identical duplicate write — so the
-            # jitted donated scatter compiles O(log max_pages) variants.
-            pad = next_pow2(len(phys))
-            pad_ords = ordinals + [ordinals[-1]] * (pad - len(ordinals))
-            idx = jnp.asarray(phys + [phys[-1]] * (pad - len(phys)), jnp.int32)
+    def _scatter_pages(self, writes: Dict[int, Dict[str, np.ndarray]]) -> None:
+        """Write host page arrays into the pool: one padded donated scatter
+        per leaf (see the next_pow2 note on bounded compiled variants)."""
+        if not writes:
+            return
+        phys = list(writes)
+        pad = next_pow2(len(phys))
+        idx = jnp.asarray(phys + [phys[-1]] * (pad - len(phys)), jnp.int32)
 
         def put(path, leaf):
             kpath = _keystr(path)
-            if kpath in self._paged_paths:
-                if not ordinals:
-                    return leaf
-                pages = jnp.stack(
-                    [unseal_tensor(key,
-                                   sealed[f"{prefix}{kpath}/p{o}{suffix}"])
-                     for o in pad_ords], axis=1)
-                return _set_pages(leaf, idx, pages)
-            if dense_too:
-                row = unseal_tensor(key, sealed[f"{prefix}{kpath}{suffix}"])
-                return _set_row(leaf, jnp.int32(slot), row)
-            return leaf
+            if kpath not in self._paged_paths:
+                return leaf
+            pages = np.stack([writes[p][kpath] for p in phys]
+                             + [writes[phys[-1]][kpath]] * (pad - len(phys)),
+                             axis=1)
+            return _set_pages(leaf, idx, jnp.asarray(pages))
         self.blocks = jax.tree_util.tree_map_with_path(put, self.blocks)
 
+    def _put_dense_rows(self, slot: int,
+                        rows: Dict[str, np.ndarray]) -> None:
+        """Write every dense (recurrent-state) leaf's restored row in ONE
+        tree traversal (one jitted row-scatter per dense leaf)."""
+        if not rows:
+            return
+
+        def put(path, leaf):
+            row = rows.get(_keystr(path))
+            if row is None:
+                return leaf
+            return _set_row(leaf, jnp.int32(slot), jnp.asarray(row))
+        self.blocks = jax.tree_util.tree_map_with_path(put, self.blocks)
+
+    def discard_sealed(self, key: SealingKey, sealed: Dict[str, SealedTensor],
+                       prefix: str, suffix: str = "") -> None:
+        """Release a sealed dict's shared-content references — called when
+        the dict is spent: after a fully-successful restore, or when a
+        sealed-out request is dropped unrestored (deadline abort). Parked
+        ciphertext dies with its last reference instead of outliving every
+        reader."""
+        name = f"{prefix}/sharedkeys{suffix}"
+        if name not in sealed:
+            return
+        cat = bytes(np.asarray(unseal_tensor(key, sealed[name])))
+        for i in range(len(cat) // 16):
+            k = cat[16 * i:16 * (i + 1)]
+            if k in self._sealed_refs:
+                self._sealed_refs[k] -= 1
+                if self._sealed_refs[k] <= 0:
+                    del self._sealed_refs[k]
+                    self._parked.pop(k, None)
+
     # -- partial eviction -----------------------------------------------------
+    def evictable_tail_pages(self, slot: int) -> int:
+        """How many tail pages ``seal_tail_pages`` may take: trailing
+        *private* pages only (a shared page cannot be torn out of other
+        readers' tables), and the victim always keeps one resident page."""
+        n_alloc = int(self._alloc[slot])
+        trailing = 0
+        for j in range(n_alloc - 1, -1, -1):
+            if int(self.table[slot, j]) in self._page_key:
+                break
+            trailing += 1
+        return max(0, min(trailing, n_alloc - 1))
+
     def seal_tail_pages(self, key: SealingKey, slot: int, prefix: str,
                         n_pages: int,
                         suffix: str = "") -> Dict[str, SealedTensor]:
@@ -410,11 +781,17 @@ class PagedKVBackend(KVBackend):
         row, and resident head pages. The victim must not decode until
         :meth:`restore_tail_pages` brings the delta back (the engine parks
         it out of the batch)."""
+        self._seal_key_cache = key
         n_alloc = int(self._alloc[slot])
         if not (0 < n_pages < n_alloc):
             raise ValueError(
                 f"partial eviction wants 0 < n_pages < allocated "
                 f"({n_alloc}), got {n_pages}")
+        if n_pages > self.evictable_tail_pages(slot):
+            raise ValueError(
+                f"partial eviction of {n_pages} pages would cross into the "
+                f"shared prefix (only {self.evictable_tail_pages(slot)} "
+                f"trailing private pages)")
         ordinals = list(range(n_alloc - n_pages, n_alloc))
         phys = [int(p) for p in self.table[slot, ordinals]]
         meta_name = f"{prefix}/pagemeta{suffix}"
@@ -423,13 +800,20 @@ class PagedKVBackend(KVBackend):
         sealed.update(self._seal_pages(key, prefix, ordinals, phys, suffix))
         self.table[slot, ordinals] = 0
         self._alloc[slot] = n_alloc - n_pages
-        self._free_pages.extend(phys)
-        self._reserved[slot] -= n_pages
-        self._reserve_free += n_pages
+        for p in phys:
+            self._drop_ref(p)
+        if not self.on_demand:
+            self._reserved[slot] -= n_pages
+            self._reserve_free += n_pages
         return sealed
 
     def can_restore_tail(self, n_pages: int) -> bool:
-        return n_pages <= self._reserve_free
+        if not self.on_demand:
+            return n_pages <= self._reserve_free
+        # same thrash damping as can_restore: demand headroom while other
+        # slots are live (the resume competes with their next appends).
+        headroom = 1 if len(self.slots.active) > 1 else 0
+        return n_pages + headroom <= len(self._free_pages)
 
     def restore_tail_pages(self, key: SealingKey,
                            sealed: Dict[str, SealedTensor], slot: int,
@@ -440,18 +824,28 @@ class PagedKVBackend(KVBackend):
         relocation free. ``reserve=False`` skips re-reserving: used when the
         tail rides along a whole-slot restore whose ``acquire`` already
         reserved the sequence's full worst case."""
+        self._seal_key_cache = key
         meta = np.asarray(unseal_tensor(
             key, sealed[f"{prefix}/pagemeta{suffix}"]))
         start, n_pages = int(meta[0]), int(meta[1])
-        if reserve:
+        if reserve and not self.on_demand:
             assert self.can_restore_tail(n_pages), \
                 "restore_tail without can_restore_tail — accounting bug"
             self._reserved[slot] += n_pages
             self._reserve_free -= n_pages
         ordinals = list(range(start, start + n_pages))
+        # decrypt first (MAC gate), then map and write
+        pages = {
+            j: {kpath: np.asarray(unseal_tensor(
+                    key, sealed[f"{prefix}{kpath}/p{j}{suffix}"]))
+                for kpath in self._paged_paths}
+            for j in ordinals}
         taken = self._take_pages(n_pages)
-        self.table[slot, ordinals] = taken
+        writes = {}
+        for j, p in zip(ordinals, taken):
+            self.table[slot, j] = p
+            writes[p] = pages[j]
         self._alloc[slot] = start + n_pages
-        self._write_back(key, sealed, slot, prefix, ordinals, taken,
-                         dense_too=False, suffix=suffix)
+        self.pages_written += n_pages
+        self._scatter_pages(writes)
         return n_pages

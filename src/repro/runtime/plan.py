@@ -206,7 +206,14 @@ class ShardedPlan(ComputePlan):
     def place_paged_cache(self, blocks: Cache, paged_paths) -> Cache:
         """Pool leaves (pages shared by every sequence) replicate; the
         slot-dense remainder ([L, slots, ...] recurrent state) shards its
-        batch dim over ``data`` when it divides."""
+        batch dim over ``data`` when it divides. Prefix-sharing state
+        (content index, per-page refcounts, parked ciphertext) is
+        host-side and engine-global, so a replicated pool shares pages
+        across every data-shard's sequences for free; per-shard pools
+        (ROADMAP) will need the index keyed per shard. Sealing stays
+        nonce-safe either way: per-epoch names carry the ``/s{shard}``
+        suffix, and parked shared pages use content-derived names whose
+        repeat sealing is deterministic (same plaintext, same ciphertext)."""
         def spec_for(path, leaf):
             if jax.tree_util.keystr(path) in paged_paths:
                 return P(*([None] * leaf.ndim))

@@ -71,7 +71,12 @@ class Request:
     finish_reason: str = ""
     n_preemptions: int = 0
     kv_need: int = 0       # worst-case KV positions (set at submit; the unit
-                           # the KV backend's admission accounting charges)
+                           # the KV backend's admission accounting charges —
+                           # *effective*, i.e. net of resident shared pages,
+                           # on a prefix-sharing backend)
+    page_keys: Optional[list] = None   # prompt page content keys (sharing)
+    sealed_pages: int = 0  # pages held at the last whole-slot seal (what an
+                           # on-demand pool gates the restore on)
     sealed_bytes: int = 0  # ciphertext bytes this request's evictions moved
     seal_epoch: int = 0    # bumps on every sealed-KV eviction (nonce freshness)
     stream_id: int = -1    # channel-global egress stream (set by the engine)
@@ -166,6 +171,8 @@ class ServeStats:
     deadline_misses: int = 0       # served, but finished after deadline_s
     preemptions: int = 0           # sealed-KV evictions among served requests
     sealed_bytes: int = 0          # ciphertext bytes those evictions moved
+    shared_pages: int = 0          # page mappings served by the prefix index
+    cow_copies: int = 0            # shared tail pages copied on first write
     wall_s: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     ttft_s: List[float] = dataclasses.field(default_factory=list)

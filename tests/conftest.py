@@ -1,15 +1,25 @@
 import os
 import subprocess
 import sys
+from collections import Counter
 from pathlib import Path
 
+import numpy as np
 import pytest
 
 SRC = Path(__file__).resolve().parents[1] / "src"
 sys.path.insert(0, str(SRC))
 
-# tests must see exactly 1 device (the dry-run sets its own flags in-process)
+# tests run on CPU with exactly TWO forced host devices (set before jax
+# initializes): the differential harness replays its canonical scenario on
+# an in-process dp=2 mesh. Single-device engines still place everything on
+# device 0, so non-mesh tests are unaffected. Subprocess-based multi-device
+# tests override XLA_FLAGS themselves.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2"
+                               ).strip()
 
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 520) -> str:
@@ -27,3 +37,153 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 520) -> str:
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess
+
+
+# ---------------------------------------------------------------------------
+# cross-backend differential harness
+#
+# ONE canonical serving scenario — mixed priorities, forced preemption,
+# seeded sampling, chunked prefill, and (where the backend supports it)
+# shared prompt prefixes with a partial page that exercises copy-on-write —
+# replayed verbatim over every backend configuration. Decoded tokens are a
+# pure function of (prompt, sampling params, seed), so every configuration
+# must produce byte-identical outputs, each equal to the request served
+# alone on an uncontended engine. Backend-specific tests add their own
+# assertions (sealed-byte ordering, shared-page counters, pool invariants)
+# on top of the same run.
+# ---------------------------------------------------------------------------
+
+CANONICAL_CONFIGS = {
+    "slot": dict(kv_backend="slot"),
+    "paged": dict(kv_backend="paged", page_size=8),
+    "paged-sharing": dict(kv_backend="paged", page_size=8,
+                          prefix_sharing=True),
+    "sharded-dp2": dict(kv_backend="slot", mesh="dp=2"),
+}
+
+# engine shape shared by every configuration (2 slots => the high wave must
+# preempt; bucket 4 < page_size 8 => the shared prompt page is partial and
+# the first decode append copies-on-write under sharing)
+CANONICAL_ENGINE = dict(max_slots=2, max_len=64, prefill_buckets=(4, 8))
+
+
+def canonical_requests():
+    """(prompt, max_new_tokens, priority, seed) for the low wave and the
+    preempting high wave. Requests 0 and 1 share a 4-token prompt that only
+    part-fills its page (bucket 4 < page 8): batched admission maps both
+    onto one partial shared page and the first append copies-on-write.
+    Requests 2 and 3 share a full 8-token prompt page (overlapping but not
+    batch-simultaneous admission). Request 4 chunks past the largest
+    bucket. All lows share priority 0 so admission runs in rid order and
+    the p4 pair lands in one batched prefill group — the configuration
+    that maps one partial page into two tables at once."""
+    p8 = np.arange(1, 9, dtype=np.int32)
+    p4 = np.arange(1, 5, dtype=np.int32)
+    low = [
+        (p4, 8, 0, 100),
+        (p4.copy(), 5, 0, 101),
+        (p8, 8, 0, 102),
+        (p8.copy(), 6, 0, 103),
+        (np.arange(1, 13, dtype=np.int32), 6, 0, 104),
+    ]
+    high = [
+        (np.full(8, 7, np.int32), 4, 5, 105),
+        (np.full(8, 9, np.int32), 3, 5, 106),
+    ]
+    return low, high
+
+
+def _gen(spec):
+    from repro.runtime import GenerationRequest, SamplingParams
+    prompt, mnt, prio, seed = spec
+    return GenerationRequest(prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=mnt, priority=prio,
+                             params=SamplingParams(temperature=0.9, top_k=16,
+                                                   seed=seed))
+
+
+def run_canonical_scenario(model, params, **engine_kw):
+    """Replay the canonical scenario on one engine configuration. Returns
+    (outputs in submission order, engine, TrustDomain) — the engine is
+    post-run, so callers can read backend counters and check invariants."""
+    from repro.core import TrustDomain
+    from repro.runtime import Engine
+    td = TrustDomain("tdx")
+    kw = dict(CANONICAL_ENGINE)
+    kw.update(engine_kw)
+    eng = Engine(model, params, trust_domain=td, **kw)
+    low_specs, high_specs = canonical_requests()
+    reqs = [eng.submit(_gen(s)) for s in low_specs]
+    for _ in range(3):
+        eng.step()
+    reqs += [eng.submit(_gen(s)) for s in high_specs]
+    stats = eng.run(max_steps=50_000)
+    assert all(r.finished for r in reqs), "scenario did not drain"
+    assert stats.preemptions > 0, \
+        "the canonical scenario must force sealed preemption"
+    return [list(r.output) for r in reqs], eng, td
+
+
+@pytest.fixture(params=sorted(CANONICAL_CONFIGS), scope="session")
+def backend_config(request):
+    """(name, engine kwargs) for each backend configuration under test."""
+    return request.param, dict(CANONICAL_CONFIGS[request.param])
+
+
+def make_sharing_engine(model, params, **kw):
+    """The one prefix-sharing engine shape the suites drive (page 8 >
+    bucket 8 prompts => whole-page sharing; override prefill_buckets for
+    partial-page/CoW shapes)."""
+    from repro.core import TrustDomain
+    from repro.runtime import Engine
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_len", 8)
+    kw.setdefault("kv_backend", "paged")
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefix_sharing", True)
+    kw.setdefault("trust_domain", TrustDomain("tdx"))
+    return Engine(model, params, **kw)
+
+
+def check_pool_invariants(kv) -> None:
+    """The paged pool's structural invariants, checkable at any engine-step
+    boundary: no leaked or double-freed pages, the null scratch page never
+    mapped or freed, refcounts equal to live table mappings, a consistent
+    two-way content index, and parked ciphertext only while sealed
+    references remain."""
+    inner = getattr(kv, "inner", kv)   # unwrap ShardedKVBackend
+    if not hasattr(inner, "table"):
+        return                         # slot-dense: nothing paged to check
+    mapped = []
+    for slot in range(inner.max_slots):
+        n = int(inner._alloc[slot])
+        assert (inner.table[slot, n:] == 0).all(), \
+            f"slot {slot}: mappings past its allocation"
+        pages = [int(p) for p in inner.table[slot, :n]]
+        assert 0 not in pages, f"slot {slot} mapped the null scratch page"
+        mapped.extend(pages)
+    free = [int(p) for p in inner._free_pages]
+    assert 0 not in free, "null scratch page leaked into the free list"
+    assert len(set(free)) == len(free), "double-free: duplicate free pages"
+    assert not set(free) & set(mapped), "page both free and mapped"
+    assert len(free) + len(set(mapped)) == inner.num_pages, \
+        "page leak: free + mapped != pool"
+    counts = Counter(mapped)
+    for p in range(1, inner.num_pages + 1):
+        assert int(inner._page_ref[p]) == counts.get(p, 0), \
+            f"page {p}: refcount {int(inner._page_ref[p])} != " \
+            f"{counts.get(p, 0)} live mappings"
+    assert len(inner._index) == len(inner._page_key)
+    for key, p in inner._index.items():
+        assert inner._page_key.get(p) == key, "content index out of sync"
+        assert counts.get(p, 0) >= 1, "indexed page has no live mapping"
+    for key in inner._parked:
+        assert inner._sealed_refs.get(key, 0) > 0, \
+            "parked ciphertext outlived every sealed reference"
+    if not inner.on_demand:
+        reserved = int(inner._reserved.sum())
+        assert inner._reserve_free + reserved == inner.num_pages, \
+            "reservation accounting leak"
+        assert (inner._alloc <= inner._reserved).all(), \
+            "allocation exceeded reservation"

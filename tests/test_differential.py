@@ -1,0 +1,254 @@
+"""Cross-backend differential harness + adversarial shared-page sealing.
+
+ONE canonical serving scenario (tests/conftest.py: mixed priorities, forced
+sealed preemption, seeded sampling, chunked prefill, shared prefixes with a
+partial CoW page) is replayed over every backend configuration — slot,
+paged, paged+prefix-sharing, and an in-process dp=2 sharded mesh — and each
+replay must reproduce, byte for byte, the tokens each request produces when
+served alone on an uncontended engine. The layout, allocator, sharing, and
+sharding machinery must all be invisible to the decoded math; what may
+differ (and is asserted to differ, in the right direction) is memory and
+sealed-boundary traffic.
+
+The adversarial half targets the refcount-aware sealing of shared pages:
+tampered parked ciphertext or shared-keys MACs must fail the restore of
+*every* referencing request without leaking slots, pages, or refcounts, and
+re-linked restores must never mint (or reuse) a sealing nonce.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import (CANONICAL_CONFIGS, canonical_requests,
+                      check_pool_invariants, make_sharing_engine,
+                      run_canonical_scenario, _gen)
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.core.sealing import IntegrityError
+from repro.models import build_model
+from repro.runtime import (Engine, GenerationRequest, SamplingParams,
+                           ShardedKVBackend)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def scenario_runs(small_model):
+    """Each configuration's scenario result, computed once per module:
+    name -> (outputs, engine, trust domain)."""
+    cfg, model, params = small_model
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cache[name] = run_canonical_scenario(
+                model, params, **CANONICAL_CONFIGS[name])
+        return cache[name]
+    return get
+
+
+@pytest.fixture(scope="module")
+def solo_reference(small_model):
+    """Every canonical request served alone on an uncontended single-slot
+    slot-dense engine: the ground truth any batched/paged/shared/sharded
+    replay must reproduce byte for byte."""
+    cfg, model, params = small_model
+    low, high = canonical_requests()
+    refs = []
+    for spec in low + high:
+        eng = Engine(model, params, max_slots=1, max_len=64,
+                     prefill_buckets=(4, 8))
+        refs.append(eng.generate(_gen(spec)).tokens)
+    return refs
+
+
+class TestDifferentialHarness:
+    def test_outputs_match_solo_reference(self, backend_config, scenario_runs,
+                                          solo_reference):
+        """Acceptance: each backend configuration reproduces the solo
+        ground truth byte-for-byte across batching, preemption, sealed
+        restore, sharing, and sharding — and leaves a structurally sound
+        page pool behind."""
+        name, _ = backend_config
+        outputs, eng, _ = scenario_runs(name)
+        assert outputs == solo_reference, f"{name} diverged from solo runs"
+        check_pool_invariants(eng.kv)
+
+    def test_all_configs_byte_identical(self, scenario_runs):
+        outs = {name: scenario_runs(name)[0] for name in CANONICAL_CONFIGS}
+        base = outs.pop("slot")
+        for name, o in outs.items():
+            assert o == base, f"{name} != slot outputs"
+
+    def test_paged_seals_fewer_bytes_than_slot(self, scenario_runs):
+        """Insight-10 ordering on the same preemption pattern: per-page
+        sealing moves strictly fewer bytes than whole-slot sealing."""
+        _, _, td_slot = scenario_runs("slot")
+        _, _, td_paged = scenario_runs("paged")
+        a, b = td_slot.channel.stats, td_paged.channel.stats
+        assert a.seal_events > 0 and b.seal_events > 0
+        assert b.seal_bytes < a.seal_bytes
+
+    def test_sharing_shares_pages_and_copies_on_write(self, scenario_runs):
+        """The sharing replay actually shares (requests 0/1 have identical
+        prompts; request 2 shares their head in the partial small bucket)
+        and the partial page's first divergent append copies-on-write."""
+        _, eng_plain, td_plain = scenario_runs("paged")
+        _, eng_share, td = scenario_runs("paged-sharing")
+        assert eng_share.kv.shared_page_maps > 0
+        assert eng_share.kv.cow_copies > 0
+        assert eng_share.kv.pages_written < eng_plain.kv.pages_written
+        assert (td.channel.stats.seal_bytes
+                <= td_plain.channel.stats.seal_bytes)
+
+    def test_sharded_dp2_really_spans_the_mesh(self, scenario_runs):
+        """The dp=2 replay is not a degenerate single-device run: the
+        wrapped backend seals per shard and the engine measured real
+        collective traffic between the two devices."""
+        _, eng, td = scenario_runs("sharded-dp2")
+        assert isinstance(eng.kv, ShardedKVBackend)
+        assert eng.plan.dp == 2
+        ch = td.channel.stats
+        assert ch.collective_steps > 0
+        assert ch.collective_bytes > 0
+
+
+PROMPT = np.arange(1, 9, dtype=np.int32)
+
+
+def sharer(seed, n=10, prio=0):
+    return GenerationRequest(
+        prompt=PROMPT.copy(), max_new_tokens=n, priority=prio,
+        params=SamplingParams(temperature=0.9, top_k=16, seed=seed))
+
+
+def seal_both_sharers(model, params):
+    """Two requests sharing their whole prompt page, both sealed out: the
+    first seal leaves the page resident (the mate still maps it), the
+    second drops the last live reference and parks the page content-named.
+    Returns (engine, [(sealed, req), ...], parked key)."""
+    eng = make_sharing_engine(model, params)
+    a, b = eng.submit(sharer(1)), eng.submit(sharer(2))
+    for _ in range(2):
+        eng.step()
+    sealed_a = eng.seal_slot(0)
+    assert not eng.kv._parked, "page must stay resident while the mate lives"
+    sealed_b = eng.seal_slot(1)
+    assert len(eng.kv._parked) == 1, "last reference drop must park the page"
+    (key,) = eng.kv._parked
+    assert eng.kv._sealed_refs[key] == 2
+    return eng, [sealed_a, sealed_b], key
+
+
+class TestSharedPageAdversarial:
+    def test_tampered_parked_page_fails_every_referencing_restore(
+            self, small_model):
+        """Flip one ciphertext bit of the parked shared page: EVERY sealed
+        request referencing it must fail restore with an integrity error,
+        and none of the failures may leak a slot, a page, or a refcount."""
+        cfg, model, params = small_model
+        eng, sealed_reqs, key = seal_both_sharers(model, params)
+        blob = next(iter(eng.kv._parked[key].values()))
+        ct = np.asarray(blob.ciphertext).copy()
+        ct[0, 0] ^= 1
+        blob.ciphertext = jax.numpy.asarray(ct)
+        for sealed, req in sealed_reqs:
+            with pytest.raises(IntegrityError):
+                eng.restore_slot(sealed, req)
+            assert eng.slots.num_active == 0
+            assert eng.kv.free_physical_pages == eng.kv.num_pages
+            check_pool_invariants(eng.kv)
+
+    def test_tampered_sharedkeys_mac_fails_without_leak(self, small_model):
+        cfg, model, params = small_model
+        eng, sealed_reqs, _ = seal_both_sharers(model, params)
+        sealed, req = sealed_reqs[0]
+        keys_blob = next(st for name, st in sealed.items()
+                         if "/sharedkeys" in name)
+        keys_blob.mac = b"\x00" * 32
+        with pytest.raises(IntegrityError, match="sharedkeys"):
+            eng.restore_slot(sealed, req)
+        assert eng.slots.num_active == 0
+        assert eng.kv.free_physical_pages == eng.kv.num_pages
+        check_pool_invariants(eng.kv)
+        # the untampered co-referencer still restores and finishes exactly
+        other_sealed, other_req = sealed_reqs[1]
+        eng.restore_slot(other_sealed, other_req)
+        eng.run()
+        ref = Engine(model, params, max_slots=1, max_len=64,
+                     prefill_len=8).generate(sharer(2)).tokens
+        assert other_req.output == ref
+
+    def test_relinked_restore_mints_no_new_nonce(self, small_model):
+        """A restore that re-links a resident shared page seals nothing:
+        the audit shows no new seal event, the sealed-name universe gains
+        no entry, and every name ever sealed is either unique or (content-
+        named) carries the byte-identical ciphertext — one nonce never
+        covers two plaintexts."""
+        cfg, model, params = small_model
+        td = TrustDomain("tdx")
+        eng = make_sharing_engine(model, params, trust_domain=td)
+        a, b = eng.submit(sharer(1)), eng.submit(sharer(2, n=20))
+        for _ in range(2):
+            eng.step()
+        sealed_a, req_a = eng.seal_slot(0)
+        seen = {name: bytes(np.asarray(st.ciphertext).tobytes())
+                for name, st in sealed_a.items()}
+        seals_before = sum(1 for e in td.audit if e.kind == "seal_kv")
+        eng.restore_slot(sealed_a, req_a)       # re-link: the mate is live
+        assert sum(1 for e in td.audit
+                   if e.kind == "seal_kv") == seals_before
+        # second eviction epoch: every fresh name is new; a repeated
+        # content-derived name must carry identical ciphertext
+        for _ in range(2):
+            eng.step()
+        sealed_a2, req_a2 = eng.seal_slot(0)
+        for name, st in sealed_a2.items():
+            ct = bytes(np.asarray(st.ciphertext).tobytes())
+            assert name not in seen or seen[name] == ct, \
+                f"nonce {name} reused with different plaintext"
+            seen[name] = ct
+        eng.restore_slot(sealed_a2, req_a2)
+        eng.run()
+        ref = Engine(model, params, max_slots=1, max_len=64,
+                     prefill_len=8).generate(sharer(1)).tokens
+        assert a.output == ref
+
+    def test_discard_sealed_releases_shared_refs(self, small_model):
+        """Dropping a sealed request unrestored (the deadline-abort path)
+        releases its shared references; parked ciphertext dies with its
+        last reader instead of accumulating."""
+        cfg, model, params = small_model
+        eng, sealed_reqs, key = seal_both_sharers(model, params)
+        for sealed, req in sealed_reqs:
+            eng.kv.discard_sealed(
+                eng.td.sealing_key, sealed,
+                f"kvslot/{req.stream_id}/{req.seal_epoch - 1}")
+        assert not eng.kv._sealed_refs and not eng.kv._parked
+        check_pool_invariants(eng.kv)
+
+    def test_park_rematerialize_round_trip_is_exact(self, small_model):
+        """Both sharers sealed (page parked), both restored: the first
+        restore re-materializes from parked ciphertext, the second re-links
+        the re-materialized page, and both finish byte-identically to solo
+        runs."""
+        cfg, model, params = small_model
+        eng, sealed_reqs, _ = seal_both_sharers(model, params)
+        relinks_before = eng.kv.shared_page_maps
+        for sealed, req in sealed_reqs:
+            eng.restore_slot(sealed, req)
+        assert not eng.kv._parked and not eng.kv._sealed_refs
+        assert eng.kv.shared_page_maps == relinks_before + 1
+        eng.run()
+        for i, (_, req) in enumerate(sealed_reqs):
+            ref = Engine(model, params, max_slots=1, max_len=64,
+                         prefill_len=8).generate(sharer(i + 1)).tokens
+            assert req.output == ref
+        check_pool_invariants(eng.kv)

@@ -10,9 +10,9 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.core import TrustDomain
-from repro.core.sealing import IntegrityError, _nonce_for, sealed_nbytes
+from repro.core.sealing import IntegrityError, _nonce_for
 from repro.models import build_model
-from repro.runtime import Engine, GenerationRequest, SamplingParams
+from repro.runtime import Engine, GenerationRequest
 from repro.runtime.kvcache import make_backend
 from repro.runtime.paged import PagedKVBackend
 
@@ -73,38 +73,12 @@ class TestBackendConstruction:
 
 
 class TestParity:
-    def test_greedy_outputs_identical(self, small_model):
-        cfg, model, params = small_model
-        prompts = [PROMPT, np.arange(9, 1, -1, dtype=np.int32),
-                   np.arange(1, 21, dtype=np.int32)]    # incl. chunked tail
-        slot_eng = make_engine(model, params, max_slots=3)
-        paged_eng = paged_engine(model, params, max_slots=3)
-        a = [slot_eng.submit(G(p, 6)) for p in prompts]
-        b = [paged_eng.submit(G(p, 6)) for p in prompts]
-        slot_eng.run()
-        paged_eng.run()
-        assert [r.output for r in a] == [r.output for r in b]
-
-    def test_seeded_outputs_identical_across_preemption(self, small_model):
-        """Acceptance: the same seeded sampled request, preempted mid-flight
-        on each backend, reproduces byte-identical tokens — the layout (and
-        its sealing granularity) is invisible to the math."""
-        cfg, model, params = small_model
-        sp = SamplingParams(temperature=0.9, top_k=16, seed=42)
-        outs = []
-        for backend in ("slot", "paged"):
-            eng = make_engine(model, params, max_slots=1, kv_backend=backend,
-                              page_size=8, trust_domain=TrustDomain("tdx"))
-            low = eng.submit(G(max_new_tokens=10, params=sp, priority=0))
-            for _ in range(3):
-                eng.step()
-            eng.submit(G(np.full(8, 7, np.int32), max_new_tokens=3,
-                         priority=9))
-            eng.run()
-            assert low.n_preemptions == 1
-            outs.append(low.output)
-        assert outs[0] == outs[1]
-        assert len(outs[0]) == 10
+    # The fast-tier slot-vs-paged parity tests (greedy mixes, seeded
+    # sampling across forced preemption) moved into the cross-backend
+    # differential harness: tests/test_differential.py replays ONE
+    # canonical scenario over slot / paged / paged+sharing / sharded(dp=2)
+    # and diffs everything against solo references. Only the slow
+    # long-context mix stays here (the harness scenario is short).
 
     @pytest.mark.slow
     def test_long_context_parity(self, small_model):
@@ -131,26 +105,9 @@ class TestParity:
 
 
 class TestPageGranularSealing:
-    def test_sealed_bytes_proportional_to_tokens(self, small_model):
-        """The same short preemption seals strictly fewer bytes on the paged
-        backend (pages actually used) than slot-dense (whole max_len)."""
-        cfg, model, params = small_model
-        sizes = {}
-        for backend in ("slot", "paged"):
-            eng = make_engine(model, params, max_slots=1, kv_backend=backend,
-                              page_size=8, trust_domain=TrustDomain("tdx"))
-            eng.submit(G(max_new_tokens=10))
-            eng.step()
-            sealed, req = eng.seal_slot(0)
-            sizes[backend] = sealed_nbytes(sealed)
-            eng.restore_slot(sealed, req)
-            eng.run()
-            assert req.finished and len(req.output) == 10
-            assert req.sealed_bytes == sizes[backend]
-        assert sizes["paged"] < sizes["slot"]
-        ch_ratio = sizes["slot"] / sizes["paged"]
-        # 8 prompt tokens + a little decode = 2 pages of 8 vs max_len=64
-        assert ch_ratio > 2
+    # sealed-bytes ordering vs the slot backend is asserted by the
+    # differential harness (test_differential.py) on the canonical
+    # scenario's real preemption pattern.
 
     def test_per_page_nonces_are_unique(self, small_model):
         """Every sealed page gets its own nonce (name), across leaves, page
@@ -407,3 +364,164 @@ class TestPageAccounting:
             tiny.submit(G(np.ones(30, np.int32), 16))
         tiny.submit(G(np.ones(tiny.prompt_budget(16), np.int32), 16))
         tiny.run()
+
+
+from conftest import make_sharing_engine as sharing_engine  # noqa: E402
+
+
+class TestPrefixSharing:
+    def test_construction_flags(self, small_model):
+        cfg, model, params = small_model
+        with pytest.raises(ValueError, match="paged"):
+            make_engine(model, params, prefix_sharing=True)   # slot backend
+        with pytest.raises(ValueError, match="ondemand"):
+            paged_engine(model, params, prefix_sharing=True,
+                         kv_alloc="reserve")
+        with pytest.raises(ValueError, match="alloc"):
+            paged_engine(model, params, kv_alloc="lazy")
+        eng = sharing_engine(model, params)
+        assert eng.kv.supports_sharing and eng.kv.on_demand
+        plain = paged_engine(model, params)
+        assert not plain.kv.supports_sharing and not plain.kv.on_demand
+
+    def test_prefix_page_keys_are_cumulative(self):
+        from repro.runtime.paged import prefix_page_keys
+        a = prefix_page_keys(np.arange(16, dtype=np.int32), 4, 16)
+        assert len(a) == 4 and len(set(a)) == 4
+        # same content => same keys; a flipped EARLY token changes every
+        # later key (KV at a position depends on all earlier tokens)
+        b = prefix_page_keys(np.arange(16, dtype=np.int32), 4, 16)
+        assert a == b
+        toks = np.arange(16, dtype=np.int32)
+        toks[1] = 99
+        c = prefix_page_keys(toks, 4, 16)
+        assert all(x != y for x, y in zip(a, c))
+        # a diverging LATER page keeps the common prefix keys
+        toks = np.arange(16, dtype=np.int32)
+        toks[9] = 99
+        d = prefix_page_keys(toks, 4, 16)
+        assert d[:2] == a[:2] and d[2:] != a[2:]
+        # partial final page: length-sensitive
+        e = prefix_page_keys(np.arange(16, dtype=np.int32), 4, 10)
+        assert len(e) == 3 and e[:2] == a[:2] and e[2] != a[2]
+
+    def test_identical_prompts_share_and_release_cleanly(self, small_model):
+        cfg, model, params = small_model
+        eng = sharing_engine(model, params, max_slots=2)
+        a = eng.submit(G(max_new_tokens=6))
+        b = eng.submit(G(max_new_tokens=6))
+        eng.step()
+        # one physical page serves both tables (prompt = exactly one page)
+        assert eng.kv.shared_page_maps == 1
+        phys = [int(eng.kv.table[s, 0]) for s in (0, 1)]
+        assert phys[0] == phys[1] and eng.kv._page_ref[phys[0]] == 2
+        eng.run()
+        assert a.output == b.output
+        assert eng.kv.free_physical_pages == eng.kv.num_pages
+        assert not eng.kv._index and not eng.kv._parked
+
+    def test_share_prefix_opt_out_stays_private(self, small_model):
+        cfg, model, params = small_model
+        eng = sharing_engine(model, params, max_slots=2)
+        eng.submit(G(max_new_tokens=4, share_prefix=False))
+        eng.submit(G(max_new_tokens=4, share_prefix=False))
+        eng.run()
+        assert eng.kv.shared_page_maps == 0
+        # an opted-out page is never index-registered either
+        eng.submit(G(max_new_tokens=4, share_prefix=False))
+        eng.step()
+        assert not eng.kv._index
+        eng.run()
+
+    def test_resident_prefix_relaxes_admission_not_capacity(self,
+                                                            small_model):
+        """Satellite: effective (post-sharing) accounting. The per-request
+        capacity bound is physical (every page of one sequence is mapped
+        simultaneously, shared or not) and stays put; what residency lowers
+        is the demand admission charges against the pool — a request whose
+        prompt is resident admits on one page of append headroom, while an
+        opted-out twin (prompt page + headroom) has to wait."""
+        cfg, model, params = small_model
+        eng = sharing_engine(model, params, max_slots=3, num_pages=4)
+        # capacity = min(64, 4 * 8) = 32 positions, resident or not
+        with pytest.raises(ValueError, match="KV positions"):
+            eng.submit(G(max_new_tokens=26))        # need 8+25 = 33 > 32
+        keepers = [eng.submit(G(max_new_tokens=12)) for _ in range(2)]
+        eng.step()
+        # two keepers: 1 shared prompt page + 1 private decode page each
+        assert eng.kv.free_physical_pages == 1
+        need, eff = eng.effective_kv_need(PROMPT, 4)
+        assert (need, eff) == (11, 3)     # prompt page resident: 8 off
+        warm = eng.submit(G(max_new_tokens=4))
+        assert warm.kv_need == 3
+        cold = eng.submit(G(max_new_tokens=4, share_prefix=False))
+        eng.step()
+        # the resident-prefix request admitted into the one spare page; the
+        # opted-out twin (fresh prompt page + headroom vs 1 free) queued
+        assert any(r is warm for r in eng.scheduler.running.values())
+        assert all(r is not cold for r in eng.scheduler.running.values())
+        eng.run(max_steps=2000)
+        assert all(r.finished for r in keepers + [warm, cold])
+        assert warm.output == cold.output   # opting out never changes tokens
+
+    def test_shared_head_not_partially_evictable(self, small_model):
+        """Partial eviction may only take private tail pages: a shared page
+        cannot be torn out of other readers' tables."""
+        cfg, model, params = small_model
+        p16 = np.arange(1, 17, dtype=np.int32)
+        eng = sharing_engine(model, params, max_slots=2,
+                             prefill_buckets=(16,))
+        a = eng.submit(G(p16, max_new_tokens=10))
+        b = eng.submit(G(p16, max_new_tokens=10))
+        for _ in range(3):
+            eng.step()   # 2 shared prompt pages + 1 private decode page
+        assert eng.kv.evictable_tail_pages(0) == 1
+        with pytest.raises(ValueError, match="shared prefix"):
+            eng.kv.seal_tail_pages(eng.td.sealing_key, 0, "kvslot/x/0", 2)
+        eng.partial_preempt(0, 1)      # the private tail is fair game
+        eng.run()
+        assert a.output == b.output
+
+    def test_lone_live_slot_reclaims_pages_from_paused_victim(
+            self, small_model):
+        """Regression: when the only live slot needs pages and the rest of
+        the pool is held by a PAUSED (partially-evicted) victim, capacity
+        preemption must be able to whole-seal the paused slot (tail blob
+        grafted along) rather than wedge — and both requests still finish
+        byte-identically."""
+        cfg, model, params = small_model
+        pa = np.arange(1, 9, dtype=np.int32)
+        pb = np.arange(11, 19, dtype=np.int32)
+        refs = [make_engine(model, params, max_slots=1).generate(
+                    G(p, 20)).tokens for p in (pa, pb)]
+        eng = sharing_engine(model, params, max_slots=2, num_pages=4,
+                             trust_domain=TrustDomain("tdx"))
+        a = eng.submit(G(pa, 20))
+        for _ in range(10):
+            eng.step()          # a grows to 3 of 4 pages
+        b = eng.submit(G(pb, 20, priority=5))   # partial-evicts a, then
+        eng.run(max_steps=3000)                 # grows past the pool itself
+        assert a.finished and b.finished
+        assert [a.output, b.output] == refs
+        assert a.n_preemptions >= 2             # partial, then whole-sealed
+        assert not eng._paused and not eng._preempted
+        assert eng.kv.free_physical_pages == eng.kv.num_pages
+
+    def test_capacity_preemption_under_page_pressure(self, small_model):
+        """On-demand pool runs dry mid-decode: the engine frees pages by
+        evicting the laxest victim instead of failing the append, and
+        every request still finishes with exact tokens."""
+        cfg, model, params = small_model
+        ref_eng = make_engine(model, params, max_slots=1)
+        refs = [ref_eng.generate(G(np.arange(1 + i, 9 + i, dtype=np.int32),
+                                   max_new_tokens=12)).tokens
+                for i in range(3)]
+        eng = sharing_engine(model, params, max_slots=3, num_pages=5)
+        # 3 slots x (1 prompt page + appends past it) > 5 pages
+        reqs = [eng.submit(G(np.arange(1 + i, 9 + i, dtype=np.int32),
+                             max_new_tokens=12)) for i in range(3)]
+        eng.run(max_steps=2000)
+        assert [r.output for r in reqs] == refs
+        assert sum(r.n_preemptions for r in reqs) > 0, \
+            "page pressure never forced a capacity preemption"
+        assert eng.kv.free_physical_pages == eng.kv.num_pages

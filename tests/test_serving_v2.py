@@ -210,43 +210,16 @@ class TestBucketedPrefill:
         eng.run()
         assert r0.output != r1.output
 
-    def test_bucket_grouping_matches_sequential(self, small_model):
-        """Mixed prompt lengths land in different buckets; batched admission
-        must not change any request's tokens."""
-        cfg, model, params = small_model
-        prompts = [np.arange(1, 4, dtype=np.int32),        # bucket 4
-                   np.full(3, 9, np.int32),                # bucket 4
-                   np.arange(2, 14, dtype=np.int32),       # bucket 16
-                   np.arange(5, 25, dtype=np.int32)]       # bucket 16 + tail
-        buckets = (4, 16)
-        eng = make_engine(model, params, max_slots=4, prefill_buckets=buckets)
-        reqs = [eng.submit(G(p, 4)) for p in prompts]
-        eng.run()
-        for p, r in zip(prompts, reqs):
-            solo = make_engine(model, params, max_slots=1,
-                               prefill_buckets=buckets, batch_prefill=False)
-            assert r.output == solo.generate(G(p, 4)).tokens
+    # bucket-grouped admission vs sequential parity moved into the
+    # differential harness (test_differential.py): the canonical scenario
+    # mixes buckets 4/8 plus a chunked tail and diffs every backend
+    # configuration against solo single-request references.
 
 
 class TestPriorityPreemption:
-    def test_high_priority_preempts_and_victim_resumes_identically(self, small_model):
-        cfg, model, params = small_model
-        ref = make_engine(model, params, max_slots=1).generate(G(PROMPT, 10)).tokens
-        eng = make_engine(model, params, max_slots=1,
-                          trust_domain=TrustDomain("tdx"))
-        low = eng.submit(G(PROMPT, 10, priority=0))
-        for _ in range(3):
-            eng.step()
-        # step 1 = admission (prefill token) + decode token, then 1/step
-        assert len(low.output) == 4
-        high = eng.submit(G(np.full(8, 7, np.int32), 4, priority=5))
-        eng.run()
-        assert high.finished and low.finished
-        assert high.t_done <= low.t_done
-        assert low.n_preemptions == 1
-        # sealed-KV round trip must be invisible to the victim's tokens
-        assert low.output == ref
-        assert [e.kind for e in eng.td.audit].count("seal_kv") == 1
+    # preempt-and-resume byte-identity is asserted by the differential
+    # harness against solo references (with preemptions forced on every
+    # backend configuration); the tests below keep the edge cases.
 
     def test_preemption_mid_prompt_chunking(self, small_model):
         """Evict a request whose prompt tail is still being fed; the pending
