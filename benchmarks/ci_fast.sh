@@ -45,6 +45,25 @@ SHARED_MAPS=$(sed -n 's/.*prefix sharing: \([0-9]*\) shared-page maps.*/\1/p' /t
     || { echo "sharing did not reduce sealed bytes (${SEALED_ON:-0} vs $SEALED_OFF)"; exit 1; }
 echo "prefix-sharing smoke OK: $SHARED_MAPS shared maps, sealed ${SEALED_ON:-0}B < ${SEALED_OFF}B"
 
+# continuous-batching smoke: step-level admission with a per-step token
+# budget through the same pipeline; must report its budget/backfill line
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
+    --requests 4 --max-new-tokens 4 --prefill-buckets 8,16 --slots 2 \
+    --continuous-batching --step-tokens 18 --seed 3 --sample-temp 0.7 \
+    | tee /tmp/ci_cb_smoke.out
+grep -q "continuous batching" /tmp/ci_cb_smoke.out
+
+# two-plan smoke: prefill disaggregated onto a dedicated ComputePlan; the
+# KV handoff must be priced as sealed bytes across the plan boundary
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
+    --requests 4 --max-new-tokens 4 --prefill-buckets 8,16 --slots 2 \
+    --prefill-plan dedicated --seed 3 --sample-temp 0.7 \
+    | tee /tmp/ci_2plan_smoke.out
+HANDOFF_B=$(sed -n 's/.*sealed handoff: [0-9]* prefill->decode handoffs \/ \([0-9]*\) B.*/\1/p' /tmp/ci_2plan_smoke.out)
+[ -n "$HANDOFF_B" ] && [ "$HANDOFF_B" -gt 0 ] \
+    || { echo "two-plan run priced no sealed handoff bytes"; exit 1; }
+echo "two-phase smoke OK: ${HANDOFF_B}B sealed across the plan boundary"
+
 # mesh smoke: 2 forced host devices, the engine spanning a dp=2 mesh (batch
 # sharded, params FSDP-placed and gathered per step). Must print the
 # measured-vs-modeled link-tax line — the collective path is live, not

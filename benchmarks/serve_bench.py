@@ -37,6 +37,19 @@ wave. It asserts byte-identical outputs, strictly fewer physical pages
 written, and strictly lower sealed bytes with sharing on — the tentpole
 claim that a shared prefix is stored once and sealed at most once.
 
+The two-phase sweep serves a burst of long prompts arriving just ahead of
+short ones — the TTFT operating point §III-C's latency numbers care about —
+three ways: the v5 baseline (batched admission), step-level continuous
+batching (``continuous_batching=True``: chunked prefill interleaves into
+decode steps under a per-step token budget, short requests backfill budget
+a long head chunk cannot use), and disaggregated prefill
+(``prefill_plan="dedicated"``: prefill runs on its own ComputePlan and the
+finished KV rows cross the plan boundary as a sealed handoff priced in
+``ChannelStats``). It asserts byte-identical outputs across all three
+modes, a strictly lower TTFT p99 for continuous batching, and nonzero
+sealed handoff bytes for the two-plan mode, then writes every mode's
+serving metrics to ``BENCH_serve.json``.
+
 The mesh sweep (``--mesh dp=2`` or ``dp=2,tp=2``; relaunches itself with
 forced host devices when needed) serves the same seeded workload on a
 single device and on a mesh-spanning engine, asserts byte-identical
@@ -52,7 +65,9 @@ measured-vs-modeled link_tax delta for the paper's §V-D4 Insight 12.
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -298,6 +313,125 @@ def prefix_sharing_sweep(model, params, vocab, *, tee: str, max_slots: int,
           f"({a['sealed'] / max(b['sealed'], 1):.2f}x)")
 
 
+def two_phase_sweep(model, params, vocab, *, tee: str, json_out: str):
+    """Long-prompt burst served by the baseline engine, step-level
+    continuous batching, and the disaggregated two-plan engine.
+
+    The workload is the TTFT-hostile shape: a burst of long prompts (each a
+    full largest-bucket prefill, decoding for a long time) lands in the
+    middle of a stream of short requests. The baseline admits in strict
+    queue order, so the longs grab every freed slot and the trailing shorts
+    wait out the longs' entire decode — the TTFT tail is a short request
+    stuck behind the burst. Continuous batching charges live decode rows
+    against the per-step token budget, so while short traffic keeps the
+    engine busy the long head chunk does not fit and trailing shorts
+    backfill past it; the longs run once the short stream drains. The
+    asserted win is a strictly lower TTFT p99. The two-plan mode routes
+    prefill through a dedicated ComputePlan and hands finished KV rows to
+    the decode plan as a seal/restore pair — the sweep asserts that handoff
+    traffic lands in ``ChannelStats`` (nonzero sealed bytes across the plan
+    boundary). Outputs must be byte-identical across all three modes
+    (scheduling moves tokens in time, never changes them). Per-mode serving
+    metrics go to ``json_out``."""
+    max_slots, max_len, bucket = 4, 192, 128
+    # one long chunk + a couple of decode rows: with >= 3 live rows the
+    # long head is budget-blocked and shorts backfill past it
+    step_tokens = 130
+    rng = np.random.default_rng(31)
+    longs = [rng.integers(1, vocab, size=bucket).astype(np.int32)
+             for _ in range(2)]
+    shorts = [rng.integers(1, vocab, size=16).astype(np.int32)
+              for _ in range(16)]
+    print(f"\ntwo-phase sweep (tee={tee}): {len(longs)} long "
+          f"({bucket}-token) prompts bursting into a stream of "
+          f"{len(shorts)} short (16-token) ones, slots={max_slots}, "
+          f"step budget {step_tokens}")
+
+    def short_req(i):
+        # staggered decode lengths so the live-row count never collapses to
+        # zero in one step (which would let the long burst flood in early)
+        return GenerationRequest(
+            prompt=shorts[i], max_new_tokens=6 + (i % 8), priority=0,
+            params=SamplingParams(temperature=0.8, top_k=32, seed=100 + i))
+
+    def workload():
+        reqs = [short_req(i) for i in range(4)]
+        reqs += [GenerationRequest(
+                    prompt=p, max_new_tokens=32, priority=0,
+                    params=SamplingParams(temperature=0.8, top_k=32, seed=i))
+                 for i, p in enumerate(longs)]
+        reqs += [short_req(i) for i in range(4, len(shorts))]
+        return reqs
+
+    modes = {
+        "baseline": {},
+        "continuous": dict(continuous_batching=True,
+                           step_tokens=step_tokens),
+        "two-plan": dict(prefill_plan="dedicated"),
+    }
+    results, report = {}, {}
+    for label, extra in modes.items():
+        td = TrustDomain(tee)
+        eng = Engine(model, params, max_slots=max_slots, max_len=max_len,
+                     trust_domain=td, prefill_buckets=(16, bucket),
+                     kv_backend="paged", page_size=16, **extra)
+        # warmup wave: pays every (rows, bucket) prefill compile — and, in
+        # two-plan mode, the dedicated prefill plan's compile — outside the
+        # measured window.
+        for r in workload():
+            eng.submit(r)
+        eng.run(max_steps=100_000)
+        td.channel.stats.reset()
+        pages0 = getattr(eng.kv, "pages_written", 0)
+
+        t0 = time.monotonic()
+        reqs = [eng.submit(r) for r in workload()]
+        eng.run(max_steps=200_000)
+        wall = time.monotonic() - t0
+        assert all(r.finished for r in reqs)
+        stats = stats_from_requests(reqs)
+        ch = td.channel.stats
+        print(f"  {label:10s} {stats.total_tokens:5d} tok  {wall:6.2f}s  "
+              f"{stats.throughput_tps:8.1f} tok/s  "
+              f"TTFT p50 {stats.p50_ttft_s * 1e3:7.1f}ms "
+              f"p99 {stats.p99_ttft_s * 1e3:7.1f}ms  "
+              f"handoffs {stats.handoffs:2d} ({stats.handoff_bytes}B)  "
+              f"backfills {stats.backfilled_requests:2d}")
+        results[label] = dict(outputs=[r.output for r in reqs], stats=stats,
+                              ch=ch)
+        report[label] = dict(
+            tokens_per_s=round(stats.throughput_tps, 1),
+            ttft_p50_ms=round(stats.p50_ttft_s * 1e3, 2),
+            ttft_p99_ms=round(stats.p99_ttft_s * 1e3, 2),
+            sealed_bytes_per_request=ch.seal_bytes // max(len(reqs), 1),
+            pages_written=int(getattr(eng.kv, "pages_written", 0) - pages0),
+            crossings_per_token=round(
+                ch.crossings_per_token if ch.tokens_out else 0.0, 3),
+            handoffs=stats.handoffs, handoff_bytes=stats.handoff_bytes,
+            backfilled_requests=stats.backfilled_requests)
+
+    base, cb, tp2 = (results[k] for k in modes)
+    assert base["outputs"] == cb["outputs"] == tp2["outputs"], \
+        "scheduling mode changed decoded output"
+    assert cb["stats"].p99_ttft_s < base["stats"].p99_ttft_s, \
+        (f"continuous batching must cut TTFT p99 at the burst operating "
+         f"point ({cb['stats'].p99_ttft_s * 1e3:.1f}ms vs "
+         f"{base['stats'].p99_ttft_s * 1e3:.1f}ms)")
+    assert cb["stats"].backfilled_requests > 0, \
+        "the burst must actually exercise backfill admission"
+    assert tp2["stats"].handoffs > 0 and tp2["stats"].handoff_bytes > 0, \
+        "two-plan mode moved no sealed KV across the plan boundary"
+    assert tp2["ch"].seal_bytes >= tp2["stats"].handoff_bytes, \
+        "handoff bytes must be priced in ChannelStats sealed traffic"
+    Path(json_out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"two-phase sweep OK: identical tokens; TTFT p99 "
+          f"{base['stats'].p99_ttft_s * 1e3:.1f}ms -> "
+          f"{cb['stats'].p99_ttft_s * 1e3:.1f}ms under continuous batching "
+          f"({cb['stats'].backfilled_requests} backfills); two-plan handoff "
+          f"{tp2['stats'].handoff_bytes}B sealed across the boundary; "
+          f"metrics -> {json_out}")
+
+
 def mesh_sweep(model, params, vocab, *, mesh: str, tee: str, max_slots: int,
                requests: int):
     """Single-device vs mesh-spanning engine over one seeded workload:
@@ -371,6 +505,15 @@ def main():
                     choices=["both", "none"],
                     help="shared-prefix workload sweep: sharing off vs on "
                          "under on-demand allocation ('none' skips)")
+    ap.add_argument("--two-phase", default="both",
+                    choices=["both", "none"],
+                    help="long-prompt-burst sweep: baseline vs step-level "
+                         "continuous batching vs disaggregated two-plan "
+                         "serving, with BENCH_serve.json emission "
+                         "('none' skips)")
+    ap.add_argument("--json-out", default="BENCH_serve.json",
+                    help="where the two-phase sweep writes its per-mode "
+                         "serving metrics")
     ap.add_argument("--mesh", default=None, metavar="dp=N[,tp=M]",
                     help="also run the mesh sweep: single-device vs "
                          "mesh-spanning engine with measured-vs-modeled "
@@ -412,6 +555,10 @@ def main():
                              max_slots=args.max_slots,
                              requests=args.requests,
                              page_size=args.page_size)
+    if args.two_phase != "none":
+        two_phase_sweep(model, params, cfg.vocab_size,
+                        tee=args.tee if args.tee != "none" else "cgpu",
+                        json_out=args.json_out)
     if args.mesh is not None:
         mesh_sweep(model, params, cfg.vocab_size, mesh=args.mesh,
                    tee=args.tee, max_slots=args.max_slots,

@@ -5,7 +5,11 @@ of batched requests with continuous batching — the request-object API over
 a pluggable KV backend: bucketed batched prefill (no prompt truncation),
 priority admission with sealed-KV preemption (page-granular on the paged
 backend), per-request sampling, and streaming egress whose frame
-granularity is a per-request policy.
+granularity is a per-request policy. Serving is two-phase: prefill and
+decode are independently scheduled, either interleaved step-by-step on one
+plan (``continuous_batching=True``) or disaggregated onto a dedicated
+prefill ``ComputePlan`` whose KV handoff is a sealed-channel transfer
+(``prefill_plan="dedicated"``).
 
 API in one glance (``repro.runtime``)::
 
@@ -17,21 +21,36 @@ API in one glance (``repro.runtime``)::
                                                      #  paged = page-charged
                                                      #  admission + per-page
                                                      #  sealed preemption
-                    mesh="dp=4")                     # span a 4-device mesh
+                    mesh="dp=4",                     # span a 4-device mesh
                                                      #  (batch sharded, params
                                                      #  FSDP-placed, measured
                                                      #  collective traffic in
                                                      #  ChannelStats; omit for
                                                      #  one device — launcher
                                                      #  flag: serve.py --mesh)
+                    continuous_batching=True,        # step-level admission:
+                    step_tokens=160,                 #  per-step token budget
+                                                     #  split between prefill
+                                                     #  chunks + decode rows,
+                                                     #  shorts backfill budget
+                                                     #  a long head can't use
+                    prefill_plan="dedicated")        # or: disaggregate prefill
+                                                     #  onto its own plan; KV
+                                                     #  hands off to decode as
+                                                     #  a sealed transfer
+                                                     #  (mutually exclusive
+                                                     #  with the two above)
     req = engine.submit(GenerationRequest(
         prompt=tok.encode("confidential inference"),
         max_new_tokens=32,
         priority=5,                                  # preempts lower classes
         params=SamplingParams(temperature=0.8,       # 0.0 = greedy default
                               top_k=40, top_p=0.9,   # nucleus: 1.0 = off
-                              repetition_penalty=1.2,  # >1 discourages repeats
+                              repetition_penalty=1.2,  # >1, count-weighted:
+                                                     #  compounds per repeat
                               presence_penalty=0.5,  # flat per-seen-token tax
+                              logit_bias={50: 4.0},  # per-request additive
+                                                     #  bias (ban with -1e9)
                               seed=7),               # seeded => reproducible,
                                                      #  even across preemption
         frame=FramePolicy(coalesce=4),               # 4 tokens per encrypted
@@ -52,7 +71,8 @@ API in one glance (``repro.runtime``)::
 ``engine.stream(request)`` yields tokens as they cross the trust boundary
 (in bursts of ``coalesce``); ``engine.run()`` returns ``ServeStats`` with
 p50/mean/p99 latency + TTFT and the SLO counters (dropped_requests,
-aborted_requests, deadline_misses, preemptions, sealed_bytes).
+aborted_requests, deadline_misses, preemptions, sealed_bytes), plus the
+two-phase counters (handoffs, handoff_bytes, backfilled_requests).
 
 Reports the paper's user-perceived metrics (throughput, next-token latency,
 TTFT) plus the modeled overhead of running the same deployment on each TEE

@@ -24,6 +24,11 @@ a real all-gather on the serving mesh, not the closed-form estimate.
 workload a common K-token opening) turns on content-indexed shared prompt
 pages with copy-on-write and on-demand page allocation, and reports the
 shared-page map / CoW counters next to the sealed-traffic line.
+``--continuous-batching`` (optionally ``--step-tokens N``) interleaves
+prefill admissions into decode steps under a per-step token budget instead
+of filling a bucket first; ``--prefill-plan dedicated`` disaggregates
+prefill onto its own compute plan, and the sealed plan-to-plan KV handoff
+is reported (and priced in ChannelStats) on its own accounting line.
 """
 
 from __future__ import annotations
@@ -118,6 +123,17 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="dp=N[,tp=M]",
                     help="span the engine across a device mesh (forces host "
                          "devices if needed) and report measured link tax")
+    ap.add_argument("--continuous-batching", action="store_true",
+                    help="step-level continuous batching: prefill admissions "
+                         "interleave into decode steps under a per-step "
+                         "token budget instead of filling a bucket first")
+    ap.add_argument("--step-tokens", type=int, default=None,
+                    help="per-step token budget for --continuous-batching "
+                         "(default: largest prefill bucket + --slots)")
+    ap.add_argument("--prefill-plan", default=None, choices=["dedicated"],
+                    help="disaggregate prefill onto its own compute plan; "
+                         "finished KV rows hand off to the decode plan "
+                         "through a sealed channel priced in ChannelStats")
     args = ap.parse_args()
 
     if args.mesh is not None:
@@ -153,7 +169,10 @@ def main():
                     kv_backend=args.kv_backend, page_size=args.page_size,
                     num_pages=args.num_pages,
                     prefix_sharing=args.prefix_sharing,
-                    kv_alloc=args.kv_alloc, mesh=args.mesh)
+                    kv_alloc=args.kv_alloc, mesh=args.mesh,
+                    continuous_batching=args.continuous_batching,
+                    step_tokens=args.step_tokens,
+                    prefill_plan=args.prefill_plan)
     if args.mesh is not None:
         print(f"[mesh] engine spans {engine.plan.describe()}")
     rng = np.random.default_rng(0)
@@ -197,6 +216,14 @@ def main():
               f"{ch.seal_bytes} B out ({ch.seal_bytes_per_event:.0f} B/seal), "
               f"{ch.restore_events} restores / {ch.restore_bytes} B back "
               f"[kv={args.kv_backend}]")
+    if stats.handoffs:
+        print(f"sealed handoff: {stats.handoffs} prefill->decode handoffs / "
+              f"{stats.handoff_bytes} B across the plan boundary "
+              f"({stats.handoff_bytes // max(stats.handoffs, 1)} B/handoff)")
+    if args.continuous_batching:
+        print(f"continuous batching: step budget "
+              f"{engine._step_tokens} tokens, "
+              f"{stats.backfilled_requests} backfilled admissions")
     if getattr(engine.kv, "supports_sharing", False):
         print(f"prefix sharing: {stats.shared_pages} shared-page maps, "
               f"{stats.cow_copies} CoW copies, "

@@ -24,8 +24,8 @@ from repro.runtime.api import (FINISH_ABORTED, FINISH_DROPPED, FINISH_LENGTH,
 from repro.runtime.engine import Engine
 from repro.runtime.kvcache import (KVBackend, ShardedKVBackend,
                                    SlotDenseBackend, SlotState, make_backend)
-from repro.runtime.plan import (ComputePlan, ShardedPlan, SingleDevicePlan,
-                                parse_mesh)
+from repro.runtime.plan import (ComputePlan, PrefillOnlyPlan, ShardedPlan,
+                                SingleDevicePlan, parse_mesh)
 from repro.runtime.scheduler import (Request, Scheduler, ServeStats,
                                      stats_from_requests)
 
@@ -34,6 +34,7 @@ __all__ = [
     "FramePolicy", "GenerationRequest", "RequestOutput", "SamplingParams",
     "Engine", "KVBackend", "ShardedKVBackend", "SlotDenseBackend",
     "SlotState", "make_backend",
-    "ComputePlan", "ShardedPlan", "SingleDevicePlan", "parse_mesh",
+    "ComputePlan", "PrefillOnlyPlan", "ShardedPlan", "SingleDevicePlan",
+    "parse_mesh",
     "Request", "Scheduler", "ServeStats", "stats_from_requests",
 ]

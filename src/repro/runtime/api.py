@@ -25,7 +25,7 @@ Everything here is plain host-side data; the engine turns
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -61,6 +61,16 @@ class SamplingParams:
     free: like ``top_p``, the penalty math only compiles into the decode
     step when some live request actually uses it.
 
+    ``logit_bias`` maps token ids to additive logit offsets, applied to the
+    raw logits before the penalties every step (use a large negative value
+    like ``-100`` to ban a token, a positive one to promote it). The map is
+    static for the request's lifetime and rebuilt whenever its slot's
+    sampling row is set, so a sealed preemption/restore reproduces it
+    exactly. Like the penalties it only applies to sampled requests — a
+    greedy request with a bias is rejected at validation rather than
+    silently ignoring the map (the greedy fast path never consults sampling
+    state).
+
     ``seed`` makes the request reproducible: the engine derives one PRNG key
     from it and ``fold_in``s the output-token index at every step, so the
     same seeded request yields byte-identical tokens even across a sealed-KV
@@ -75,6 +85,7 @@ class SamplingParams:
     top_p: float = 1.0
     repetition_penalty: float = 1.0
     presence_penalty: float = 0.0
+    logit_bias: Optional[Dict[int, float]] = None
     seed: Optional[int] = None
 
     def validate(self, vocab_size: int) -> None:
@@ -98,6 +109,20 @@ class SamplingParams:
         if not np.isfinite(self.presence_penalty):
             raise ValueError(f"presence_penalty must be finite, got "
                              f"{self.presence_penalty}; 0.0 turns it off")
+        if self.logit_bias:
+            if self.is_greedy:
+                raise ValueError(
+                    "logit_bias requires temperature > 0: the greedy path "
+                    "takes argmax over the raw logits and would silently "
+                    "ignore the bias map")
+            for tok, val in self.logit_bias.items():
+                if not (0 <= int(tok) < vocab_size):
+                    raise ValueError(
+                        f"logit_bias token id {tok} out of range "
+                        f"[0, {vocab_size})")
+                if not np.isfinite(val):
+                    raise ValueError(
+                        f"logit_bias[{tok}] must be finite, got {val}")
 
     @property
     def is_greedy(self) -> bool:

@@ -1,14 +1,46 @@
-"""Inference engine v5: one engine spans a mesh behind a ComputePlan seam.
+"""Inference engine v6: prefill and decode are independently scheduled
+phases, optionally on separate ComputePlans.
 
 Dataflow per paper Fig 2's protected stack:
   prompt --(encrypted bounce buffer)--> bucketed batched prefill(slots)
   --> batched decode loop --> sampled tokens --(encrypted frames through the
   bounce buffer, 1..N tokens each per the request's FramePolicy)--> client.
 
+**Two-phase serving.** Generation has two phases with opposite shapes —
+prefill is one wide compute-bound call per request, decode is a thin
+latency-bound step over every live row — and v6 schedules them
+independently instead of letting a burst of long prompts stall every
+in-flight decode (the dominant TTFT failure mode at load):
+
+  * **Step-level continuous batching** (``Engine(continuous_batching=True)``,
+    single plan): admission no longer fills a whole prefill bucket group
+    before decode resumes. Each engine step has a token budget
+    (``step_tokens``, default ``largest bucket + max_slots``) split between
+    live decode rows (1 each) and prefill admissions (their bucket width);
+    the slack/priority scheduler orders the prefill queue, and when the
+    head's bucket doesn't fit the remaining budget a smaller queued request
+    *backfills* the leftover (``Request.backfilled``) while the head keeps
+    first claim on the next step's fresh budget. Chunked prompt tails
+    interleave into decode steps exactly as before. Decoded bytes are
+    unchanged — only admission timing moves.
+
+  * **Disaggregated prefill** (``Engine(prefill_plan=...)``): prompts
+    prefill on a dedicated :class:`~repro.runtime.plan.PrefillOnlyPlan`
+    stream, dispatched asynchronously (jax's async dispatch overlaps it
+    with the current decode step) and consumed one step later. The finished
+    KV rows cross from the prefill plan to the decode plan through a
+    **sealed handoff** — a ``seal_tree``/``unseal_tree`` pair under the
+    request's ``kvhandoff/{stream}`` nonce namespace, accounted in
+    ``TrustDomain``/``ChannelStats`` sealed bytes exactly like a preemption
+    crossing. That prices the disaggregation boundary the way the paper's
+    Insight 9-12 cost model prices every other data-movement boundary:
+    per-request ``n_handoffs``/``handoff_bytes`` roll up into
+    ``ServeStats.handoff_bytes``.
+
 The serving API is the request-object model in :mod:`repro.runtime.api`
-(per-request sampling — temperature/top-k/top-p and now repetition/presence
-penalties — coalesced egress frames, SLO admission). Underneath sit three
-pluggable layers:
+(per-request sampling — temperature/top-k/top-p, repetition/presence
+penalties, logit-bias maps — coalesced egress frames, SLO admission).
+Underneath sit three pluggable layers:
 
   * **ComputePlan** (:mod:`repro.runtime.plan`) — every device-facing
     concern (param placement, the jitted prefill/decode callables,
@@ -61,14 +93,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.confidential import TrustDomain
-from repro.core.sealing import IntegrityError, sealed_nbytes
+from repro.core.sealing import (IntegrityError, seal_tree, sealed_nbytes,
+                                unseal_tree)
 from repro.models.model import Model
 from repro.runtime import sampling
 from repro.runtime.api import (FINISH_ABORTED, GenerationRequest,
                                RequestOutput)
 from repro.runtime.kvcache import (KVBackend, SlotState, make_backend,
                                    next_pow2, tail_blob_names)
-from repro.runtime.plan import ComputePlan, ShardedPlan, SingleDevicePlan
+from repro.runtime.plan import (ComputePlan, PrefillOnlyPlan, ShardedPlan,
+                                SingleDevicePlan)
 from repro.runtime.scheduler import Request, Scheduler, ServeStats
 
 Params = Any
@@ -79,6 +113,20 @@ class PreemptedRequest:
     """A sealed-out request waiting for a slot: KV pages as ciphertext only."""
     sealed: Dict[str, Any]
     req: Request
+
+
+@dataclasses.dataclass
+class InflightPrefill:
+    """A request prefilling on the dedicated prefill plan: the jitted call
+    was dispatched at admission (jax's async dispatch overlaps it with this
+    step's decode) but its KV rows have not yet crossed to the decode plan.
+    The slot is already reserved; :meth:`Engine._handoff_ready` consumes it
+    at the next step through the sealed plan-to-plan handoff."""
+    req: Request
+    slot: int
+    bucket: int
+    logits: jax.Array
+    cache: Any
 
 
 @dataclasses.dataclass
@@ -132,7 +180,10 @@ class Engine:
                  kv_alloc: Optional[str] = None,
                  mesh: Optional[str] = None,
                  plan: Optional[ComputePlan] = None,
-                 admission_order: str = "slack"):
+                 admission_order: str = "slack",
+                 continuous_batching: bool = False,
+                 step_tokens: Optional[int] = None,
+                 prefill_plan: Optional[Any] = None):
         """``prefill_buckets`` supersedes the v1 single static ``prefill_len``
         (kept as the default one-bucket config for compatibility). Buckets
         should be powers of two; each distinct (rows, bucket) prefill shape
@@ -165,7 +216,26 @@ class Engine:
 
         ``admission_order``: ``"slack"`` (default) serves
         tightest-deadline-first with priority tiebreak; ``"priority"`` is
-        the v4 priority-only order."""
+        the v4 priority-only order.
+
+        ``continuous_batching`` replaces fill-a-bucket-then-decode admission
+        with step-level interleaving: each step's token budget
+        (``step_tokens``, default ``largest bucket + max_slots`` so a fresh
+        step with a free slot can always admit the queue head) splits
+        between live decode rows and prefill admissions, with queue-ordered
+        backfill when the head's bucket doesn't fit the remainder.
+
+        ``prefill_plan`` disaggregates: prompts prefill on their own plan
+        (pass a ready :class:`~repro.runtime.plan.ComputePlan`, or
+        ``"dedicated"`` for a fresh
+        :class:`~repro.runtime.plan.PrefillOnlyPlan`) and the finished KV
+        rows hand off to the decode plan through a sealed seal/restore pair
+        priced in ``ChannelStats``. Mutually exclusive with
+        ``continuous_batching`` — a dedicated prefill stream already
+        decouples prefill from the decode step, so there is no shared
+        per-step budget to split. Decoded outputs are byte-identical under
+        every mode — admission timing and boundary accounting are all that
+        move."""
         self.model = model
         if plan is not None and mesh is not None:
             raise ValueError("pass mesh= or plan=, not both")
@@ -211,6 +281,45 @@ class Engine:
         self._hist_dev = None
         self._hist_dev_version = -1
         self._hist_pending: List[Tuple[int, int]] = []
+        # device mirror of slots.bias — version-triggered only (bias rows
+        # are static per request; there is no per-token increment stream)
+        self._bias_dev = None
+        self._bias_dev_version = -1
+        # -- two-phase serving --------------------------------------------
+        if continuous_batching and prefill_plan is not None:
+            raise ValueError(
+                "continuous_batching applies to single-plan engines; a "
+                "dedicated prefill_plan already decouples prefill from the "
+                "decode step")
+        if step_tokens is not None and not continuous_batching:
+            raise ValueError(
+                "step_tokens only makes sense with continuous_batching=True")
+        if isinstance(prefill_plan, str):
+            if prefill_plan != "dedicated":
+                raise ValueError(
+                    f"prefill_plan must be a ComputePlan or 'dedicated', "
+                    f"got {prefill_plan!r}")
+            prefill_plan = PrefillOnlyPlan(model)
+        self.prefill_plan = prefill_plan
+        if prefill_plan is not None:
+            self.prefill_params = prefill_plan.place_params(params)
+            self._prefill_stream_fn = prefill_plan.compile_prefill()
+        else:
+            self.prefill_params = None
+            self._prefill_stream_fn = None
+        if continuous_batching:
+            if step_tokens is None:
+                step_tokens = self.prefill_buckets[-1] + max_slots
+            if step_tokens < self.prefill_buckets[-1]:
+                raise ValueError(
+                    f"step_tokens={step_tokens} can never admit the largest "
+                    f"prefill bucket ({self.prefill_buckets[-1]}) — the "
+                    f"queue head would starve")
+        self._continuous = continuous_batching or prefill_plan is not None
+        self._step_tokens = step_tokens if continuous_batching else None
+        self._budget_left: Optional[int] = None
+        self._inflight: Dict[int, InflightPrefill] = {}
+        self.backfills = 0   # out-of-order budget-backfill admissions
 
     @property
     def slots(self) -> SlotState:
@@ -336,7 +445,8 @@ class Engine:
         else:
             self.slots.set_sampling(slot, p.temperature, p.top_k, p.top_p,
                                     self._base_key(req),
-                                    p.repetition_penalty, p.presence_penalty)
+                                    p.repetition_penalty, p.presence_penalty,
+                                    logit_bias=p.logit_bias)
             # penalty history follows the request, not the cache: rebuilt
             # from its output list (empty at first admission; the generated
             # prefix after a sealed restore), so a seeded penalized request
@@ -366,13 +476,19 @@ class Engine:
             self._hist_pending.clear()
         else:
             hist = self._hist_device()
+        if not s.any_bias:
+            bias = None
+            self._bias_dev = None
+            self._bias_dev_version = -1
+        else:
+            bias = self._bias_device()
         if not s.any_sampled:
             return None, 0
         top_p = jnp.asarray(s.top_p) if s.any_top_p else None
         state = sampling.SamplingState(
             jnp.asarray(s.temp), jnp.asarray(s.top_k), jnp.asarray(s.key),
             jnp.asarray(steps), top_p=top_p, rep_pen=rep, presence=pres,
-            hist=hist)
+            hist=hist, bias=bias)
         return state, self._static_kmax()
 
     def _hist_device(self):
@@ -394,6 +510,17 @@ class Engine:
             self._hist_dev = self._hist_dev.at[rows, toks].add(1)
             self._hist_pending.clear()
         return self._hist_dev
+
+    def _bias_device(self):
+        """Device copy of the logit-bias rows. Unlike ``hist`` there is no
+        incremental stream — bias is static per request — so a version check
+        alone decides when the matrix re-uploads (admission/release of a
+        biased request bumps ``bias_version``)."""
+        if (self._bias_dev is None
+                or self._bias_dev_version != self.slots.bias_version):
+            self._bias_dev = jnp.asarray(self.slots.bias)
+            self._bias_dev_version = self.slots.bias_version
+        return self._bias_dev
 
     # -- egress ----------------------------------------------------------------
     def _flush_egress(self, req: Request) -> None:
@@ -561,18 +688,26 @@ class Engine:
         self.kv.insert_prefill(prefilled, slots, bucket,
                                page_keys=group_keys)
         for i, req in enumerate(group):
-            slot = slots[i]
-            self.scheduler.start(slot, req)
-            self._active_mask[slot] = True
-            self._set_slot_sampling(slot, req)
-            if len(req.prompt) > bucket:
-                # chunked prefill: the tail is fed through the decode loop,
-                # one token per step, before any sampling counts as output.
-                req.pending_input = [int(t) for t in req.prompt[bucket:]]
-                self._last_token[slot] = 0   # unused until the tail drains
-            else:
-                self._emit_token(slot, int(first_np[i]))
+            self._start_decode(slots[i], req, int(first_np[i]), bucket)
         return len(group)
+
+    def _start_decode(self, slot: int, req: Request, first_tok: int,
+                      bucket: int) -> None:
+        """Common post-prefill setup: the request enters the decode phase —
+        it joins the scheduler's running set, its sampling row is set, and
+        either its chunked prompt tail starts feeding through decode steps
+        or its first sampled token is emitted."""
+        self.scheduler.start(slot, req)
+        req.phase = "decode"
+        self._active_mask[slot] = True
+        self._set_slot_sampling(slot, req)
+        if len(req.prompt) > bucket:
+            # chunked prefill: the tail is fed through the decode loop,
+            # one token per step, before any sampling counts as output.
+            req.pending_input = [int(t) for t in req.prompt[bucket:]]
+            self._last_token[slot] = 0   # unused until the tail drains
+        else:
+            self._emit_token(slot, first_tok)
 
     def _first_tokens(self, logits, group: List[Request], rows: int) -> np.ndarray:
         """Sample each group member's first token from its prefill logits
@@ -585,18 +720,142 @@ class Engine:
         top_k = np.zeros(rows, np.int32)
         top_p = np.ones(rows, np.float32)
         key = np.zeros((rows, 2), np.uint32)
+        bias = None
         for i, req in enumerate(group):
             p = req.gen.params
             if not p.is_greedy:
                 temp[i], top_k[i], top_p[i] = p.temperature, p.top_k, p.top_p
                 key[i] = self._base_key(req)
+            if p.logit_bias:
+                if bias is None:
+                    bias = np.zeros((rows, self._vocab), np.float32)
+                for tok, val in p.logit_bias.items():
+                    bias[i, int(tok)] = np.float32(val)
         kmax = int(top_k.max())
         state = sampling.SamplingState(
             jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(key),
             jnp.zeros(rows, jnp.int32),
-            top_p=jnp.asarray(top_p) if (top_p < 1.0).any() else None)
+            top_p=jnp.asarray(top_p) if (top_p < 1.0).any() else None,
+            bias=jnp.asarray(bias) if bias is not None else None)
         return np.asarray(sampling.sample(
             logits, state, kmax=min(next_pow2(kmax), self._vocab) if kmax else 0))
+
+    # -- two-phase admission (continuous batching / disaggregated prefill) ----
+    def _admit_one(self, req: Request, bucket: int) -> None:
+        """Admit a single request (rows=1 prefill, left-padded into its
+        bucket exactly like a batch of one — the differential harness pins
+        rows=1 and rows=N prefills bitwise identical). On a disaggregated
+        engine the prefill is *dispatched* on the dedicated plan and parked
+        in ``_inflight``; the sealed handoff consumes it next step."""
+        self._charge_budget(req)
+        slot = self.kv.acquire(req.rid, self._admit_need(req))
+        assert slot is not None, "admission raced KV accounting"
+        tokens = np.zeros((1, bucket), np.int32)
+        chunk = req.prompt[:bucket]
+        tokens[0, bucket - len(chunk):] = chunk   # left-pad short prompts
+        if self._prefill_stream_fn is not None:
+            # jax dispatches this call asynchronously: the decode step the
+            # engine runs next overlaps with it, and _handoff_ready blocks
+            # on the result only when it crosses to the decode plan.
+            fresh = self.model.init_cache(1, self.max_len)
+            logits, cache = self._prefill_stream_fn(
+                self.prefill_params, jnp.asarray(tokens), fresh)
+            req.phase = "prefill"
+            self._inflight[slot] = InflightPrefill(req, slot, bucket,
+                                                   logits, cache)
+            return
+        fresh = self.kv.fresh_prefill_cache(1)
+        logits, prefilled = self._prefill_fn(self.params, jnp.asarray(tokens),
+                                             fresh)
+        first_np = self._first_tokens(logits, [req], 1)
+        keys = [req.page_keys] if self.kv.supports_sharing else None
+        self.kv.insert_prefill(prefilled, [slot], bucket, page_keys=keys)
+        self._start_decode(slot, req, int(first_np[0]), bucket)
+
+    def _admit_continuous(self) -> int:
+        """Step-level admission: pop waiting requests one at a time into
+        free slots while the step-token budget (single-plan mode) and KV
+        capacity allow. When the head's bucket doesn't fit the remaining
+        budget, the best-ordered queued request that *does* fit backfills
+        the leftover — the head keeps first claim on the next step's fresh
+        budget, so nothing starves. Mirrors ``_admit_batch``'s group-mate
+        guard: admissions beyond the first must outrank every sealed-out
+        request, or they would jump the restore queue."""
+        admitted = 0
+        best_sealed = max((p.req.priority for p in self._preempted),
+                          default=None)
+        while self.slots.free:
+            head = self.scheduler.peek_waiting(self._admit_filter)
+            if head is None:
+                break
+            if (admitted and best_sealed is not None
+                    and head.priority <= best_sealed):
+                break
+            bucket = self._bucket_for(len(head.prompt))
+            fits_budget = (self._budget_left is None
+                           or bucket <= self._budget_left)
+            if fits_budget and self.kv.can_admit(self._admit_need(head)):
+                req = self.scheduler.next_waiting(self._admit_filter)
+                self._admit_one(req, bucket)
+                if self._budget_left is not None:
+                    self._budget_left -= bucket
+                admitted += 1
+                continue
+            if self._budget_left is None:
+                break   # KV-blocked without a budget: nothing to backfill on
+
+            def fits(r, head_rid=head.rid):
+                if r.rid == head_rid:
+                    return False   # the head keeps next step's fresh budget
+                if best_sealed is not None and r.priority <= best_sealed:
+                    return False   # must not jump the restore queue
+                if self._buckets and not self._admissible(r):
+                    return False
+                b = self._bucket_for(len(r.prompt))
+                return (b <= self._budget_left
+                        and self.kv.can_admit(self._admit_need(r)))
+
+            cand = self.scheduler.next_backfill(fits)
+            if cand is None:
+                break
+            cand.backfilled = True
+            self.backfills += 1
+            b = self._bucket_for(len(cand.prompt))
+            self._admit_one(cand, b)
+            self._budget_left -= b
+            admitted += 1
+        return admitted
+
+    def _handoff_ready(self) -> None:
+        """Consume prefill-stream work dispatched at the previous step: each
+        finished request's KV rows cross from the prefill plan to the decode
+        plan as a seal/unseal pair — the disaggregation boundary, accounted
+        in ``ChannelStats`` sealed bytes exactly like a preemption — and the
+        request enters the decode phase."""
+        for slot in sorted(self._inflight):
+            self._complete_handoff(self._inflight.pop(slot))
+
+    def _complete_handoff(self, inf: InflightPrefill) -> None:
+        req, slot, bucket = inf.req, inf.slot, inf.bucket
+        # one handoff per stream, ever (restores after preemption use the
+        # kvslot/ namespace), so the stream id alone keeps nonces fresh.
+        prefix = f"kvhandoff/{req.stream_id}"
+        sealed = seal_tree(self.td.sealing_key, inf.cache, prefix=prefix)
+        nb = sealed_nbytes(sealed)
+        req.n_handoffs += 1
+        req.handoff_bytes += nb
+        self.td.record_seal(nb, len(sealed),
+                            f"handoff slot={slot} rid={req.rid} "
+                            f"stream={req.stream_id} bucket={bucket}")
+        restored = unseal_tree(self.td.sealing_key, sealed,
+                               self.model.abstract_cache(1, self.max_len),
+                               prefix=prefix)
+        self.td.record_restore(nb, len(sealed),
+                               f"handoff slot={slot} rid={req.rid}")
+        keys = [req.page_keys] if self.kv.supports_sharing else None
+        self.kv.insert_prefill(restored, [slot], bucket, page_keys=keys)
+        first_np = self._first_tokens(inf.logits, [req], 1)
+        self._start_decode(slot, req, int(first_np[0]), bucket)
 
     def _preempt_for(self, incoming: Request) -> bool:
         """Free capacity for ``incoming`` by preempting the lowest-priority
@@ -704,7 +963,8 @@ class Engine:
                         self.restore_slot(best.sealed, best.req)
                         continue
             if (self.scheduler.queue and self.slots.free
-                    and self._admit_batch() > 0):
+                    and (self._admit_continuous() if self._continuous
+                         else self._admit_batch()) > 0):
                 continue
             # preemption is a PRIORITY right, independent of queue order:
             # the strongest waiting request may evict strictly weaker
@@ -772,11 +1032,22 @@ class Engine:
 
     # -- serving loop ----------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admission/restoration/preemption, then one
-        batched decode step. Returns number of *output* tokens produced
-        (prompt-chunk feeding steps count zero)."""
+        """One engine iteration: prefill-stream handoffs, then
+        admission/restoration/preemption, then one batched decode step.
+        Returns number of *output* tokens produced (prompt-chunk feeding
+        steps count zero)."""
+        if self._inflight:
+            self._handoff_ready()
+        if self._step_tokens is not None:
+            # fresh per-step budget: every live decode row (including slots
+            # still feeding a chunked prompt tail) costs 1; admissions then
+            # charge their prefill bucket against the remainder.
+            live_now = sum(1 for s in self.slots.active
+                           if s not in self._paused)
+            self._budget_left = max(0, self._step_tokens - live_now)
         self._admit_ready()
-        live = [s for s in self.slots.active if s not in self._paused]
+        live = [s for s in self.slots.active
+                if s not in self._paused and s not in self._inflight]
         if live and self.kv.on_demand:
             live = self._grant_step_pages(live)
         if not live:
@@ -814,7 +1085,8 @@ class Engine:
 
     @property
     def idle(self) -> bool:
-        return self.scheduler.idle and not self._preempted
+        return (self.scheduler.idle and not self._preempted
+                and not self._inflight)
 
     def run(self, max_steps: int = 10_000) -> ServeStats:
         steps = 0

@@ -159,6 +159,13 @@ class SlotState:
     vocab: int = 0
     hist: Optional[np.ndarray] = None
     hist_version: int = 0
+    # [slots, vocab] f32 additive logit-bias rows, lazily allocated like
+    # ``hist`` on the first ``set_sampling(..., logit_bias=...)``. Bias is
+    # static per request (no per-token stream), so the device mirror is
+    # version-triggered only: ``bias_version`` bumps whenever any row
+    # changes and the engine re-uploads the whole matrix then.
+    bias: Optional[np.ndarray] = None
+    bias_version: int = 0
 
     @classmethod
     def create(cls, max_slots: int, vocab: int = 0) -> "SlotState":
@@ -186,7 +193,8 @@ class SlotState:
 
     def set_sampling(self, slot: int, temp: float, top_k: int, top_p: float,
                      key: np.ndarray, rep_pen: float = 1.0,
-                     presence: float = 0.0) -> None:
+                     presence: float = 0.0,
+                     logit_bias: Optional[Dict[int, float]] = None) -> None:
         self.temp[slot] = temp
         self.top_k[slot] = top_k
         self.top_p[slot] = top_p
@@ -195,6 +203,23 @@ class SlotState:
         self.presence[slot] = presence
         if self.penalized(slot) and self.hist is None and self.vocab > 0:
             self.hist = np.zeros((len(self.temp), self.vocab), np.int32)
+        self._set_bias_row(slot, logit_bias)
+
+    def _set_bias_row(self, slot: int,
+                      logit_bias: Optional[Dict[int, float]]) -> None:
+        """Densify a request's sparse bias map into its slot row. A request
+        without a map keeps (or resets to) the zero row; the matrix itself
+        only exists once some request has biased."""
+        if logit_bias:
+            if self.bias is None:
+                self.bias = np.zeros((len(self.temp), self.vocab), np.float32)
+            self.bias[slot] = 0.0
+            for tok, val in logit_bias.items():
+                self.bias[slot, int(tok)] = np.float32(val)
+            self.bias_version += 1
+        elif self.bias is not None and self.bias[slot].any():
+            self.bias[slot] = 0.0
+            self.bias_version += 1
 
     def penalized(self, slot: int) -> bool:
         """Does this slot's request use a non-neutral penalty? Only such
@@ -214,6 +239,9 @@ class SlotState:
             # must not force a full [slots, vocab] mirror re-upload.
             self.hist[slot] = 0
             self.hist_version += 1
+        if self.bias is not None and self.bias[slot].any():
+            self.bias[slot] = 0.0
+            self.bias_version += 1
 
     def note_token(self, slot: int, token: int) -> bool:
         """Count one generated token into the penalty history — only for a
@@ -259,6 +287,10 @@ class SlotState:
     @property
     def any_presence(self) -> bool:
         return bool(((self.temp > 0) & (self.presence != 0.0)).any())
+
+    @property
+    def any_bias(self) -> bool:
+        return self.bias is not None and bool(self.bias.any())
 
     @property
     def max_top_k(self) -> int:

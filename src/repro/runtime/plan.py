@@ -6,10 +6,18 @@ accounting for what the placement costs in cross-device traffic. The engine
 and the KV backends speak to the plan; the plan decides whether that compute
 lands on one device or spans a mesh.
 
-Two plans:
+Three plans:
 
   * :class:`SingleDevicePlan` — today's behavior, bit for bit: every
     ``compile_*`` is a plain ``jax.jit``, every ``place_*`` is the identity.
+
+  * :class:`PrefillOnlyPlan` — the dedicated prefill stream of a
+    disaggregated engine (``Engine(prefill_plan=...)``): it compiles the
+    prefill callable only and refuses ``compile_decode`` outright. Finished
+    prefill KV rows never stay on this plan — they cross to the decode
+    plan through the engine's sealed handoff (a seal/restore pair priced
+    in ``ChannelStats`` exactly like a preemption), so the plan boundary
+    is a *trust* boundary the paper's Insight 9–12 cost model can account.
 
   * :class:`ShardedPlan` — one engine spans a ``jax`` mesh built from
     :func:`repro.launch.mesh.make_host_mesh` (axes ``("data", "model")``,
@@ -144,6 +152,24 @@ class ComputePlan:
 
 class SingleDevicePlan(ComputePlan):
     """Exactly the pre-plan engine: plain ``jax.jit``, no placement."""
+
+
+class PrefillOnlyPlan(ComputePlan):
+    """A plan compiled for the prefill phase only — the prefill half of a
+    disaggregated ``Engine(prefill_plan=...)``. Prompts prefill here
+    (asynchronously, via jax's dispatch queue) while the decode plan keeps
+    stepping; the finished KV rows leave through the engine's sealed
+    plan-to-plan handoff rather than by sharing device state, so this plan
+    deliberately has no decode surface at all."""
+
+    name = "prefill-only"
+
+    def compile_decode(self, fn, *, donate_argnums=(), static_argnums=()):
+        raise RuntimeError(
+            "PrefillOnlyPlan compiles no decode step: it is the dedicated "
+            "prefill stream of a disaggregated engine, and finished KV rows "
+            "hand off to the decode plan through the sealed channel "
+            "(Engine(prefill_plan=...))")
 
 
 class ShardedPlan(ComputePlan):

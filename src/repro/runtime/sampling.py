@@ -15,13 +15,22 @@ must be < vocab_size — a request asking for a full-vocab "restriction"
 should say ``top_k=0``; anything >= vocab is an error, not a silent clamp.
 
 Repetition and presence penalties are ``[slots]`` rows like top-p:
-``rep_pen`` divides (positive) / multiplies (negative) the raw logits of
-already-generated tokens (CTRL-style), ``presence`` subtracts a flat amount
-from them; both read the per-slot generated-token counts in ``hist`` and
-both are static-``None`` gated so their math only compiles when some slot
-uses them. History follows the *request* (rebuilt from its output list
-after a sealed restore), so seeded penalized requests reproduce
-byte-identically across preemption.
+``rep_pen`` is *frequency-weighted* CTRL — each occurrence compounds, so a
+token generated ``c`` times has its positive logits divided (negative
+multiplied) by ``rep_pen ** c`` (``c = 0`` gives the exact neutral 1.0, so
+no seen-mask is needed); ``presence`` subtracts a flat amount from every
+already-generated token regardless of count. Both read the per-slot
+generated-token counts in ``hist`` and both are static-``None`` gated so
+their math only compiles when some slot uses them. History follows the
+*request* (rebuilt from its output list after a sealed restore), so seeded
+penalized requests reproduce byte-identically across preemption.
+
+Per-request logit-bias maps ride the same machinery: ``bias`` is a
+``[slots, vocab]`` additive row matrix (sparse maps densified host-side,
+see ``SlotState``), added to the raw logits before the penalties, and
+static-``None`` gated like them. Bias is static per request — rebuilt from
+``SamplingParams.logit_bias`` whenever the slot's sampling row is set, so a
+sealed restore reproduces it exactly like the penalty history.
 
 Top-p (nucleus) keeps the smallest set of tokens whose cumulative
 probability reaches ``top_p`` (the first token is always kept). It needs a
@@ -62,6 +71,7 @@ class SamplingState(NamedTuple):
     rep_pen: Optional[jax.Array] = None   # [b] f32; None/1.0 = off
     presence: Optional[jax.Array] = None  # [b] f32; None/0.0 = off
     hist: Optional[jax.Array] = None      # [b, v] i32 generated-token counts
+    bias: Optional[jax.Array] = None      # [b, v] f32 additive logit bias
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -123,18 +133,24 @@ def sample(logits: jax.Array, state: SamplingState, *, kmax: int = 0) -> jax.Arr
     """
     greedy_toks = greedy(logits)
     logits_f = logits.astype(jnp.float32)
+    # per-request logit bias lands first: it shifts the raw distribution the
+    # penalties then act on, matching the usual "bias, then penalize" order.
+    if state.bias is not None:
+        logits_f = logits_f + state.bias
     # repetition / presence penalties act on the raw logits (before the
     # temperature divide) over tokens this sequence has already GENERATED
     # (``hist`` counts; the prompt is not penalized). Both are per-slot rows
     # and both no-op at their neutral values, so a fresh slot inherits
     # nothing from a released one.
     if state.rep_pen is not None:
-        seen = state.hist > 0
-        rp = state.rep_pen[:, None]
-        # CTRL-style: shrink positive logits by 1/rp, grow the magnitude of
-        # negative ones by rp — both push seen tokens toward less likely.
-        adj = jnp.where(logits_f > 0, logits_f / rp, logits_f * rp)
-        logits_f = jnp.where(seen, adj, logits_f)
+        # frequency-weighted CTRL: each prior occurrence compounds, so a
+        # count of c applies rep_pen**c (c=0 gives exactly 1.0 — no seen
+        # mask needed). The clip guards rp**c overflow for long sequences.
+        rp_pow = jnp.clip(
+            jnp.power(state.rep_pen[:, None], state.hist.astype(jnp.float32)),
+            1e-30, 1e30)
+        logits_f = jnp.where(logits_f > 0, logits_f / rp_pow,
+                             logits_f * rp_pow)
     if state.presence is not None:
         logits_f = logits_f - state.presence[:, None] * (state.hist > 0)
     # guard the divide for greedy rows (their sampled value is discarded;

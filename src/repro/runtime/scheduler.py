@@ -34,7 +34,17 @@ SLO machinery:
     requests for engine-side termination (seal/discard, not restore);
   * ``peek_waiting``/``next_waiting`` accept an admissibility predicate so
     the engine's per-priority token-rate budgets can hold a class back
-    without starving the others;
+    without starving the others — and so a continuous-batching engine can
+    *backfill*: when the head's prefill bucket doesn't fit the remaining
+    step-token budget, :meth:`Scheduler.next_backfill` hands out the best
+    queued request that does fit, keeping the step saturated without
+    reordering anything the head could still claim next step;
+  * every :class:`Request` carries a coarse serving ``phase``
+    (queued → prefill → decode → done): under disaggregated serving,
+    prefill and decode are independently scheduled phases and a request in
+    ``phase="prefill"`` is in flight on the prefill plan, its KV not yet
+    handed off to the decode plan (``n_handoffs``/``handoff_bytes`` price
+    that sealed crossing per request);
   * :class:`ServeStats` reports p50 alongside mean/p99 (percentiles guarded
     for <2 samples) plus dropped/deadline-miss/preemption counters, making
     the preemption-vs-drop trade-off measurable.
@@ -85,6 +95,12 @@ class Request:
     ingress_messages: int = 0
     egress_frames: int = 0
     egress_tokens: int = 0
+    # -- two-phase serving (continuous batching / disaggregated prefill) ----
+    phase: str = "queued"  # "queued" | "prefill" | "decode" | "done"
+    n_handoffs: int = 0    # sealed prefill->decode plan handoffs
+    handoff_bytes: int = 0  # ciphertext bytes those handoffs moved
+    backfilled: bool = False  # admitted out of queue order into leftover
+                              # step-token budget (continuous batching)
 
     # -- mirrors of the generation request (single source of truth: gen) ----
     @property
@@ -171,6 +187,9 @@ class ServeStats:
     deadline_misses: int = 0       # served, but finished after deadline_s
     preemptions: int = 0           # sealed-KV evictions among served requests
     sealed_bytes: int = 0          # ciphertext bytes those evictions moved
+    handoffs: int = 0              # sealed prefill->decode plan handoffs
+    handoff_bytes: int = 0         # ciphertext bytes those handoffs moved
+    backfilled_requests: int = 0   # admitted via continuous-batching backfill
     shared_pages: int = 0          # page mappings served by the prefix index
     cow_copies: int = 0            # shared tail pages copied on first write
     wall_s: float = 0.0
@@ -304,6 +323,16 @@ class Scheduler:
                 return entry[2]
         return None
 
+    def next_backfill(self, fits: AdmitPredicate) -> Optional[Request]:
+        """Pop the best-ordered waiting request satisfying ``fits`` — the
+        continuous-batching backfill path. Identical mechanics to
+        :meth:`next_waiting` with a predicate; named separately because the
+        *caller's* contract differs: the predicate excludes the queue head
+        (which keeps first claim on next step's fresh budget), so anything
+        returned here is an out-of-order admission the caller must flag
+        (``Request.backfilled``)."""
+        return self.next_waiting(fits)
+
     def start(self, slot: int, req: Request) -> None:
         self.running[slot] = req
 
@@ -320,6 +349,7 @@ class Scheduler:
     def finish(self, slot: int) -> Request:
         req = self.running.pop(slot)
         req.t_done = time.monotonic()
+        req.phase = "done"
         if not req.finish_reason:
             req.finish_reason = (
                 FINISH_STOP if (req.eos_id is not None and req.output
@@ -333,6 +363,7 @@ class Scheduler:
         request being aborted instead of restored). The caller sets
         ``finish_reason`` first."""
         req.t_done = time.monotonic()
+        req.phase = "done"
         self.finished.append(req)
         return req
 
@@ -362,6 +393,9 @@ def stats_from_requests(reqs: List[Request]) -> ServeStats:
         s.total_tokens += len(r.output)
         s.preemptions += r.n_preemptions
         s.sealed_bytes += r.sealed_bytes
+        s.handoffs += r.n_handoffs
+        s.handoff_bytes += r.handoff_bytes
+        s.backfilled_requests += int(r.backfilled)
         s.aborted_requests += int(r.aborted)
         s.deadline_misses += int(r.deadline_missed)
         if r.output:   # an aborted request may die before its first token

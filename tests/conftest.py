@@ -59,6 +59,15 @@ CANONICAL_CONFIGS = {
     "paged-sharing": dict(kv_backend="paged", page_size=8,
                           prefix_sharing=True),
     "sharded-dp2": dict(kv_backend="slot", mesh="dp=2"),
+    # two-phase serving: step-level continuous batching (single plan,
+    # per-step token budget) and disaggregated prefill (dedicated prefill
+    # plan + sealed plan-to-plan KV handoff) — same byte-identity contract.
+    "slot-cb": dict(kv_backend="slot", continuous_batching=True),
+    "paged-cb": dict(kv_backend="paged", page_size=8,
+                     continuous_batching=True),
+    "slot-2plan": dict(kv_backend="slot", prefill_plan="dedicated"),
+    "paged-2plan": dict(kv_backend="paged", page_size=8,
+                        prefill_plan="dedicated"),
 }
 
 # engine shape shared by every configuration (2 slots => the high wave must
@@ -121,6 +130,34 @@ def run_canonical_scenario(model, params, **engine_kw):
     assert all(r.finished for r in reqs), "scenario did not drain"
     assert stats.preemptions > 0, \
         "the canonical scenario must force sealed preemption"
+    return [list(r.output) for r in reqs], eng, td
+
+
+def burst_requests():
+    """A burst of long prompts (each chunking past the largest bucket)
+    arriving just ahead of short ones — the TTFT operating point step-level
+    continuous batching and disaggregated prefill exist for. All one
+    priority so ordering is purely arrival, all seeded so every mode must
+    reproduce the same bytes."""
+    longs = [(np.arange(1, 13, dtype=np.int32) + i, 6, 0, 200 + i)
+             for i in range(3)]
+    shorts = [(np.arange(1, 4, dtype=np.int32) + i, 5, 0, 300 + i)
+              for i in range(3)]
+    return longs + shorts
+
+
+def run_burst_scenario(model, params, **engine_kw):
+    """Replay the long-prompt burst on one engine configuration. Returns
+    (outputs in submission order, engine, TrustDomain)."""
+    from repro.core import TrustDomain
+    from repro.runtime import Engine
+    td = TrustDomain("tdx")
+    kw = dict(CANONICAL_ENGINE)
+    kw.update(engine_kw)
+    eng = Engine(model, params, trust_domain=td, **kw)
+    reqs = [eng.submit(_gen(s)) for s in burst_requests()]
+    eng.run(max_steps=50_000)
+    assert all(r.finished for r in reqs), "burst scenario did not drain"
     return [list(r.output) for r in reqs], eng, td
 
 

@@ -20,9 +20,9 @@ import jax
 import numpy as np
 import pytest
 
-from conftest import (CANONICAL_CONFIGS, canonical_requests,
+from conftest import (CANONICAL_CONFIGS, burst_requests, canonical_requests,
                       check_pool_invariants, make_sharing_engine,
-                      run_canonical_scenario, _gen)
+                      run_burst_scenario, run_canonical_scenario, _gen)
 from repro.configs import smoke_config
 from repro.core import TrustDomain
 from repro.core.sealing import IntegrityError
@@ -118,6 +118,83 @@ class TestDifferentialHarness:
         ch = td.channel.stats
         assert ch.collective_steps > 0
         assert ch.collective_bytes > 0
+
+
+TWO_PHASE_CONFIGS = ("slot-cb", "paged-cb", "slot-2plan", "paged-2plan")
+
+
+class TestTwoPhaseServing:
+    """Step-level continuous batching and disaggregated prefill under a
+    burst of long prompts: decoded bytes must be untouched, the sealed
+    plan-to-plan handoff must be priced, and interleaved prefill must
+    actually improve short-request admission latency."""
+
+    @pytest.fixture(scope="class")
+    def burst_solo(self, small_model):
+        cfg, model, params = small_model
+        return [Engine(model, params, max_slots=1, max_len=64,
+                       prefill_buckets=(4, 8)).generate(_gen(s)).tokens
+                for s in burst_requests()]
+
+    @pytest.mark.parametrize("name", ("slot",) + TWO_PHASE_CONFIGS)
+    def test_burst_byte_identical_to_solo(self, small_model, burst_solo,
+                                          name):
+        cfg, model, params = small_model
+        outs, eng, td = run_burst_scenario(model, params,
+                                           **CANONICAL_CONFIGS[name])
+        assert outs == burst_solo, f"{name} diverged on the long-prompt burst"
+        check_pool_invariants(eng.kv)
+
+    @pytest.mark.parametrize("name", ("slot-2plan", "paged-2plan"))
+    def test_handoff_priced_in_sealed_bytes(self, small_model, name):
+        """Every disaggregated request crosses the plan boundary exactly
+        once, and the crossing lands in ChannelStats sealed traffic —
+        the disaggregation boundary is accounted like a preemption."""
+        cfg, model, params = small_model
+        outs, eng, td = run_burst_scenario(model, params,
+                                           **CANONICAL_CONFIGS[name])
+        st = eng.scheduler.stats()
+        assert st.handoffs == len(outs)
+        assert st.handoff_bytes > 0
+        ch = td.channel.stats
+        assert ch.seal_events >= st.handoffs
+        assert ch.seal_bytes >= st.handoff_bytes
+        assert ch.restore_bytes >= st.handoff_bytes
+
+    def test_interleaved_prefill_admits_short_before_long(self, small_model):
+        """TTFT regression: with continuous batching, a short request backs
+        into the leftover step budget while a long prefill is still blocked
+        on it — under bucket-batched admission the long (earlier) request
+        would have claimed the slot first."""
+        cfg, model, params = small_model
+        eng = Engine(model, params, max_slots=2, max_len=64,
+                     prefill_buckets=(4, 8), continuous_batching=True,
+                     step_tokens=8)
+        filler = eng.submit(_gen((np.arange(1, 5, dtype=np.int32), 8, 0, 400)))
+        eng.step()   # filler occupies one slot -> next step's budget is 7
+        long = eng.submit(_gen((np.arange(1, 13, dtype=np.int32), 6, 0, 401)))
+        short = eng.submit(_gen((np.arange(1, 4, dtype=np.int32), 5, 0, 402)))
+        eng.step()
+        running = list(eng.scheduler.running.values())
+        assert short in running, "short request should backfill the budget"
+        assert long not in running, \
+            "the long prefill (bucket 8 > budget 7) must wait for fresh budget"
+        assert short.backfilled and eng.backfills >= 1
+        eng.run(max_steps=50_000)
+        for req, spec in ((filler, (np.arange(1, 5, dtype=np.int32), 8, 0, 400)),
+                          (long, (np.arange(1, 13, dtype=np.int32), 6, 0, 401)),
+                          (short, (np.arange(1, 4, dtype=np.int32), 5, 0, 402))):
+            ref = Engine(model, params, max_slots=1, max_len=64,
+                         prefill_buckets=(4, 8)).generate(_gen(spec)).tokens
+            assert list(req.output) == ref, "backfill changed decoded bytes"
+
+    def test_phase_lifecycle_and_backfill_stats(self, small_model):
+        cfg, model, params = small_model
+        outs, eng, _ = run_burst_scenario(
+            model, params, **CANONICAL_CONFIGS["slot-2plan"])
+        assert all(r.phase == "done" for r in eng.scheduler.finished)
+        st = eng.scheduler.stats()
+        assert st.backfilled_requests == 0   # no budget in two-plan mode
 
 
 PROMPT = np.arange(1, 9, dtype=np.int32)

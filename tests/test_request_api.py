@@ -702,6 +702,130 @@ class TestPenalties:
             eng.submit(gen(params=SamplingParams(temperature=1.0,
                                                  presence_penalty=float("inf"))))
 
+    def test_frequency_weighting_compounds(self):
+        """Count-weighted CTRL: a token seen c times is penalized by
+        rep_pen**c, so a count too weak to flip the argmax at c=1 still
+        flips it at c=2; unseen rows (count 0) stay exactly untouched."""
+        import jax.numpy as jnp
+        from repro.runtime import sampling
+        v = 64
+        logits = np.full((3, v), -100.0, np.float32)
+        logits[:, 5] = 50.0      # dominant
+        logits[:, 9] = 20.0      # runner-up
+        hist = np.zeros((3, v), np.int32)
+        hist[1, 5] = 1           # 50/2 = 25  > 20: survives one occurrence
+        hist[2, 5] = 2           # 50/4 = 12.5 < 20: two occurrences flip it
+        keys = np.stack([np.asarray(jax.random.PRNGKey(0), np.uint32)] * 3)
+        state = sampling.SamplingState(
+            temp=jnp.ones(3), top_k=jnp.zeros(3, jnp.int32),
+            key=jnp.asarray(keys), step=jnp.zeros(3, jnp.int32),
+            hist=jnp.asarray(hist),
+            rep_pen=jnp.full(3, 2.0, jnp.float32))
+        toks = np.asarray(sampling.sample(jnp.asarray(logits), state))
+        assert toks[0] == 5      # unseen: rp**0 == 1, untouched
+        assert toks[1] == 5      # seen once: still dominant
+        assert toks[2] == 9      # seen twice: compounded below runner-up
+
+
+class TestLogitBias:
+    """Per-request logit-bias maps: [slots, vocab] additive rows behind the
+    same static None gate as the penalties, rebuilt with the sampling row so
+    seeded requests reproduce across seal/restore preemption."""
+
+    def test_bias_forces_and_bans_tokens(self, small_model):
+        """A huge positive bias forces its token every step; banning that
+        token with a huge negative bias keeps it out of the stream."""
+        cfg, model, params = small_model
+        sp = lambda b: SamplingParams(temperature=1.2, seed=5, logit_bias=b)
+        forced = make_engine(model, params).generate(
+            gen(max_new_tokens=6, params=sp({7: 1000.0}))).tokens
+        assert forced == [7] * 6
+        banned = make_engine(model, params).generate(
+            gen(max_new_tokens=8, params=sp({forced[0]: -1000.0,
+                                             7: -1000.0}))).tokens
+        assert 7 not in banned
+
+    def test_bias_applies_to_the_prefill_first_token(self, small_model):
+        """_first_tokens threads the bias rows too — the very first sampled
+        token (from prefill logits) honors the map, not just decode steps."""
+        cfg, model, params = small_model
+        out = make_engine(model, params).generate(
+            gen(max_new_tokens=1,
+                params=SamplingParams(temperature=1.0, seed=9,
+                                      logit_bias={11: 1000.0}))).tokens
+        assert out == [11]
+
+    def test_biased_and_unbiased_coexist(self, small_model):
+        """Bias rows are per-slot: a biased slot-mate must not perturb a
+        seeded unbiased request sharing the decode batch."""
+        cfg, model, params = small_model
+        sp = SamplingParams(temperature=1.5, top_k=8, seed=13)
+        ref = make_engine(model, params).generate(
+            gen(max_new_tokens=6, params=sp)).tokens
+        eng = make_engine(model, params, max_slots=2)
+        plain = eng.submit(gen(max_new_tokens=6,
+                               params=SamplingParams(temperature=1.5,
+                                                     top_k=8, seed=13)))
+        eng.submit(gen(np.full(8, 3, np.int32), max_new_tokens=6,
+                       params=SamplingParams(temperature=1.2, seed=7,
+                                             logit_bias={3: 1000.0})))
+        eng.run()
+        assert plain.output == ref
+
+    def test_biased_output_identical_across_preemption(self, small_model):
+        """Seeded parity across seal/restore: the bias matrix is rebuilt
+        from SamplingParams whenever the sampling row is set, so the
+        post-restore continuation re-samples byte-identically."""
+        cfg, model, params = small_model
+        sp = SamplingParams(temperature=1.2, top_k=16, seed=21,
+                            logit_bias={5: 6.0, 9: -4.0})
+        ref = make_engine(model, params, max_slots=1).generate(
+            gen(max_new_tokens=10, params=sp)).tokens
+        eng = make_engine(model, params, max_slots=1,
+                          trust_domain=TrustDomain("tdx"))
+        low = eng.submit(gen(max_new_tokens=10, params=sp))
+        for _ in range(4):
+            eng.step()
+        eng.submit(gen(np.full(8, 7, np.int32), max_new_tokens=3, priority=9))
+        eng.run()
+        assert low.n_preemptions == 1
+        assert low.output == ref
+
+    def test_state_gating_and_mirror_release(self, small_model):
+        """The bias matrix only enters the jitted state while some live slot
+        biases, and the device mirror drops once biased work drains."""
+        cfg, model, params = small_model
+        eng = make_engine(model, params, max_slots=2)
+        eng.submit(gen(max_new_tokens=4,
+                       params=SamplingParams(temperature=1.0, seed=0)))
+        eng._admit_ready()
+        state, _ = eng._sampling_state(np.zeros(2, np.int32))
+        assert state.bias is None
+        eng2 = make_engine(model, params, max_slots=2)
+        eng2.submit(gen(max_new_tokens=4,
+                        params=SamplingParams(temperature=1.0, seed=0,
+                                              logit_bias={2: 5.0})))
+        eng2._admit_ready()
+        state2, _ = eng2._sampling_state(np.zeros(2, np.int32))
+        assert state2.bias is not None
+        assert state2.rep_pen is None       # only the used feature compiles
+        eng2.run()
+        for _ in range(2):
+            eng2.generate(gen(max_new_tokens=3))    # greedy-only traffic
+        assert eng2._bias_dev is None
+
+    def test_validation(self, small_model):
+        cfg, model, params = small_model
+        eng = make_engine(model, params)
+        with pytest.raises(ValueError, match="logit_bias"):
+            eng.submit(gen(params=SamplingParams(logit_bias={1: 1.0})))
+        with pytest.raises(ValueError, match="out of range"):
+            eng.submit(gen(params=SamplingParams(
+                temperature=1.0, logit_bias={10 ** 9: 1.0})))
+        with pytest.raises(ValueError, match="finite"):
+            eng.submit(gen(params=SamplingParams(
+                temperature=1.0, logit_bias={1: float("nan")})))
+
 
 class TestSlackScheduling:
     """Deadline-aware (slack/EDF) admission ordering — the default — serves
