@@ -64,6 +64,22 @@ HANDOFF_B=$(sed -n 's/.*sealed handoff: [0-9]* prefill->decode handoffs \/ \([0-
     || { echo "two-plan run priced no sealed handoff bytes"; exit 1; }
 echo "two-phase smoke OK: ${HANDOFF_B}B sealed across the plan boundary"
 
+# fleet smoke: 2 attested workers (own TrustDomain each) behind the gateway
+# + orchestrator, one killed mid-serve. The attestation line must show both
+# workers admitted and the migration line must price nonzero sealed bytes —
+# the kill actually moved in-flight KV under the tenant key domains.
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
+    --requests 6 --max-new-tokens 6 --prefill-buckets 8,16 --slots 2 \
+    --workers 2 --tenants 2 --kill-worker-at 3 --seed 4 --sample-temp 0.7 \
+    | tee /tmp/ci_fleet_smoke.out
+ATTESTED=$(sed -n 's/.*fleet: \([0-9]*\) workers attested.*/\1/p' /tmp/ci_fleet_smoke.out)
+MIGRATED_B=$(sed -n 's/.*migration: [0-9]* sealed moves \/ \([0-9]*\) B migrated.*/\1/p' /tmp/ci_fleet_smoke.out)
+[ "${ATTESTED:-0}" -eq 2 ] \
+    || { echo "fleet smoke attested ${ATTESTED:-0} workers, wanted 2"; exit 1; }
+[ -n "$MIGRATED_B" ] && [ "$MIGRATED_B" -gt 0 ] \
+    || { echo "worker kill migrated no sealed KV"; exit 1; }
+echo "fleet smoke OK: $ATTESTED workers attested, ${MIGRATED_B}B migrated across the kill"
+
 # mesh smoke: 2 forced host devices, the engine spanning a dp=2 mesh (batch
 # sharded, params FSDP-placed and gathered per step). Must print the
 # measured-vs-modeled link-tax line — the collective path is live, not

@@ -432,6 +432,143 @@ def two_phase_sweep(model, params, vocab, *, tee: str, json_out: str):
           f"metrics -> {json_out}")
 
 
+def handoff_batch_sweep(model, params, vocab, *, tee: str):
+    """Grouped sealed handoffs on the dedicated prefill plan: the same
+    seeded workload served with ``handoff_batch`` ∈ {1, 2, 4} must decode
+    byte-identically while sealed plan-boundary crossings per token fall
+    monotonically — N finished prefill rows ride one seal/restore pair
+    instead of N, the same fixed-cost-per-crossing amortization lever as
+    frame coalescing (Insight 10), applied to the KV handoff direction."""
+    max_slots, bucket = 4, 16
+    rng = np.random.default_rng(43)
+    prompts = [rng.integers(1, vocab, size=bucket).astype(np.int32)
+               for _ in range(8)]
+
+    def workload():
+        return [GenerationRequest(
+                    prompt=p, max_new_tokens=8,
+                    params=SamplingParams(temperature=0.8, top_k=32, seed=i))
+                for i, p in enumerate(prompts)]
+
+    print(f"\nhandoff-batch sweep (tee={tee}, prefill_plan=dedicated, "
+          f"batch ∈ [1, 2, 4]): {len(prompts)} requests, slots={max_slots}")
+    outputs, curve = [], []
+    for batch in (1, 2, 4):
+        td = TrustDomain(tee)
+        eng = Engine(model, params, max_slots=max_slots, max_len=64,
+                     trust_domain=td, prefill_buckets=(bucket,),
+                     prefill_plan="dedicated", handoff_batch=batch)
+        for r in workload():      # warmup: both plans' compiles
+            eng.submit(r)
+        eng.run(max_steps=100_000)
+        td.channel.stats.reset()
+        crossings0 = eng.handoff_crossings
+
+        reqs = [eng.submit(r) for r in workload()]
+        eng.run(max_steps=100_000)
+        assert all(r.finished for r in reqs)
+        stats = stats_from_requests(reqs)
+        crossings = eng.handoff_crossings - crossings0
+        cpt = crossings / max(stats.total_tokens, 1)
+        outputs.append([r.output for r in reqs])
+        curve.append(cpt)
+        print(f"  batch={batch}  {stats.handoffs:2d} handoffs over "
+              f"{crossings:2d} sealed crossings / {stats.total_tokens} tokens"
+              f" = {cpt:.4f} crossings/token  ({stats.handoff_bytes}B)")
+        assert stats.handoffs == len(reqs), \
+            "every request must cross the plan boundary exactly once"
+    assert all(o == outputs[0] for o in outputs[1:]), \
+        "handoff batching changed decoded output"
+    for a, b in zip(curve, curve[1:]):
+        assert b <= a, \
+            f"crossings/token must fall monotonically with batch, got {curve}"
+    assert curve[-1] < curve[0], \
+        f"batching must strictly cut sealed crossings, got {curve}"
+    print(f"handoff-batch sweep OK: identical tokens, crossings/token "
+          f"{' >= '.join(f'{c:.4f}' for c in curve)}")
+
+
+def fleet_sweep(model, params, vocab, *, tee: str, requests: int,
+                json_out: str):
+    """Multi-worker fleet vs one worker vs a forced mid-serve worker kill,
+    all over the same seeded two-tenant workload. Outputs must be
+    byte-identical across all three (placement and even enclave loss move
+    *where* a request decodes, never *what* it decodes — the request's
+    sealed KV and seeded sampling state travel), and the kill run must
+    price its migration (sealed moves, ciphertext bytes) in FleetStats.
+    Rows merge under the ``fleet`` key of ``json_out``."""
+    from repro.fleet import EngineWorker, Gateway, Orchestrator
+
+    rng = np.random.default_rng(41)
+    prompts = [rng.integers(1, vocab, size=int(l)).astype(np.int32)
+               for l in rng.integers(8, 60, size=requests)]
+
+    def workload():
+        # fresh objects per run: routing consumes the plaintext prompt
+        # (the envelope round-trip replaces it)
+        return [GenerationRequest(
+                    prompt=p.copy(), max_new_tokens=12,
+                    params=SamplingParams(temperature=0.8, top_k=32, seed=i),
+                    tenant=f"t{i % 2}")
+                for i, p in enumerate(prompts)]
+
+    def serve(n_workers, kill_at=None):
+        kw = dict(max_slots=2, max_len=128, prefill_buckets=(16, 32, 64))
+        workers = [EngineWorker(f"w{i}", model, params, tee=tee,
+                                engine_kw=kw) for i in range(n_workers)]
+        gateway = Gateway(config_repr="bench")
+        gateway.register_tenant("t0")
+        gateway.register_tenant("t1")
+        orch = Orchestrator(gateway, workers)
+        t0 = time.monotonic()
+        handles = [orch.submit(g) for g in workload()]
+        step_i = 0
+        while not orch.idle and step_i < 100_000:
+            if step_i == kill_at and len(orch.ready_workers()) > 1:
+                victim = max(orch.ready_workers(), key=lambda w: w.load())
+                orch.kill(victim.name)
+            orch.step()
+            step_i += 1
+        wall = time.monotonic() - t0
+        assert all(h.finished for h in handles)
+        return handles, stats_from_requests(handles), orch, wall
+
+    print(f"\nfleet sweep (tee={tee}): {requests} requests over 2 tenants, "
+          f"2 slots/worker")
+    report, outputs = {}, {}
+    for label, n, kill in (("workers=1", 1, None), ("workers=2", 2, None),
+                           ("workers=2+kill", 2, 4)):
+        handles, stats, orch, wall = serve(n, kill)
+        outputs[label] = [h.output for h in handles]
+        fs = orch.stats
+        print(f"  {label:15s} {stats.total_tokens:5d} tok  {wall:6.2f}s  "
+              f"{stats.throughput_tps:8.1f} tok/s  "
+              f"TTFT p50 {stats.p50_ttft_s * 1e3:7.1f}ms "
+              f"p99 {stats.p99_ttft_s * 1e3:7.1f}ms  "
+              f"migrations {fs.migrations} ({fs.migrated_bytes}B, "
+              f"{fs.kills} kills)")
+        report[label] = dict(
+            workers=n, tokens_per_s=round(stats.throughput_tps, 1),
+            ttft_p50_ms=round(stats.p50_ttft_s * 1e3, 2),
+            ttft_p99_ms=round(stats.p99_ttft_s * 1e3, 2),
+            migrations=fs.migrations, migrated_bytes=fs.migrated_bytes,
+            kills=fs.kills)
+    assert outputs["workers=1"] == outputs["workers=2"] \
+        == outputs["workers=2+kill"], \
+        "fleet placement / worker kill changed decoded output"
+    kill_row = report["workers=2+kill"]
+    assert kill_row["kills"] == 1, "the kill run must actually kill a worker"
+    assert kill_row["migrations"] > 0 and kill_row["migrated_bytes"] > 0, \
+        "a mid-serve kill must move sealed KV to the survivor"
+    path = Path(json_out)
+    data = json.loads(path.read_text()) if path.exists() else {}
+    data["fleet"] = report
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"fleet sweep OK: identical tokens across 1 worker, 2 workers and "
+          f"a mid-serve kill; {kill_row['migrations']} sealed moves / "
+          f"{kill_row['migrated_bytes']}B migrated; rows -> {json_out}")
+
+
 def mesh_sweep(model, params, vocab, *, mesh: str, tee: str, max_slots: int,
                requests: int):
     """Single-device vs mesh-spanning engine over one seeded workload:
@@ -511,6 +648,14 @@ def main():
                          "continuous batching vs disaggregated two-plan "
                          "serving, with BENCH_serve.json emission "
                          "('none' skips)")
+    ap.add_argument("--handoff-sweep", default="both",
+                    choices=["both", "none"],
+                    help="grouped sealed prefill->decode handoffs: "
+                         "handoff_batch 1 vs 2 vs 4 on the dedicated plan "
+                         "('none' skips)")
+    ap.add_argument("--fleet", default="both", choices=["both", "none"],
+                    help="fleet sweep: 1 worker vs 2 vs 2+mid-serve kill, "
+                         "rows merged into the JSON report ('none' skips)")
     ap.add_argument("--json-out", default="BENCH_serve.json",
                     help="where the two-phase sweep writes its per-mode "
                          "serving metrics")
@@ -559,6 +704,13 @@ def main():
         two_phase_sweep(model, params, cfg.vocab_size,
                         tee=args.tee if args.tee != "none" else "cgpu",
                         json_out=args.json_out)
+    if args.handoff_sweep != "none":
+        handoff_batch_sweep(model, params, cfg.vocab_size,
+                            tee=args.tee if args.tee != "none" else "cgpu")
+    if args.fleet != "none":
+        fleet_sweep(model, params, cfg.vocab_size,
+                    tee=args.tee if args.tee != "none" else "cgpu",
+                    requests=min(args.requests, 8), json_out=args.json_out)
     if args.mesh is not None:
         mesh_sweep(model, params, cfg.vocab_size, mesh=args.mesh,
                    tee=args.tee, max_slots=args.max_slots,

@@ -1,0 +1,97 @@
+"""Multi-tenant confidential fleet: two tenants' RAG traffic over two
+attested workers, with a mid-serve worker failure.
+
+The single-engine examples trust ONE enclave; a real privacy-sensitive
+deployment multiplexes mutually-distrusting tenants over a worker fleet.
+This demo drives the whole `repro.fleet` tier:
+
+  * the gateway attests each worker (quote verify -> transport key ->
+    per-tenant key domains, one fresh quote per release) and envelope-
+    encrypts every prompt to exactly the worker it routes to;
+  * tenant-affinity placement steers each tenant's questions to the worker
+    already holding that tenant's shared retrieval context resident, so the
+    context pages are physical-page-shared instead of re-stored;
+  * mid-serve, one worker is killed. Its sealed KV — ciphertext under the
+    per-tenant key domains, the at-rest property the paper prices — is the
+    only thing that survives, and it migrates to the other worker, where
+    every in-flight answer completes byte-identically (seeded sampling
+    travels with the request).
+
+    PYTHONPATH=src python examples/fleet_rag.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.data.tokenizer import ByteTokenizer
+from repro.fleet import EngineWorker, Gateway, Orchestrator
+from repro.models import build_model
+from repro.runtime import GenerationRequest, SamplingParams
+
+ENGINE_KW = dict(max_slots=2, max_len=128, prefill_buckets=(64,),
+                 kv_backend="paged", page_size=16, prefix_sharing=True)
+
+TENANT_CONTEXT = {
+    "hospital": "context: enclave attestation protects patient records ",
+    "bank": "context: sealed ledgers keep account balances private ",
+}
+QUESTIONS = ["summarize the policy", "who can read the data",
+             "what is sealed at rest", "is the channel encrypted"]
+
+
+def main():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    tok = ByteTokenizer()
+
+    workers = [EngineWorker(f"w{i}", model, params, engine_kw=ENGINE_KW)
+               for i in range(2)]
+    gateway = Gateway(config_repr=cfg.name)
+    for tenant in TENANT_CONTEXT:
+        gateway.register_tenant(tenant)
+    orch = Orchestrator(gateway, workers, placement="tenant_affinity")
+    print(f"fleet: {gateway.stats.attested_workers} workers attested, "
+          f"{gateway.stats.keys_released} tenant key-domain releases "
+          f"(each on its own fresh quote)")
+
+    # same-length prompts per tenant: shared context head + padded question
+    # tail, so the head lands page-aligned and shares physically
+    handles = []
+    for tenant, ctx in TENANT_CONTEXT.items():
+        width = 64 - len(tok.encode(ctx))
+        for i, q in enumerate(QUESTIONS):
+            prompt = np.asarray(
+                tok.encode(ctx + q.ljust(width)[:width]), np.int32)
+            handles.append(orch.submit(GenerationRequest(
+                prompt=prompt, max_new_tokens=8,
+                params=SamplingParams(temperature=0.7, top_k=20,
+                                      seed=10 * len(handles)),
+                tenant=tenant)))
+    for _ in range(4):                  # both workers mid-decode
+        orch.step()
+    by_worker = {w.name: [t for t in TENANT_CONTEXT if w.serves_tenant(t)]
+                 for w in orch.ready_workers()}
+    print(f"tenant affinity: {by_worker}")
+
+    victim = max(orch.ready_workers(), key=lambda w: w.load())
+    orch.kill(victim.name)
+    print(f"killed {victim.name} mid-decode; its sealed KV migrated under "
+          f"the tenant key domains")
+    stats = orch.run()
+
+    assert all(h.finished for h in handles)
+    print(f"served {stats.total_requests} requests / {stats.total_tokens} "
+          f"tokens across the failure")
+    print(f"migration: {orch.stats.migrations} sealed moves / "
+          f"{orch.stats.migrated_bytes} B "
+          f"(priced per request in ServeStats: {stats.migrations} moves)")
+    shared = sum(w.engine.kv.shared_page_maps for w in workers)
+    print(f"prefix sharing across the fleet: {shared} shared page maps "
+          f"(each tenant's context stored once per worker, not per request)")
+    print(f"fleet boundary totals: {orch.channel_totals()}")
+
+
+if __name__ == "__main__":
+    main()

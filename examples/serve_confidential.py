@@ -72,7 +72,37 @@ API in one glance (``repro.runtime``)::
 (in bursts of ``coalesce``); ``engine.run()`` returns ``ServeStats`` with
 p50/mean/p99 latency + TTFT and the SLO counters (dropped_requests,
 aborted_requests, deadline_misses, preemptions, sealed_bytes), plus the
-two-phase counters (handoffs, handoff_bytes, backfilled_requests).
+two-phase counters (handoffs, handoff_bytes, backfilled_requests),
+admission control (rejected_infeasible — with ``reject_infeasible=True``
+a deadline no step-time lower bound can meet is refused BEFORE the prompt
+crosses the boundary) and migration pricing (migrations, migrated_bytes).
+
+Scaling past one enclave, the fleet tier (``repro.fleet``) wraps N engines,
+each in its own TrustDomain, behind an attested gateway + orchestrator::
+
+    from repro.fleet import EngineWorker, Gateway, Orchestrator
+
+    workers = [EngineWorker(f"w{i}", model, params,   # own TrustDomain each;
+                            engine_kw=dict(...))      #  kwargs as above
+               for i in range(2)]
+    gateway = Gateway()                  # quote-verifies each worker, then
+    gateway.register_tenant("acme")      #  releases per-tenant KEY DOMAINS
+                                         #  (derived labels: tenant A's
+                                         #  sealed KV fails MAC under B's)
+    orch = Orchestrator(gateway, workers,
+                        placement="tenant_affinity",  # or "least_loaded"
+                        tenant_budgets={"acme": 500}) # tokens/s, held at
+                                                      #  the gateway side
+    req = orch.submit(GenerationRequest(..., tenant="acme"))
+    orch.kill("w0")                      # enclave loss: sealed KV migrates
+    orch.run()                           #  to survivors; req finishes
+                                         #  byte-identically elsewhere
+
+Prompts travel gateway->worker as envelopes (fresh content key, wrapped to
+the one attested worker's transport key); a worker failure's in-flight KV
+re-seals under the fleet-shared tenant domain in a ``kvmigrate/{worker}``
+nonce namespace and restores on a survivor — ``examples/fleet_rag.py`` is
+the end-to-end demo, ``serve.py --workers N`` the launcher form.
 
 Reports the paper's user-perceived metrics (throughput, next-token latency,
 TTFT) plus the modeled overhead of running the same deployment on each TEE

@@ -91,6 +91,15 @@ class HardwareRoot:
 # verifier / key broker
 # ---------------------------------------------------------------------------
 
+def derive_tenant_material(master: bytes, tenant: str) -> bytes:
+    """Per-tenant key material from the broker's master secret. Deterministic
+    (same master + tenant -> same bytes on every release), so every attested
+    worker a tenant's traffic lands on derives the same sealing domain and
+    sealed KV can migrate between them — while two tenants' materials are
+    unrelated under the hash."""
+    return hashlib.sha256(b"tenant|" + tenant.encode() + b"|" + master).digest()
+
+
 class Verifier:
     """Client-side: checks quotes and releases sealing keys (key broker)."""
 
@@ -123,3 +132,16 @@ class Verifier:
         self.verify(q)
         self._released[q.nonce] = key_material
         return key_material
+
+    def release_tenant_key(self, q: Quote, master: bytes,
+                           tenant: str) -> bytes:
+        """Release ONE tenant's key domain to an attested worker (the fleet
+        gateway's per-tenant key-release flow): the quote is verified like
+        any other release — fresh nonce, valid signature, expected
+        measurement — and only the derived per-tenant material leaves the
+        broker, never the master secret. An unattested or mis-measured
+        worker gets :class:`AttestationError`, not a key."""
+        self.verify(q)
+        material = derive_tenant_material(master, tenant)
+        self._released[q.nonce] = material
+        return material

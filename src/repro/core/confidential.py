@@ -57,6 +57,7 @@ class TrustDomain:
         self.audit: List[AuditEvent] = []
         self._model_digest = ""
         self._code_hash: Optional[str] = None
+        self._tenant_keys: Dict[str, sealing.SealingKey] = {}
 
     # -- audit ---------------------------------------------------------------
     def _log(self, kind: str, detail: str = ""):
@@ -93,6 +94,32 @@ class TrustDomain:
     def make_verifier(self, config_repr: str = "") -> attestation.Verifier:
         """Client-side verifier pinned to this domain's current measurement."""
         return attestation.Verifier(self.root, self.measurement(config_repr))
+
+    # -- tenant key domains --------------------------------------------------
+    def tenant_key(self, tenant: str) -> sealing.SealingKey:
+        """The sealing-key domain for one tenant's KV/egress inside this
+        worker. Derived (never stored) from the domain's sealing key with an
+        HKDF-style label, so a blob sealed for tenant A fails MAC — not just
+        decryption — under tenant B's domain or under the worker key itself.
+        Workers attested by the same gateway receive identical tenant
+        material, so the same derivation yields the same domain fleet-wide
+        and sealed KV migrates across workers without re-keying."""
+        k = self._tenant_keys.get(tenant)
+        if k is None:
+            k = self.sealing_key.derive(f"tenant/{tenant}")
+            self._tenant_keys[tenant] = k
+            self._log("tenant_key", f"derived domain for tenant={tenant}")
+        return k
+
+    def adopt_tenant_material(self, tenant: str, material: bytes) -> sealing.SealingKey:
+        """Install a gateway-released per-tenant material as this worker's
+        domain for ``tenant`` (fleet path: material comes from
+        ``Verifier.release_tenant_key`` after this worker attested, so every
+        worker in the fleet lands on the *same* tenant domain)."""
+        k = sealing.SealingKey.generate(material)
+        self._tenant_keys[tenant] = k
+        self._log("tenant_key", f"adopted released domain for tenant={tenant}")
+        return k
 
     # -- boundary I/O ----------------------------------------------------------
     def ingress(self, tokens: np.ndarray) -> np.ndarray:

@@ -45,6 +45,23 @@ class SealingKey:
             return cls(k, m)
         return cls(os.urandom(32), os.urandom(32))
 
+    def derive(self, label: str) -> "SealingKey":
+        """HKDF-style labeled subkey: a *key domain* carved out of this key.
+
+        Both halves are derived independently (``expand(label, key)`` /
+        ``expand(label, mac_key)``) so the MAC domain separates too: a blob
+        sealed under ``k.derive("tenant/a")`` fails MAC verification — not
+        merely decryption — under ``k.derive("tenant/b")`` or under ``k``
+        itself. That is what makes cross-tenant restore fail *by integrity
+        check* rather than by convention (the fleet's per-tenant KV
+        isolation rests on this). Derivation is deterministic, so two
+        attested workers handed the same master material derive the same
+        tenant domain and sealed KV migrates between them."""
+        lb = label.encode()
+        return SealingKey(
+            hashlib.sha256(b"derive/key|" + lb + b"|" + self.key).digest(),
+            hashlib.sha256(b"derive/mac|" + lb + b"|" + self.mac_key).digest())
+
     @property
     def key_words(self) -> jax.Array:
         return jnp.asarray(np.frombuffer(self.key, np.uint32))

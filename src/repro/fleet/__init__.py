@@ -1,0 +1,45 @@
+"""Multi-tenant confidential serving fleet: attested gateway -> orchestrator
+-> engine workers.
+
+The paper measures one engine in one enclave; real privacy-sensitive
+deployments interpose an attested service tier where many mutually-
+distrusting tenants share a worker fleet. This package is that tier, built
+entirely from primitives the repo already has:
+
+  * :class:`~repro.fleet.gateway.Gateway` — the key broker at the front
+    door. It verifies each worker's attestation quote (measurement, nonce
+    freshness, signature — the :mod:`repro.core.attestation` flow) before
+    admitting it, releases **per-tenant key domains** (HKDF-style labels on
+    the master secret, so tenant A's sealed KV fails MAC — not merely
+    decryption — under tenant B's domain), and envelope-encrypts prompts to
+    exactly one attested worker.
+  * :class:`~repro.fleet.worker.EngineWorker` — one
+    :class:`~repro.runtime.engine.Engine` wrapped in its own
+    :class:`~repro.core.confidential.TrustDomain`, stepping through the
+    worker state machine ATTESTING -> READY -> DRAINING -> DEAD.
+  * :class:`~repro.fleet.orchestrator.Orchestrator` — routes
+    :class:`~repro.runtime.api.GenerationRequest`s across the fleet with
+    pluggable placement (:mod:`repro.fleet.placement`: least-loaded by
+    effective KV demand, tenant-affinity for prefix-sharing locality),
+    enforces tenant-aware rate budgets atop the engines' per-priority token
+    buckets, and handles worker failure/drain: in-flight sealed KV migrates
+    to a surviving worker through the engine's own seal/restore path under
+    a ``kvmigrate/{worker}/...`` nonce namespace, priced in
+    ``ChannelStats`` like preemption and handoff. Outputs stay
+    byte-identical across a migration (seeded sampling; the request object
+    itself travels).
+"""
+
+from repro.fleet.gateway import Envelope, Gateway, GatewayStats
+from repro.fleet.orchestrator import FleetStats, Orchestrator
+from repro.fleet.placement import PLACEMENTS, least_loaded, tenant_affinity
+from repro.fleet.worker import (ATTESTING, DEAD, DRAINING, READY,
+                                EngineWorker, WORKER_STATES)
+
+__all__ = [
+    "Envelope", "Gateway", "GatewayStats",
+    "FleetStats", "Orchestrator",
+    "PLACEMENTS", "least_loaded", "tenant_affinity",
+    "ATTESTING", "READY", "DRAINING", "DEAD", "WORKER_STATES",
+    "EngineWorker",
+]

@@ -1,0 +1,43 @@
+"""Pluggable placement policies: which READY worker gets a request.
+
+A policy is ``(workers, gen) -> EngineWorker`` over a non-empty list of
+ready workers. Ties break on worker name so placement is deterministic —
+the fleet's differential tests rely on a reproducible routing given the
+same submission order.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.fleet.worker import EngineWorker
+from repro.runtime.api import GenerationRequest
+
+
+def least_loaded(workers: List[EngineWorker],
+                 gen: GenerationRequest) -> EngineWorker:
+    """Lowest effective KV demand wins (``kv_need`` already nets out
+    resident shared pages, so this is pages the worker would actually be
+    holding, not worst-case paper capacity)."""
+    return min(workers, key=lambda w: (w.load(), w.name))
+
+
+def tenant_affinity(workers: List[EngineWorker],
+                    gen: GenerationRequest) -> EngineWorker:
+    """Prefer a worker already serving this tenant — its content index
+    likely holds the tenant's shared prompt prefixes resident, so the
+    request maps pages instead of writing them. Falls back to least-loaded
+    across the whole pool when no worker serves the tenant yet (or the
+    request is tenant-less)."""
+    if gen.tenant is not None:
+        serving = [w for w in workers if w.serves_tenant(gen.tenant)]
+        if serving:
+            return least_loaded(serving, gen)
+    return least_loaded(workers, gen)
+
+
+PLACEMENTS: Dict[str, Callable[[List[EngineWorker], GenerationRequest],
+                               EngineWorker]] = {
+    "least_loaded": least_loaded,
+    "tenant_affinity": tenant_affinity,
+}

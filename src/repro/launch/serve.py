@@ -28,7 +28,21 @@ shared-page map / CoW counters next to the sealed-traffic line.
 prefill admissions into decode steps under a per-step token budget instead
 of filling a bucket first; ``--prefill-plan dedicated`` disaggregates
 prefill onto its own compute plan, and the sealed plan-to-plan KV handoff
-is reported (and priced in ChannelStats) on its own accounting line.
+is reported (and priced in ChannelStats) on its own accounting line;
+``--handoff-batch N`` groups N finished prefill rows per sealed crossing.
+``--reject-infeasible`` (with ``--deadline-s`` stamping a deadline on every
+request) turns on admission-time feasibility rejection: a request whose
+deadline cannot be met even under a one-sided lower bound on step time is
+rejected before any boundary crossing is spent on it.
+
+``--workers N`` switches the launcher into fleet mode: N engine workers,
+each in its own TrustDomain, behind an attested gateway (quote-gated
+per-tenant key release, prompt envelopes) and an orchestrator
+(``--placement`` policy, ``--tenants M`` round-robin tenancy).
+``--kill-worker-at STEP`` forcibly fails a worker mid-serve; its sealed KV
+migrates to survivors under the per-tenant key domains and every in-flight
+request still completes (byte-identically — seeded sampling travels with
+the request).
 """
 
 from __future__ import annotations
@@ -72,6 +86,111 @@ def parse_priority_mix(spec: str):
     if total <= 0:
         raise argparse.ArgumentTypeError("--priority-mix weights must sum > 0")
     return prios, [w / total for w in weights]
+
+
+def engine_kwargs(args):
+    """Engine construction kwargs shared by the single-engine and fleet
+    paths (mesh and trust_domain are path-specific)."""
+    return dict(max_slots=args.slots, max_len=args.max_len,
+                prefill_len=args.prefill_len,
+                prefill_buckets=args.prefill_buckets,
+                kv_backend=args.kv_backend, page_size=args.page_size,
+                num_pages=args.num_pages,
+                prefix_sharing=args.prefix_sharing,
+                kv_alloc=args.kv_alloc,
+                continuous_batching=args.continuous_batching,
+                step_tokens=args.step_tokens,
+                prefill_plan=args.prefill_plan,
+                handoff_batch=args.handoff_batch,
+                reject_infeasible=args.reject_infeasible,
+                step_time_hint_s=args.step_time_hint_s)
+
+
+def build_requests(args, cfg, tenants: int = 0):
+    """The generated workload, identical across both serving paths (same
+    rng stream); fleet mode stamps round-robin tenants."""
+    rng = np.random.default_rng(0)
+    shared_head = rng.integers(
+        1, min(cfg.vocab_size, 200),
+        min(args.shared_prefix_len, args.prefill_len)).astype(np.int32)
+    gens = []
+    for i in range(args.requests):
+        prompt = rng.integers(1, min(cfg.vocab_size, 200),
+                              args.prefill_len).astype(np.int32)
+        prompt[:len(shared_head)] = shared_head   # common K-token opening
+        priority = 0
+        if args.priority_mix is not None:
+            prios, weights = args.priority_mix
+            priority = int(rng.choice(prios, p=weights))
+        sp = SamplingParams(temperature=args.sample_temp, top_k=args.top_k,
+                            top_p=args.top_p,
+                            seed=None if args.seed is None else args.seed + i)
+        gens.append(GenerationRequest(
+            prompt=prompt, max_new_tokens=args.max_new_tokens,
+            priority=priority, params=sp,
+            frame=FramePolicy(coalesce=args.coalesce),
+            deadline_s=args.deadline_s,
+            tenant=f"t{i % tenants}" if tenants else None))
+    return gens
+
+
+def serve_fleet(args, cfg, model, params):
+    """Fleet mode: N attested workers behind a gateway + orchestrator."""
+    from repro.fleet import EngineWorker, Gateway, Orchestrator
+
+    kw = engine_kwargs(args)
+    workers = [EngineWorker(f"w{i}", model, params, tee=args.tee,
+                            engine_kw=kw) for i in range(args.workers)]
+    gateway = Gateway(config_repr=cfg.name)
+    for t in range(args.tenants):
+        gateway.register_tenant(f"t{t}")
+    orch = Orchestrator(gateway, workers, placement=args.placement)
+
+    t0 = time.monotonic()
+    for gen in build_requests(args, cfg, tenants=args.tenants):
+        orch.submit(gen)
+    step_i = 0
+    while not orch.idle and step_i < 10_000:
+        if step_i == args.kill_worker_at:
+            live = orch.ready_workers()
+            if len(live) > 1:
+                victim = max(live, key=lambda w: w.load()).name
+                orch.kill(victim)
+                print(f"[fleet] killed {victim} at step {step_i}; sealed KV "
+                      f"migrated under the tenant key domains")
+        orch.step()
+        step_i += 1
+    stats = orch.fleet_stats()
+    wall = time.monotonic() - t0
+
+    gs = gateway.stats
+    fs = orch.stats
+    print(f"served {stats.total_requests} requests / {stats.total_tokens} "
+          f"tokens in {wall:.2f}s "
+          f"[fleet={args.workers}x{args.tee}, kv={args.kv_backend}]")
+    print(f"throughput {stats.throughput_tps:.1f} tok/s | next-token latency "
+          f"p50 {stats.p50_latency_s * 1e3:.1f}ms "
+          f"mean {stats.mean_latency_s * 1e3:.1f}ms "
+          f"p99 {stats.p99_latency_s * 1e3:.1f}ms")
+    print(f"fleet: {gs.attested_workers} workers attested / "
+          f"{gs.rejected_quotes} quote rejections / "
+          f"{gs.keys_released} tenant keys released / "
+          f"{gs.envelopes} prompt envelopes ({gs.envelope_bytes} B)")
+    print(f"migration: {fs.migrations} sealed moves / "
+          f"{fs.migrated_bytes} B migrated / {fs.kills} kills, "
+          f"{fs.drains} drains, {fs.requeued} requeued")
+    if stats.rejected_infeasible:
+        print(f"admission control: {stats.rejected_infeasible} "
+              f"infeasible rejections")
+    if stats.handoffs:
+        print(f"sealed handoff: {stats.handoffs} prefill->decode handoffs / "
+              f"{stats.handoff_bytes} B across the plan boundary "
+              f"({stats.handoff_bytes // max(stats.handoffs, 1)} B/handoff)")
+    tot = orch.channel_totals()
+    print(f"fleet boundary: {tot['messages_out']} egress frames / "
+          f"{tot['tokens_out']} tokens, "
+          f"{tot['seal_events']} seals / {tot['seal_bytes']} B out, "
+          f"{tot['restore_events']} restores / {tot['restore_bytes']} B back")
 
 
 def main():
@@ -134,7 +253,38 @@ def main():
                     help="disaggregate prefill onto its own compute plan; "
                          "finished KV rows hand off to the decode plan "
                          "through a sealed channel priced in ChannelStats")
+    ap.add_argument("--handoff-batch", type=int, default=1,
+                    help="finished prefill rows grouped per sealed "
+                         "prefill->decode crossing (--prefill-plan dedicated)")
+    ap.add_argument("--reject-infeasible", action="store_true",
+                    help="reject deadline-infeasible requests at admission, "
+                         "before any boundary crossing is spent on them")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds (stamped on every "
+                         "generated request)")
+    ap.add_argument("--step-time-hint-ms", type=float, default=None,
+                    help="prior lower bound on decode step time for "
+                         "--reject-infeasible before any step has run")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="fleet mode: N engine workers (own TrustDomain "
+                         "each) behind an attested gateway + orchestrator "
+                         "(0 = single-engine path)")
+    ap.add_argument("--tenants", type=int, default=2, metavar="M",
+                    help="fleet mode: round-robin requests over M tenant "
+                         "key domains")
+    ap.add_argument("--placement", default="least_loaded",
+                    choices=["least_loaded", "tenant_affinity"],
+                    help="fleet placement policy")
+    ap.add_argument("--kill-worker-at", type=int, default=None, metavar="STEP",
+                    help="fleet mode: kill the busiest worker at this step; "
+                         "its sealed KV migrates to survivors")
     args = ap.parse_args()
+    args.step_time_hint_s = (None if args.step_time_hint_ms is None
+                             else args.step_time_hint_ms * 1e-3)
+
+    if args.workers and args.mesh is not None:
+        raise SystemExit("--workers (fleet mode) and --mesh are mutually "
+                         "exclusive: a mesh spans one engine")
 
     if args.mesh is not None:
         dp, tp = parse_mesh(args.mesh)
@@ -153,6 +303,10 @@ def main():
     model = build_model(cfg)
     params = model.init_params(jax.random.key(0))
 
+    if args.workers:
+        serve_fleet(args, cfg, model, params)
+        return
+
     td = TrustDomain(args.tee)
     if td.confidential:
         sealed = td.seal_params(params)
@@ -163,38 +317,13 @@ def main():
         print(f"[{args.tee}] attested; model digest bound "
               f"({quote.measurement[:16]}...)")
 
-    engine = Engine(model, params, max_slots=args.slots, max_len=args.max_len,
-                    prefill_len=args.prefill_len,
-                    prefill_buckets=args.prefill_buckets, trust_domain=td,
-                    kv_backend=args.kv_backend, page_size=args.page_size,
-                    num_pages=args.num_pages,
-                    prefix_sharing=args.prefix_sharing,
-                    kv_alloc=args.kv_alloc, mesh=args.mesh,
-                    continuous_batching=args.continuous_batching,
-                    step_tokens=args.step_tokens,
-                    prefill_plan=args.prefill_plan)
+    engine = Engine(model, params, trust_domain=td, mesh=args.mesh,
+                    **engine_kwargs(args))
     if args.mesh is not None:
         print(f"[mesh] engine spans {engine.plan.describe()}")
-    rng = np.random.default_rng(0)
-    shared_head = rng.integers(
-        1, min(cfg.vocab_size, 200),
-        min(args.shared_prefix_len, args.prefill_len)).astype(np.int32)
     t0 = time.monotonic()
-    for i in range(args.requests):
-        prompt = rng.integers(1, min(cfg.vocab_size, 200),
-                              args.prefill_len).astype(np.int32)
-        prompt[:len(shared_head)] = shared_head   # common K-token opening
-        priority = 0
-        if args.priority_mix is not None:
-            prios, weights = args.priority_mix
-            priority = int(rng.choice(prios, p=weights))
-        sp = SamplingParams(temperature=args.sample_temp, top_k=args.top_k,
-                            top_p=args.top_p,
-                            seed=None if args.seed is None else args.seed + i)
-        engine.submit(GenerationRequest(
-            prompt=prompt, max_new_tokens=args.max_new_tokens,
-            priority=priority, params=sp,
-            frame=FramePolicy(coalesce=args.coalesce)))
+    for gen in build_requests(args, cfg):
+        engine.submit(gen)
     stats = engine.run()
     wall = time.monotonic() - t0
 
@@ -216,10 +345,15 @@ def main():
               f"{ch.seal_bytes} B out ({ch.seal_bytes_per_event:.0f} B/seal), "
               f"{ch.restore_events} restores / {ch.restore_bytes} B back "
               f"[kv={args.kv_backend}]")
+    if stats.rejected_infeasible:
+        print(f"admission control: {stats.rejected_infeasible} "
+              f"infeasible rejections (deadline unmeetable at submit)")
     if stats.handoffs:
         print(f"sealed handoff: {stats.handoffs} prefill->decode handoffs / "
               f"{stats.handoff_bytes} B across the plan boundary "
-              f"({stats.handoff_bytes // max(stats.handoffs, 1)} B/handoff)")
+              f"({stats.handoff_bytes // max(stats.handoffs, 1)} B/handoff, "
+              f"{engine.handoff_crossings} sealed crossings @ "
+              f"batch={args.handoff_batch})")
     if args.continuous_batching:
         print(f"continuous batching: step budget "
               f"{engine._step_tokens} tokens, "

@@ -19,8 +19,9 @@ Typical use::
 """
 
 from repro.runtime.api import (FINISH_ABORTED, FINISH_DROPPED, FINISH_LENGTH,
-                               FINISH_STOP, FramePolicy, GenerationRequest,
-                               RequestOutput, SamplingParams)
+                               FINISH_REJECTED, FINISH_STOP, FramePolicy,
+                               GenerationRequest, RequestOutput,
+                               SamplingParams)
 from repro.runtime.engine import Engine
 from repro.runtime.kvcache import (KVBackend, ShardedKVBackend,
                                    SlotDenseBackend, SlotState, make_backend)
@@ -30,7 +31,8 @@ from repro.runtime.scheduler import (Request, Scheduler, ServeStats,
                                      stats_from_requests)
 
 __all__ = [
-    "FINISH_ABORTED", "FINISH_DROPPED", "FINISH_LENGTH", "FINISH_STOP",
+    "FINISH_ABORTED", "FINISH_DROPPED", "FINISH_LENGTH", "FINISH_REJECTED",
+    "FINISH_STOP",
     "FramePolicy", "GenerationRequest", "RequestOutput", "SamplingParams",
     "Engine", "KVBackend", "ShardedKVBackend", "SlotDenseBackend",
     "SlotState", "make_backend",

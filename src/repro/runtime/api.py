@@ -37,6 +37,7 @@ FINISH_LENGTH = "length"     # hit max_new_tokens
 FINISH_STOP = "stop"         # emitted eos_id
 FINISH_DROPPED = "dropped"   # deadline passed while queued (on_deadline="drop")
 FINISH_ABORTED = "aborted"   # deadline passed mid-flight (on_deadline="abort")
+FINISH_REJECTED = "rejected"  # refused at ingest: deadline provably unmeetable
 
 
 @dataclasses.dataclass
@@ -184,6 +185,12 @@ class GenerationRequest:
     on_deadline: str = "serve"         # "serve" | "drop" | "abort"
     share_prefix: bool = True
     on_token: Optional[TokenCallback] = None
+    # Which tenant's key domain this request's sealed KV and egress frames
+    # live in (fleet serving). None = the worker's own domain — the
+    # single-engine default, byte-identical to pre-fleet behavior. The
+    # gateway sets it; a tenant can't choose another tenant's domain because
+    # the domain key itself never leaves the attested workers.
+    tenant: Optional[str] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)

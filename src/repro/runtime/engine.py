@@ -85,8 +85,10 @@ All device compute is jitted once per shape; decode donates the cache.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
+    Tuple
 
 import jax
 import jax.numpy as jnp
@@ -110,9 +112,17 @@ Params = Any
 
 @dataclasses.dataclass
 class PreemptedRequest:
-    """A sealed-out request waiting for a slot: KV pages as ciphertext only."""
+    """A sealed-out request waiting for a slot: KV pages as ciphertext only.
+
+    ``key``/``prefix`` override the engine defaults at restore time — set on
+    cross-worker *migrants* (fleet drain/failure), whose blobs are sealed
+    under a fleet-shared tenant key domain in a ``kvmigrate/{worker}/...``
+    nonce namespace instead of this worker's own key and ``kvslot/`` space.
+    ``None`` means the ordinary local-preemption defaults."""
     sealed: Dict[str, Any]
     req: Request
+    key: Optional[Any] = None
+    prefix: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -183,7 +193,10 @@ class Engine:
                  admission_order: str = "slack",
                  continuous_batching: bool = False,
                  step_tokens: Optional[int] = None,
-                 prefill_plan: Optional[Any] = None):
+                 prefill_plan: Optional[Any] = None,
+                 handoff_batch: int = 1,
+                 reject_infeasible: bool = False,
+                 step_time_hint_s: Optional[float] = None):
         """``prefill_buckets`` supersedes the v1 single static ``prefill_len``
         (kept as the default one-bucket config for compatibility). Buckets
         should be powers of two; each distinct (rows, bucket) prefill shape
@@ -235,7 +248,22 @@ class Engine:
         decouples prefill from the decode step, so there is no shared
         per-step budget to split. Decoded outputs are byte-identical under
         every mode — admission timing and boundary accounting are all that
-        move."""
+        move.
+
+        ``handoff_batch`` (disaggregated engines only) amortizes the sealed
+        prefill->decode handoff: up to N finished prefill rows cross the
+        plan boundary per sealed crossing (Insight 10 — the fixed
+        per-crossing cost divides by N). The default 1 keeps one crossing
+        per row, byte- and accounting-identical to v6.
+
+        ``reject_infeasible`` turns on admission-time deadline feasibility:
+        a request whose ``deadline_s`` is provably unmeetable — serial
+        decode steps it needs plus queued work ahead, priced at the
+        *fastest* observed (or ``step_time_hint_s``-modeled, e.g.
+        ``overheads.predict(...).t_tee_s``) step time — is refused at
+        ingest with ``finish_reason="rejected"`` before its prompt crosses
+        the boundary or holds a stream, instead of burning prefill compute
+        only to be aborted mid-decode."""
         self.model = model
         if plan is not None and mesh is not None:
             raise ValueError("pass mesh= or plan=, not both")
@@ -320,6 +348,21 @@ class Engine:
         self._budget_left: Optional[int] = None
         self._inflight: Dict[int, InflightPrefill] = {}
         self.backfills = 0   # out-of-order budget-backfill admissions
+        self._handoff_batch = int(handoff_batch)
+        if self._handoff_batch < 1:
+            raise ValueError(f"handoff_batch must be >= 1, got {handoff_batch}")
+        if self._handoff_batch > 1 and prefill_plan is None:
+            raise ValueError(
+                "handoff_batch only applies to disaggregated engines "
+                "(prefill_plan=...) — there is no plan boundary to amortize")
+        self.handoff_crossings = 0   # sealed plan-boundary crossings (each
+                                     # carries up to handoff_batch rows)
+        # -- admission-time deadline feasibility ---------------------------
+        self._reject_infeasible = reject_infeasible
+        self._step_time_hint_s = step_time_hint_s
+        self._step_floor: Optional[float] = None  # fastest observed step
+        # -- fleet migration -----------------------------------------------
+        self._draining = False
 
     @property
     def slots(self) -> SlotState:
@@ -334,6 +377,10 @@ class Engine:
             raise TypeError(
                 "submit takes a GenerationRequest (repro.runtime.api); the "
                 "v2 kwargs form was removed in v4 — build a request object")
+        if self._draining:
+            raise RuntimeError(
+                "engine is draining (drain()/export_sealed_state was "
+                "called); route new work to another worker")
         gen = request
         gen.validate(self._vocab)
         # worst-case KV positions: the padded prefill bucket (or the full
@@ -361,6 +408,12 @@ class Engine:
                 f"but the {self.kv.name} backend serves at most "
                 f"{self.kv.request_capacity} (max_len={self.max_len}); "
                 f"shorten the prompt or raise max_len")
+        # deadline feasibility, decided BEFORE the prompt crosses the
+        # boundary or a stream is held: a rejected request must cost the
+        # domain nothing (no ingress message, no egress stream, no slot).
+        rejected = self._reject_if_infeasible(gen)
+        if rejected is not None:
+            return rejected
         gen.prompt = self.td.ingress(gen.prompt)
         req = self.scheduler.submit(gen)
         req.kv_need = eff_need
@@ -433,6 +486,51 @@ class Engine:
         resident = self.kv.resident_pages(req.page_keys)
         return max(0, bucket - resident * self.kv.page_size) \
             + self.kv.page_size
+
+    # -- admission-time deadline feasibility -----------------------------------
+    def _step_time_lower(self) -> Optional[float]:
+        """A defensible lower bound on one engine step's wall time: the
+        fastest step observed so far (first-step compile time can only
+        *raise* individual samples, never lower the min) and/or the modeled
+        hint (``overheads.predict(...).t_tee_s``), whichever is smaller.
+        None until either exists — feasibility then never rejects."""
+        cands = [c for c in (self._step_floor, self._step_time_hint_s)
+                 if c is not None]
+        return min(cands) if cands else None
+
+    def _reject_if_infeasible(self, gen: GenerationRequest
+                              ) -> Optional[Request]:
+        """Refuse ``gen`` at ingest when its deadline is provably unmeetable:
+        even at the fastest step time, the serial steps it needs (one
+        prefill dispatch, chunked prompt-tail feeds, one decode step per
+        output token after the prefill-produced first) plus the queue ahead
+        of it (optimistically packed across all slots — a lower bound)
+        already exceed ``deadline_s``. Returns the finished rejected
+        :class:`Request` (``finish_reason="rejected"``), or None to admit
+        normally. Estimation is deliberately one-sided: a request this
+        rejects would have been aborted mid-decode after consuming prefill
+        compute and sealed-KV bandwidth."""
+        if not self._reject_infeasible or gen.deadline_s is None:
+            return None
+        lo = self._step_time_lower()
+        if lo is None:
+            return None
+        bucket = self._bucket_for(len(gen.prompt))
+        tail = max(0, len(gen.prompt) - bucket)
+        own_steps = 1 + tail + (gen.max_new_tokens - 1)
+        ahead = sum(r.max_new_tokens for _, _, r in self.scheduler.queue)
+        ahead += sum(max(0, r.max_new_tokens - len(r.output))
+                     for r in self.scheduler.running.values())
+        ahead += sum(max(0, p.req.max_new_tokens - len(p.req.output))
+                     for p in self._preempted)
+        est = lo * (own_steps + ahead / max(1, self.max_slots))
+        if est <= gen.deadline_s:
+            return None
+        req = self.scheduler.reject(gen)
+        self.td._log("reject_infeasible",
+                     f"rid={req.rid} est>={est:.4f}s "
+                     f"deadline={gen.deadline_s}s step_lo={lo:.6f}s")
+        return req
 
     # -- sampling plumbing -----------------------------------------------------
     def _base_key(self, req: Request) -> np.ndarray:
@@ -625,8 +723,9 @@ class Engine:
             # bugs (asserts, refcount underflows) must still surface.
             try:
                 self.kv.discard_sealed(
-                    self.td.sealing_key, p.sealed,
-                    f"kvslot/{p.req.stream_id}/{p.req.seal_epoch - 1}")
+                    p.key or self.td.sealing_key, p.sealed,
+                    p.prefix
+                    or f"kvslot/{p.req.stream_id}/{p.req.seal_epoch - 1}")
             except (IntegrityError, ValueError):
                 pass
             self.scheduler.finish_detached(p.req)
@@ -826,36 +925,62 @@ class Engine:
             admitted += 1
         return admitted
 
-    def _handoff_ready(self) -> None:
-        """Consume prefill-stream work dispatched at the previous step: each
-        finished request's KV rows cross from the prefill plan to the decode
-        plan as a seal/unseal pair — the disaggregation boundary, accounted
-        in ``ChannelStats`` sealed bytes exactly like a preemption — and the
-        request enters the decode phase."""
-        for slot in sorted(self._inflight):
-            self._complete_handoff(self._inflight.pop(slot))
+    def _handoff_key(self, inf: InflightPrefill) -> tuple:
+        """Handoff consumption order mirrors the admission queue's: tightest
+        slack first (static absolute deadline, priority tiebreak) under the
+        default order, pure priority otherwise — NOT slot order, which is an
+        arrival-order artifact. A tight-deadline request admitted one slot
+        later still gets its first token (and its decode phase) first."""
+        r = inf.req
+        if self.scheduler.order == "slack":
+            return (r.abs_deadline, -r.priority, r.rid)
+        return (-r.priority, r.rid)
 
-    def _complete_handoff(self, inf: InflightPrefill) -> None:
-        req, slot, bucket = inf.req, inf.slot, inf.bucket
-        # one handoff per stream, ever (restores after preemption use the
-        # kvslot/ namespace), so the stream id alone keeps nonces fresh.
-        prefix = f"kvhandoff/{req.stream_id}"
-        sealed = seal_tree(self.td.sealing_key, inf.cache, prefix=prefix)
-        nb = sealed_nbytes(sealed)
-        req.n_handoffs += 1
-        req.handoff_bytes += nb
-        self.td.record_seal(nb, len(sealed),
-                            f"handoff slot={slot} rid={req.rid} "
-                            f"stream={req.stream_id} bucket={bucket}")
-        restored = unseal_tree(self.td.sealing_key, sealed,
-                               self.model.abstract_cache(1, self.max_len),
-                               prefix=prefix)
-        self.td.record_restore(nb, len(sealed),
-                               f"handoff slot={slot} rid={req.rid}")
-        keys = [req.page_keys] if self.kv.supports_sharing else None
-        self.kv.insert_prefill(restored, [slot], bucket, page_keys=keys)
-        first_np = self._first_tokens(inf.logits, [req], 1)
-        self._start_decode(slot, req, int(first_np[0]), bucket)
+    def _handoff_ready(self) -> None:
+        """Consume prefill-stream work dispatched at the previous step:
+        finished requests' KV rows cross from the prefill plan to the decode
+        plan as seal/unseal pairs — the disaggregation boundary, accounted
+        in ``ChannelStats`` sealed bytes exactly like a preemption — and the
+        requests enter the decode phase. Up to ``handoff_batch`` rows ride
+        each sealed crossing (slack-ordered groups), so the fixed
+        per-crossing cost amortizes across the group (Insight 10)."""
+        order = sorted(self._inflight.values(), key=self._handoff_key)
+        self._inflight.clear()
+        for i in range(0, len(order), self._handoff_batch):
+            self._complete_handoff(order[i:i + self._handoff_batch])
+
+    def _complete_handoff(self, group: List[InflightPrefill]) -> None:
+        # Each row seals under its own kvhandoff/{stream} namespace (one
+        # handoff per stream, ever — restores after preemption use kvslot/ —
+        # so the stream id alone keeps nonces fresh), but the whole group
+        # crosses the plan boundary as ONE message: one seal event and one
+        # restore event carry the group's total payload.
+        sealed_rows = []
+        total_nb = total_tensors = 0
+        for inf in group:
+            prefix = f"kvhandoff/{inf.req.stream_id}"
+            sealed = seal_tree(self.td.sealing_key, inf.cache, prefix=prefix)
+            nb = sealed_nbytes(sealed)
+            inf.req.n_handoffs += 1
+            inf.req.handoff_bytes += nb
+            total_nb += nb
+            total_tensors += len(sealed)
+            sealed_rows.append((inf, prefix, sealed))
+        self.handoff_crossings += 1
+        rids = ",".join(str(inf.req.rid) for inf in group)
+        self.td.record_seal(total_nb, total_tensors,
+                            f"handoff x{len(group)} rids={rids}")
+        self.td.record_restore(total_nb, total_tensors,
+                               f"handoff x{len(group)} rids={rids}")
+        for inf, prefix, sealed in sealed_rows:
+            req, slot, bucket = inf.req, inf.slot, inf.bucket
+            restored = unseal_tree(self.td.sealing_key, sealed,
+                                   self.model.abstract_cache(1, self.max_len),
+                                   prefix=prefix)
+            keys = [req.page_keys] if self.kv.supports_sharing else None
+            self.kv.insert_prefill(restored, [slot], bucket, page_keys=keys)
+            first_np = self._first_tokens(inf.logits, [req], 1)
+            self._start_decode(slot, req, int(first_np[0]), bucket)
 
     def _preempt_for(self, incoming: Request) -> bool:
         """Free capacity for ``incoming`` by preempting the lowest-priority
@@ -960,7 +1085,8 @@ class Engine:
                             best.req.kv_need,
                             n_pages=best.req.sealed_pages or None):
                         self._preempted.remove(best)
-                        self.restore_slot(best.sealed, best.req)
+                        self.restore_slot(best.sealed, best.req,
+                                          key=best.key, prefix=best.prefix)
                         continue
             if (self.scheduler.queue and self.slots.free
                     and (self._admit_continuous() if self._continuous
@@ -1036,6 +1162,7 @@ class Engine:
         admission/restoration/preemption, then one batched decode step.
         Returns number of *output* tokens produced (prompt-chunk feeding
         steps count zero)."""
+        t0 = time.monotonic()
         if self._inflight:
             self._handoff_ready()
         if self._step_tokens is not None:
@@ -1081,6 +1208,11 @@ class Engine:
             self._emit_token(slot, int(next_np[slot]))
             produced += 1
         self._drain_kv_events()
+        # feasibility floor: only steps that actually decoded count (an
+        # empty tick would fake an impossibly fast step and over-reject)
+        dt = time.monotonic() - t0
+        if self._step_floor is None or dt < self._step_floor:
+            self._step_floor = dt
         return produced
 
     @property
@@ -1118,7 +1250,9 @@ class Engine:
         # stream cipher must never encrypt two plaintexts under one nonce.
         return f"kvslot/{req.stream_id}/{req.seal_epoch}"
 
-    def seal_slot(self, slot: int) -> Tuple[Dict[str, Any], Request]:
+    def seal_slot(self, slot: int, *, key=None,
+                  prefix: Optional[str] = None) -> Tuple[Dict[str, Any],
+                                                         Request]:
         """Evict a running slot: returns (sealed_cache_dict, request). Any
         not-yet-prefilled prompt tail travels on ``request.pending_input``
         and not-yet-flushed egress tokens stay buffered on the request.
@@ -1127,17 +1261,34 @@ class Engine:
         resident remainder is encrypted now, and the already-sealed tail
         blob rides along in the returned dict (its distinct epoch prefix
         keeps the nonce namespaces apart); ``restore_slot`` reassembles
-        both."""
+        both.
+
+        ``key``/``prefix`` override the worker defaults for cross-worker
+        migration: the blob seals under a fleet-shared tenant key domain in
+        a caller-supplied (worker-name-embedding) nonce namespace. Callers
+        overriding the key must not have a paused tail on the slot — that
+        earlier blob is under THIS worker's key and cannot cross
+        (``export_sealed_state`` reunites it first)."""
         paused = self._paused.pop(slot, None)
         req = self.scheduler.running.pop(slot)
-        prefix = self._seal_prefix(req)
+        assert paused is None or key is None, \
+            "cannot migration-seal a paused slot: its tail blob is local"
+        # a key override means the blob leaves this worker: shared pages
+        # must seal by VALUE (detach) — a by-reference entry resolves
+        # against THIS pool's content index / parked blobs, which the
+        # destination does not have
+        detach = key is not None and getattr(self.kv, "supports_sharing",
+                                             False)
+        key = key if key is not None else self.td.sealing_key
+        prefix = prefix if prefix is not None else self._seal_prefix(req)
         if self.kv.supports_partial:
             # what an on-demand restore must find free: the resident pages
             # plus any earlier-sealed tail riding along (shared pages may
             # re-link for less — this is the conservative bound).
             req.sealed_pages = (self.kv.allocated_pages(slot)
                                 + (paused.n_pages if paused else 0))
-        sealed = self.kv.seal(self.td.sealing_key, slot, prefix)
+        sealed = (self.kv.seal(key, slot, prefix, detach=True) if detach
+                  else self.kv.seal(key, slot, prefix))
         req.seal_epoch += 1
         nb = sealed_nbytes(sealed)   # the paused tail was recorded at its seal
         req.sealed_bytes += nb
@@ -1151,26 +1302,30 @@ class Engine:
         self._drain_kv_events()
         return sealed, req
 
-    def restore_slot(self, sealed, req: Request) -> int:
+    def restore_slot(self, sealed, req: Request, *, key=None,
+                     prefix: Optional[str] = None) -> int:
         """Re-admit a sealed-out request into a free slot. On-demand pools
         acquire without a pledge (the restore's page takes were gated by
         ``can_restore(n_pages=...)``); reservation pools re-reserve the
-        effective worst case."""
+        effective worst case. ``key``/``prefix`` override the worker
+        defaults when the blob is a cross-worker migrant (sealed under a
+        fleet-shared tenant domain in a ``kvmigrate/`` namespace)."""
         slot = self.kv.acquire(req.rid,
                                0 if self.kv.on_demand else req.kv_need)
         if slot is None:
             raise RuntimeError("no free slot/KV room to restore into")
-        prefix = f"kvslot/{req.stream_id}/{req.seal_epoch - 1}"
+        key = key if key is not None else self.td.sealing_key
+        if prefix is None:
+            prefix = f"kvslot/{req.stream_id}/{req.seal_epoch - 1}"
         try:
-            self.kv.restore(self.td.sealing_key, sealed, slot, prefix,
-                            req.kv_need)
+            self.kv.restore(key, sealed, slot, prefix, req.kv_need)
             # a sealed-while-paused eviction carries its earlier tail blob
             # under an older epoch prefix (and, under a mesh, shard suffix);
             # graft it back on top of the remainder (acquire() above already
             # reserved the full need).
             for gprefix, gsuffix in tail_blob_names(sealed):
                 self.kv.restore_tail_pages(
-                    self.td.sealing_key, sealed, slot, gprefix,
+                    key, sealed, slot, gprefix,
                     reserve=False, suffix=gsuffix)
         except Exception:
             self.kv.release(slot)   # a failed (e.g. tampered) restore must
@@ -1178,7 +1333,7 @@ class Engine:
         # the WHOLE restore succeeded: only now are this sealed dict's
         # shared-page references spent (a rolled-back restore must leave
         # _sealed_refs and parked ciphertext intact for co-sharers)
-        self.kv.discard_sealed(self.td.sealing_key, sealed, prefix)
+        self.kv.discard_sealed(key, sealed, prefix)
         self.scheduler.running[slot] = req
         self._active_mask[slot] = True
         self._set_slot_sampling(slot, req)
@@ -1214,6 +1369,107 @@ class Engine:
                             f"slot={slot} rid={req.rid} partial "
                             f"pages={n_pages}")
         self._paused[slot] = PausedSlot(sealed, prefix, n_pages)
+
+    # -- fleet: drain + sealed-state migration ---------------------------------
+    def drain(self) -> None:
+        """Stop taking new work (subsequent ``submit`` raises); everything
+        already accepted keeps stepping. Pair with
+        :meth:`export_sealed_state` to move the remaining state to another
+        worker instead of finishing it here."""
+        self._draining = True
+
+    def export_sealed_state(
+            self, *,
+            key_for: Optional[Callable[[Request], Any]] = None,
+            namespace: str = "kvmigrate",
+    ) -> Tuple[List[PreemptedRequest], List[Request]]:
+        """Seal EVERY piece of live state out of this engine for adoption by
+        another — the fleet drain/failure path. Returns ``(migrants,
+        queued)``: migrants are :class:`PreemptedRequest` blobs sealed under
+        ``key_for(req)`` (the fleet passes the request's *tenant* key
+        domain, identical on every attested worker) in the
+        ``{namespace}/{stream}/{epoch}`` nonce space — the caller's
+        namespace must embed this worker's fleet-unique name, because the
+        tenant key is shared and two workers' stream ids are not distinct
+        from each other; queued requests carry no KV and move as-is.
+
+        The export is staged so the pool always has room: pending prefill
+        handoffs complete first (they become running rows), plain running
+        slots migration-seal directly, a paused slot round-trips through
+        this worker's own seal/restore to reunite its resident head with
+        its locally-sealed tail before migrating whole, and already-
+        preempted blobs restore into the (by then free) slots and re-seal
+        under the export key. Every crossing is priced in ``ChannelStats``
+        like any other seal/restore; per-request
+        ``n_migrations``/``migrated_bytes`` roll up into
+        ``ServeStats.migrations``/``migrated_bytes``."""
+        self._draining = True
+        if key_for is None:
+            key_for = lambda req: self.td.sealing_key  # noqa: E731
+        if self._inflight:
+            self._handoff_ready()
+        migrants: List[PreemptedRequest] = []
+
+        def _migrate(slot: int) -> None:
+            req = self.scheduler.running[slot]
+            key = key_for(req)
+            prefix = f"{namespace}/{req.stream_id}/{req.seal_epoch}"
+            sealed, req = self.seal_slot(slot, key=key, prefix=prefix)
+            nb = sealed_nbytes(sealed)
+            req.n_migrations += 1
+            req.migrated_bytes += nb
+            self.td._log("migrate_out", f"rid={req.rid} {nb}B {prefix}")
+            self.td.close_stream(req.stream_id)
+            migrants.append(PreemptedRequest(sealed, req, key=key,
+                                             prefix=prefix))
+
+        while self.scheduler.running:
+            slot = next((s for s in self.scheduler.running
+                         if s not in self._paused), None)
+            if slot is None:
+                # every survivor is paused: its sealed tail is under THIS
+                # worker's key and cannot cross. Whole-seal (grafts the
+                # tail along) then restore — the standard reassembly path —
+                # and migrate the reunited slot.
+                slot = next(iter(self._paused))
+                sealed, req = self.seal_slot(slot)
+                slot = self.restore_slot(sealed, req)
+            _migrate(slot)
+        # already-sealed preempted blobs: local key/namespace — bring each
+        # back through a now-free slot and re-seal under the export key
+        while self._preempted:
+            p = self._preempted.pop(0)
+            slot = self.restore_slot(p.sealed, p.req, key=p.key,
+                                     prefix=p.prefix)
+            _migrate(slot)
+        queued = [req for _, _, req in sorted(self.scheduler.queue)]
+        self.scheduler.queue.clear()
+        for req in queued:
+            self.td.close_stream(req.stream_id)
+        return migrants, queued
+
+    def import_sealed_state(self, migrants: Sequence[PreemptedRequest],
+                            queued: Sequence[Request] = ()) -> None:
+        """Adopt another worker's exported state. Requests keep their object
+        identity — the caller's handle finishes here, byte-identically
+        (seeded sampling; output/penalty history travel on the request) —
+        but get fresh rids (this scheduler's numbering) and fresh egress
+        streams on this engine's channel. Migrants join the sealed-restore
+        queue and re-enter through the ordinary slack/priority admission
+        gates; their first local re-seal (if any) falls back to this
+        worker's own key and ``kvslot/`` namespace."""
+        for p in migrants:
+            p.req.rid = self.scheduler._next_rid
+            self.scheduler._next_rid += 1
+            p.req.stream_id = self.td.open_stream()
+            self.td._log("migrate_in", f"rid={p.req.rid} {p.prefix}")
+            self._preempted.append(p)
+        for req in queued:
+            req.rid = self.scheduler._next_rid
+            self.scheduler._next_rid += 1
+            req.stream_id = self.td.open_stream()
+            heapq.heappush(self.scheduler.queue,
+                           (self.scheduler._key(req), req.rid, req))
 
     # -- convenience -----------------------------------------------------------
     def generate(self, request: GenerationRequest) -> RequestOutput:

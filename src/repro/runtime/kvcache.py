@@ -621,9 +621,10 @@ class ShardedKVBackend:
                     return m.group(0)
         return ""
 
-    def seal(self, key, slot, prefix, suffix=None):
+    def seal(self, key, slot, prefix, suffix=None, detach=False):
+        kw = {"detach": detach} if detach else {}
         return self.inner.seal(key, slot, prefix,
-                               suffix=suffix or self._suffix_for(slot))
+                               suffix=suffix or self._suffix_for(slot), **kw)
 
     def restore(self, key, sealed, slot, prefix, n_tokens, suffix=None):
         if suffix is None:

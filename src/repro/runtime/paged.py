@@ -587,10 +587,23 @@ class PagedKVBackend(KVBackend):
             (shared if p in self._page_key else private).append(j)
         return shared, private
 
-    def seal(self, key, slot, prefix, suffix="") -> Dict[str, SealedTensor]:
+    def seal(self, key, slot, prefix, suffix="",
+             detach=False) -> Dict[str, SealedTensor]:
         self._seal_key_cache = key
         n_alloc = int(self._alloc[slot])
-        shared, private = self._split_ordinals(slot)
+        if detach:
+            # by-VALUE seal for cross-pool migration: shared pages ship as
+            # ordinary per-page ciphertext so the blob is self-contained —
+            # a destination pool has neither this pool's content index nor
+            # its parked blobs to resolve a by-reference entry against. The
+            # copies restore as private pages; sharing re-forms (if at all)
+            # through the destination's own content index. Source-side
+            # residents and refcounts are untouched: co-sharers keep their
+            # mappings, and no _sealed_refs entry is minted (there is
+            # nothing for discard_sealed to release).
+            shared, private = [], list(range(n_alloc))
+        else:
+            shared, private = self._split_ordinals(slot)
         # meta v2: [pos, n_alloc, n_shared, (ordinal, refcount) per shared
         # page]; the content keys ride in their own sealed blob. The
         # refcount is recorded at seal time (audit/diagnostic — the live

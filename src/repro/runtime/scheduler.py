@@ -60,8 +60,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.runtime.api import (FINISH_ABORTED, FINISH_DROPPED, FINISH_LENGTH,
-                               FINISH_STOP, GenerationRequest, RequestOutput,
-                               TokenCallback)
+                               FINISH_REJECTED, FINISH_STOP, GenerationRequest,
+                               RequestOutput, TokenCallback)
 
 AdmitPredicate = Callable[["Request"], bool]
 
@@ -101,6 +101,9 @@ class Request:
     handoff_bytes: int = 0  # ciphertext bytes those handoffs moved
     backfilled: bool = False  # admitted out of queue order into leftover
                               # step-token budget (continuous batching)
+    # -- fleet serving -------------------------------------------------------
+    n_migrations: int = 0   # sealed cross-worker moves (drain/failure)
+    migrated_bytes: int = 0  # ciphertext bytes those migrations carried
 
     # -- mirrors of the generation request (single source of truth: gen) ----
     @property
@@ -146,6 +149,10 @@ class Request:
         return self.finish_reason == FINISH_ABORTED
 
     @property
+    def rejected(self) -> bool:
+        return self.finish_reason == FINISH_REJECTED
+
+    @property
     def abs_deadline(self) -> float:
         """Absolute deadline (monotonic clock); inf when none. Static per
         request, which is what makes slack ordering heap-safe."""
@@ -184,12 +191,15 @@ class ServeStats:
     total_requests: int = 0
     dropped_requests: int = 0      # deadline passed while queued (on_deadline=drop)
     aborted_requests: int = 0      # terminated mid-flight (on_deadline=abort)
+    rejected_infeasible: int = 0   # refused at ingest: deadline unmeetable
     deadline_misses: int = 0       # served, but finished after deadline_s
     preemptions: int = 0           # sealed-KV evictions among served requests
     sealed_bytes: int = 0          # ciphertext bytes those evictions moved
     handoffs: int = 0              # sealed prefill->decode plan handoffs
     handoff_bytes: int = 0         # ciphertext bytes those handoffs moved
     backfilled_requests: int = 0   # admitted via continuous-batching backfill
+    migrations: int = 0            # sealed cross-worker KV moves (fleet)
+    migrated_bytes: int = 0        # ciphertext bytes those migrations carried
     shared_pages: int = 0          # page mappings served by the prefix index
     cow_copies: int = 0            # shared tail pages copied on first write
     wall_s: float = 0.0
@@ -260,6 +270,20 @@ class Scheduler:
         req = Request(self._next_rid, gen, t_submit=time.monotonic())
         self._next_rid += 1
         heapq.heappush(self.queue, (self._key(req), req.rid, req))
+        return req
+
+    def reject(self, gen: GenerationRequest) -> Request:
+        """Refuse a request at ingest (admission-time deadline feasibility):
+        the request never enters the queue, holds no stream/slot/page, and
+        finishes immediately with ``finish_reason="rejected"``. Cheaper for
+        everyone than aborting it mid-decode after it consumed prefill
+        compute and sealed-KV bandwidth."""
+        req = Request(self._next_rid, gen, t_submit=time.monotonic())
+        self._next_rid += 1
+        req.finish_reason = FINISH_REJECTED
+        req.t_done = req.t_submit
+        req.phase = "done"
+        self.dropped.append(req)
         return req
 
     def drop_expired(self, now: Optional[float] = None) -> List[Request]:
@@ -381,8 +405,10 @@ def stats_from_requests(reqs: List[Request]) -> ServeStats:
     requests count toward ``dropped_requests`` but contribute no tokens or
     latency samples — they never produced any."""
     s = ServeStats()
-    done = [r for r in reqs if r.finished and not r.dropped]
+    done = [r for r in reqs
+            if r.finished and not r.dropped and not r.rejected]
     s.dropped_requests = sum(1 for r in reqs if r.dropped)
+    s.rejected_infeasible = sum(1 for r in reqs if r.rejected)
     if not done:
         return s
     t0 = min(r.t_submit for r in done)
@@ -396,6 +422,8 @@ def stats_from_requests(reqs: List[Request]) -> ServeStats:
         s.handoffs += r.n_handoffs
         s.handoff_bytes += r.handoff_bytes
         s.backfilled_requests += int(r.backfilled)
+        s.migrations += r.n_migrations
+        s.migrated_bytes += r.migrated_bytes
         s.aborted_requests += int(r.aborted)
         s.deadline_misses += int(r.deadline_missed)
         if r.output:   # an aborted request may die before its first token

@@ -1,0 +1,400 @@
+"""Fleet-tier tests: per-tenant key domains, the attested gateway, and
+sealed-KV migration across workers.
+
+The confidentiality claims are the adversarial half: tenant key domains are
+derived (never assigned by convention), so a blob sealed for tenant A must
+fail MAC — not merely decrypt to garbage — under tenant B's domain, and a
+failed cross-tenant restore must leak no slot, page, or reservation. The
+serving claims are differential: a 2-worker fleet, and a fleet that loses a
+worker mid-decode, must reproduce byte-for-byte the tokens every request
+produces alone on an uncontended single-slot engine — placement and enclave
+loss move *where* a request decodes, never *what* it decodes.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import check_pool_invariants
+from repro.configs import smoke_config
+from repro.core import TrustDomain
+from repro.core.attestation import (AttestationError, Verifier,
+                                    derive_tenant_material)
+from repro.core.sealing import (IntegrityError, SealingKey, seal_tensor,
+                                unseal_tensor)
+from repro.fleet import (ATTESTING, DEAD, DRAINING, READY, EngineWorker,
+                         Gateway, Orchestrator)
+from repro.models import build_model
+from repro.runtime import (FINISH_REJECTED, Engine, GenerationRequest,
+                           SamplingParams)
+
+ENGINE_KW = dict(max_slots=2, max_len=64, prefill_buckets=(4, 8),
+                 kv_backend="paged", page_size=8)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def _gen(prompt, mnt=6, seed=1, tenant=None, **kw):
+    return GenerationRequest(prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=mnt,
+                             params=SamplingParams(temperature=0.9, top_k=16,
+                                                   seed=seed),
+                             tenant=tenant, **kw)
+
+
+def fleet_specs():
+    """(prompt, max_new_tokens, seed, tenant) for the canonical fleet
+    workload: six requests over two tenants, mixed prompt lengths."""
+    rng = np.random.default_rng(3)
+    return [(rng.integers(1, 100, size=int(l)).astype(np.int32),
+             6, 50 + i, "ab"[i % 2])
+            for i, l in enumerate(rng.integers(4, 12, size=6))]
+
+
+def fleet_requests():
+    return [_gen(p.copy(), mnt, seed, tenant)
+            for p, mnt, seed, tenant in fleet_specs()]
+
+
+@pytest.fixture(scope="module")
+def solo_reference(small_model):
+    """Each fleet request served alone on an uncontended single-slot
+    engine: the byte-level ground truth for every fleet replay."""
+    _, model, params = small_model
+    refs = []
+    for p, mnt, seed, _ in fleet_specs():
+        eng = Engine(model, params, max_slots=1, max_len=64,
+                     prefill_buckets=(4, 8))
+        refs.append(list(eng.generate(_gen(p.copy(), mnt, seed)).tokens))
+    return refs
+
+
+def make_fleet(model, params, n=2, tenants=("a", "b"), **orch_kw):
+    workers = [EngineWorker(f"w{i}", model, params, engine_kw=ENGINE_KW)
+               for i in range(n)]
+    gateway = Gateway(config_repr="test")
+    for t in tenants:
+        gateway.register_tenant(t)
+    orch = Orchestrator(gateway, workers, **orch_kw)
+    return gateway, orch, workers
+
+
+def assert_no_leaks(eng):
+    assert eng.slots.num_active == 0
+    assert eng.kv.free_physical_pages == eng.kv.num_pages
+    check_pool_invariants(eng.kv)
+
+
+class TestKeyDomains:
+    def test_derive_is_deterministic_and_label_separated(self):
+        k = SealingKey.generate(b"m" * 32)
+        a1, a2 = k.derive("tenant/a"), k.derive("tenant/a")
+        b = k.derive("tenant/b")
+        assert (a1.key, a1.mac_key) == (a2.key, a2.mac_key)
+        assert a1.key != b.key and a1.mac_key != b.mac_key
+        assert a1.key != k.key, "derived domain must not equal its parent"
+
+    def test_cross_domain_unseal_fails_mac(self):
+        k = SealingKey.generate(b"m" * 32)
+        blob = seal_tensor(k.derive("tenant/a"), "kv/x",
+                           np.arange(8, dtype=np.float32))
+        with pytest.raises(IntegrityError):
+            unseal_tensor(k.derive("tenant/b"), blob)
+        np.testing.assert_array_equal(
+            unseal_tensor(k.derive("tenant/a"), blob),
+            np.arange(8, dtype=np.float32))
+
+    def test_tenant_material_identical_across_attested_workers(self):
+        """Two distinct enclaves, one master: each quote-gated release must
+        land on the same per-tenant material (what lets a migrant cross),
+        while two tenants' materials are unrelated."""
+        master = b"s" * 32
+        tds = [TrustDomain("tdx"), TrustDomain("tdx")]
+        got = []
+        for td in tds:
+            v = td.make_verifier("cfg")
+            q = td.quote(v.challenge(), "cfg")
+            got.append(v.release_tenant_key(q, master, "a"))
+        assert got[0] == got[1] == derive_tenant_material(master, "a")
+        assert derive_tenant_material(master, "b") != got[0]
+
+    def test_release_gates_on_measurement_and_freshness(self):
+        td = TrustDomain("tdx")
+        bad = Verifier(td.root, "0" * 64)
+        with pytest.raises(AttestationError):
+            bad.release_tenant_key(td.quote(bad.challenge(), "cfg"),
+                                   b"s" * 32, "a")
+        v = td.make_verifier("cfg")
+        q = td.quote(v.challenge(), "cfg")
+        v.release_tenant_key(q, b"s" * 32, "a")
+        with pytest.raises(AttestationError):   # replayed quote
+            v.release_tenant_key(q, b"s" * 32, "a")
+
+
+class TestGateway:
+    def test_admit_releases_transport_and_tenant_domains(self, small_model):
+        _, model, params = small_model
+        gateway, orch, (w0, w1) = make_fleet(model, params)
+        assert w0.state == READY and w1.state == READY
+        assert gateway.stats.attested_workers == 2
+        # 3 tenants (a, b + the orchestrator's default) x 2 workers, each
+        # release on its own fresh quote
+        assert gateway.stats.keys_released == 6
+        assert w0.tenant_keys["a"].key == w1.tenant_keys["a"].key
+        assert w0.tenant_keys["a"].key != w0.tenant_keys["b"].key
+        assert w0.transport.key != w1.transport.key
+
+    def test_bad_measurement_is_rejected_dead(self, small_model):
+        _, model, params = small_model
+        w = EngineWorker("wx", model, params, engine_kw=ENGINE_KW)
+        gateway = Gateway(config_repr="test")
+        with pytest.raises(AttestationError):
+            gateway.admit(w, expected_measurement="0" * 64)
+        assert w.state == DEAD
+        assert gateway.stats.rejected_quotes == 1
+        with pytest.raises(KeyError):           # no transport key released
+            gateway.envelope_seal("wx", "a", np.arange(4, dtype=np.int32))
+
+    def test_envelope_only_opens_on_the_addressed_worker(self, small_model):
+        _, model, params = small_model
+        gateway, orch, (w0, w1) = make_fleet(model, params)
+        prompt = np.arange(1, 9, dtype=np.int32)
+        env = gateway.envelope_seal("w0", "a", prompt)
+        np.testing.assert_array_equal(w0.open_envelope(env), prompt)
+        with pytest.raises(IntegrityError):     # addressed to w0, not w1
+            w1.open_envelope(env)
+        env2 = gateway.envelope_seal("w0", "a", prompt)
+        flipped = np.array(env2.sealed_prompt.ciphertext)
+        flipped.flat[0] ^= 1                    # in-transit tamper
+        env2.sealed_prompt.ciphertext = flipped
+        with pytest.raises(IntegrityError):
+            w0.open_envelope(env2)
+
+
+class TestFleetServing:
+    def test_two_worker_fleet_matches_solo(self, small_model,
+                                           solo_reference):
+        _, model, params = small_model
+        _, orch, workers = make_fleet(model, params)
+        handles = [orch.submit(g) for g in fleet_requests()]
+        orch.run()
+        assert [list(h.output) for h in handles] == solo_reference
+        for w in workers:
+            assert_no_leaks(w.engine)
+        assert orch.stats.migrations == 0
+
+    def test_kill_worker_mid_decode_byte_identical(self, small_model,
+                                                   solo_reference):
+        """The acceptance scenario: force a worker failure mid-decode and
+        every in-flight request still completes byte-identically on the
+        survivor, with the migration priced in both FleetStats and the
+        surviving worker's ChannelStats."""
+        _, model, params = small_model
+        _, orch, workers = make_fleet(model, params)
+        handles = [orch.submit(g) for g in fleet_requests()]
+        for _ in range(3):                      # both workers mid-decode
+            orch.step()
+        victim = max(orch.ready_workers(), key=lambda w: w.load())
+        survivor = next(w for w in workers if w is not victim)
+        assert any(not h.finished for h in handles)
+        ch0 = survivor.td.channel.stats.restore_events
+        orch.kill(victim.name)
+        assert victim.state == DEAD
+        stats = orch.run()
+        assert [list(h.output) for h in handles] == solo_reference
+        assert orch.stats.migrations > 0
+        assert orch.stats.migrated_bytes > 0
+        assert stats.migrations == orch.stats.migrations
+        assert stats.migrated_bytes == orch.stats.migrated_bytes
+        # the migrants' sealed restores landed on the survivor's boundary
+        assert survivor.td.channel.stats.restore_events > ch0
+        assert_no_leaks(survivor.engine)
+
+    def test_kill_with_prefix_sharing_backend(self, small_model):
+        """Migration off a prefix-sharing pool: a by-reference shared-page
+        entry only resolves against the SOURCE pool's content index and
+        parked blobs, so migration seals detach (by value). The blob is
+        self-contained on the survivor, outputs stay byte-identical, and
+        neither pool leaks pages."""
+        _, model, params = small_model
+        kw = dict(max_slots=2, max_len=96, prefill_buckets=(32,),
+                  kv_backend="paged", page_size=8, prefix_sharing=True)
+        rng = np.random.default_rng(5)
+        head = rng.integers(1, 100, 24).astype(np.int32)
+        specs = [(np.concatenate([head,
+                                  rng.integers(1, 100, 8).astype(np.int32)]),
+                  6, 70 + i, "ab"[i % 2]) for i in range(4)]
+        solo = []
+        for p, mnt, seed, _ in specs:
+            eng = Engine(model, params, max_slots=1, max_len=96,
+                         prefill_buckets=(32,))
+            solo.append(list(eng.generate(_gen(p.copy(), mnt, seed)).tokens))
+        workers = [EngineWorker(f"w{i}", model, params, engine_kw=kw)
+                   for i in range(2)]
+        gateway = Gateway(config_repr="test")
+        gateway.register_tenant("a")
+        gateway.register_tenant("b")
+        orch = Orchestrator(gateway, workers, placement="tenant_affinity")
+        handles = [orch.submit(_gen(p.copy(), mnt, seed, tenant))
+                   for p, mnt, seed, tenant in specs]
+        for _ in range(3):
+            orch.step()
+        victim = max(orch.ready_workers(), key=lambda w: w.load())
+        orch.kill(victim.name)
+        orch.run()
+        assert [list(h.output) for h in handles] == solo
+        assert orch.stats.migrations > 0
+        for w in workers:
+            assert_no_leaks(w.engine)
+
+    def test_drain_then_respawn(self, small_model, solo_reference):
+        _, model, params = small_model
+        _, orch, workers = make_fleet(
+            model, params,
+            worker_factory=lambda name: EngineWorker(
+                name, model, params, engine_kw=ENGINE_KW))
+        handles = [orch.submit(g) for g in fleet_requests()]
+        for _ in range(2):
+            orch.step()
+        orch.drain("w0")
+        assert workers[0].state == DEAD
+        assert orch.stats.drains == 1
+        orch.run()
+        assert [list(h.output) for h in handles] == solo_reference
+        spawned = orch.respawn("w0")            # a NEW enclave, re-attested
+        assert spawned is not workers[0]
+        assert spawned.state == READY
+        assert spawned.tenant_keys["a"].key == \
+            workers[1].tenant_keys["a"].key
+        h = orch.submit(_gen(np.arange(1, 6, dtype=np.int32), tenant="a"))
+        orch.run()
+        assert h.finished
+
+    def test_worker_state_machine(self, small_model):
+        _, model, params = small_model
+        w = EngineWorker("w9", model, params, engine_kw=ENGINE_KW)
+        assert w.state == ATTESTING
+        gateway = Gateway(config_repr="test")
+        gateway.admit(w)
+        assert w.state == READY
+        orch = Orchestrator(gateway, [w])
+        with pytest.raises(ValueError):         # live name reuse forbidden
+            orch.add_worker(EngineWorker("w9", model, params,
+                                         engine_kw=ENGINE_KW))
+        orch.kill("w9")
+        assert w.state == DEAD
+
+
+class TestCrossTenantIsolation:
+    def test_cross_tenant_restore_fails_mac_without_leaking(
+            self, small_model, solo_reference):
+        """Tenant A's migrated KV presented under tenant B's domain must
+        fail MAC — isolation by key derivation, not naming convention — and
+        the failed restore must leave the destination pool untouched. The
+        same blob then restores cleanly under the right domain and finishes
+        byte-identically."""
+        _, model, params = small_model
+        _, orch, (w0, w1) = make_fleet(model, params)
+        p, mnt, seed, _ = fleet_specs()[0]
+        req = w0.engine.submit(_gen(p.copy(), mnt, seed, tenant="a"))
+        for _ in range(2):
+            w0.engine.step()
+        assert req.output and not req.finished   # mid-decode
+        migrants, _ = w0.export_state()
+        assert len(migrants) == 1
+        blob = migrants[0]
+        with pytest.raises(IntegrityError):
+            w1.engine.restore_slot(blob.sealed, blob.req,
+                                   key=w1.tenant_keys["b"],
+                                   prefix=blob.prefix)
+        assert_no_leaks(w1.engine)               # failed restore rolled back
+        w1.engine.import_sealed_state([blob])
+        w1.engine.run()
+        assert req.finished
+        assert list(req.output) == solo_reference[0]
+        assert_no_leaks(w1.engine)
+
+
+class TestBudgetsAndAdmission:
+    def test_tenant_budget_holds_then_serves(self, small_model):
+        _, model, params = small_model
+        _, orch, _ = make_fleet(model, params, n=1,
+                                tenant_budgets={"a": 10.0})
+        h1 = orch.submit(_gen(np.arange(1, 5, dtype=np.int32), mnt=6,
+                              seed=1, tenant="a"))
+        h2 = orch.submit(_gen(np.arange(1, 5, dtype=np.int32), mnt=6,
+                              seed=2, tenant="a"))
+        assert h1 is not None
+        assert h2 is None, "second request must park on the tenant budget"
+        assert orch.stats.held_budget == 1
+        orch.run()
+        handles = list(orch.handles.values())
+        assert len(handles) == 2 and all(h.finished for h in handles)
+
+    def test_infeasible_deadline_rejected_before_boundary(self, small_model):
+        _, model, params = small_model
+        td = TrustDomain("tdx")
+        eng = Engine(model, params, trust_domain=td, reject_infeasible=True,
+                     step_time_hint_s=0.05, **ENGINE_KW)
+        doomed = eng.submit(_gen(np.arange(1, 5, dtype=np.int32), mnt=8,
+                                 deadline_s=0.01))
+        assert doomed.finished
+        assert doomed.finish_reason == FINISH_REJECTED
+        # rejection happened BEFORE any crossing: no ingress, no stream
+        assert td.channel.stats.messages_in == 0
+        ok = eng.submit(_gen(np.arange(1, 5, dtype=np.int32), mnt=8,
+                             deadline_s=100.0))
+        stats = eng.run()
+        assert ok.finished and ok.finish_reason != FINISH_REJECTED
+        assert stats.rejected_infeasible == 1
+        assert stats.total_requests == 1         # the rejected one is not served
+
+
+class TestDedicatedPlanHandoff:
+    def test_tight_deadline_late_arrival_hands_off_first(self, small_model):
+        """Slack-ordered handoff regression: on the dedicated prefill plan a
+        tight-deadline request submitted LAST must still cross to the
+        decode plan — and emit its first token — before a slack request
+        submitted first. Slot order is an arrival artifact; slack is not."""
+        _, model, params = small_model
+        emitted = []
+        eng = Engine(model, params, max_slots=2, max_len=64,
+                     prefill_buckets=(4, 8), prefill_plan="dedicated")
+        slack = _gen(np.arange(1, 5, dtype=np.int32), mnt=4, seed=1)
+        tight = _gen(np.arange(2, 6, dtype=np.int32), mnt=4, seed=2,
+                     deadline_s=0.5)
+        slack.on_token = lambda r, t: emitted.append("slack")
+        tight.on_token = lambda r, t: emitted.append("tight")
+        eng.submit(slack)
+        eng.submit(tight)
+        eng.run()
+        assert "tight" in emitted and "slack" in emitted
+        assert emitted.index("tight") < emitted.index("slack"), \
+            f"tight-deadline first token must lead, got {emitted}"
+
+    def test_batched_handoff_same_tokens_fewer_crossings(self, small_model):
+        _, model, params = small_model
+        outs, crossings, seals = [], [], []
+        for batch in (1, 2):
+            td = TrustDomain("tdx")
+            eng = Engine(model, params, max_slots=2, max_len=64,
+                         prefill_buckets=(4,), prefill_plan="dedicated",
+                         handoff_batch=batch, trust_domain=td)
+            reqs = [eng.submit(_gen(np.full(4, 3 + i, np.int32), mnt=4,
+                                    seed=10 + i)) for i in range(4)]
+            eng.run()
+            assert all(r.finished for r in reqs)
+            outs.append([list(r.output) for r in reqs])
+            crossings.append(eng.handoff_crossings)
+            seals.append(td.channel.stats.seal_events)
+        assert outs[0] == outs[1], "handoff batching changed decoded output"
+        assert crossings[1] < crossings[0]
+        assert seals[1] < seals[0]
