@@ -22,6 +22,19 @@ python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
     --priority-mix 0:3,5:1 --kv-backend paged --page-size 8 --seed 1 \
     --sample-temp 0.7
 
+# kernel-decode smoke: the same paged priority-mix workload through the
+# table-walking Pallas decode kernel (kv_decode=kernel). The decode-mode
+# stats line must confirm the kernel path actually served the run, and the
+# fused-unseal savings hook must report (zero pages is fine here — fused
+# admission needs full-page restores, covered by the test tier).
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
+    --requests 4 --max-new-tokens 4 --prefill-buckets 8,16 --slots 2 \
+    --priority-mix 0:3,5:1 --kv-backend paged --page-size 8 \
+    --kv-decode kernel --seed 1 --sample-temp 0.7 \
+    | tee /tmp/ci_kernel_smoke.out
+grep -q "kv decode: mode=kernel" /tmp/ci_kernel_smoke.out
+grep -q "fused-unseal savings" /tmp/ci_kernel_smoke.out
+
 # prefix-sharing smoke: the same shared-prefix workload (common 8-token
 # head) on a deliberately tight on-demand page pool, with sharing off and
 # on. Off must survive via capacity preemption (sealed evictions); on must

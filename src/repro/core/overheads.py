@@ -202,6 +202,42 @@ def measured_link_tax(channel_stats, profile: str, step_s: float
     return modeled, measured, line
 
 
+def fused_unseal_savings(fused_pages: int, fused_bytes: int,
+                         profile: str | TEEProfile
+                         ) -> "tuple[Optional[OverheadBreakdown], str]":
+    """Price what a sealed-KV restore avoided by admitting pages as
+    ciphertext (kernels/paged_attention.py's fused in-kernel unseal)
+    instead of host-decrypting them into the pool.
+
+    The host-decrypt path pays, per restored page, (a) a ChaCha20 XOR pass
+    that reads the ciphertext and writes the plaintext back — a 2x
+    page-bytes round-trip through encrypted memory — and (b) one boundary
+    event staging the decrypted page to the device pool. The fused path
+    writes the ciphertext into the pool once (a write both paths share)
+    and decrypts on the page read the attention kernel performs anyway, so
+    the round-trip and the per-page boundary events vanish. That avoided
+    work is priced through :func:`predict` itself — one page-sized memory
+    term per page, ``steps=pages`` so ``fixed_boundary_s`` lands once per
+    page — keeping the savings in the same currency (and under the same
+    taxes) as every other number this module emits.
+
+    Returns (breakdown | None, report line); None when nothing went fused.
+    """
+    from repro.roofline.analysis import HBM_BW   # lazy: core <-/-> roofline
+    if fused_pages <= 0 or fused_bytes <= 0:
+        return None, "fused-unseal savings: none (no ciphertext-resident pages)"
+    per_page = fused_bytes / fused_pages
+    terms = RooflineTerms(compute_s=0.0, memory_s=2 * per_page / HBM_BW)
+    brk = predict(terms, profile, steps=fused_pages)
+    line = (f"fused-unseal savings ({brk.profile}): {fused_pages} pages / "
+            f"{fused_bytes} B stayed ciphertext-resident; avoided "
+            f"{brk.t_tee_s * 1e6:.1f}us restore cost "
+            f"({brk.t_plain_s * 1e6:.1f}us HBM round-trip + "
+            f"{(brk.t_tee_s - brk.t_plain_s) * 1e6:.1f}us TEE tax incl. "
+            f"{fused_pages} boundary events)")
+    return brk, line
+
+
 def sweep_batch(profile: str, compute_per_token_s: float, memory_s: float,
                 batches: list[int]) -> Dict[int, float]:
     """Paper Fig 9/11 shape: overhead vs batch size. Compute scales with

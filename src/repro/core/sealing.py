@@ -74,6 +74,13 @@ def _nonce_for(key: SealingKey, name: str) -> bytes:
     return hashlib.sha256(key.key_id().encode() + b"|" + name.encode()).digest()[:12]
 
 
+def nonce_words_for(key: SealingKey, name: str) -> np.ndarray:
+    """The blob's ChaCha20 nonce as uint32[3] — what a ciphertext-resident
+    page's crypt sidecar carries so the fused decode kernel can regenerate
+    the exact keystream this name was sealed under."""
+    return np.frombuffer(_nonce_for(key, name), np.uint32)
+
+
 @dataclasses.dataclass
 class SealedTensor:
     name: str
@@ -104,6 +111,32 @@ def seal_tensor(key: SealingKey, name: str, array: jax.Array) -> SealedTensor:
                       n_bytes=n_bytes)
     st.mac = _mac(key, st.header(), ciphertext)
     return st
+
+
+def verify_mac(key: SealingKey, sealed: SealedTensor) -> None:
+    """MAC-check a sealed tensor *without* decrypting it.
+
+    The fused-unseal decode path (kernels/paged_attention.py) admits
+    ciphertext directly into the KV pool and decrypts in-kernel, so the
+    usual unseal_tensor gate never runs for those pages — this is the
+    integrity gate that must pass before any kernel consumes the bits.
+    Raises :class:`IntegrityError` on mismatch, like unseal_tensor.
+    """
+    expect = _mac(key, sealed.header(), sealed.ciphertext)
+    if not hmac.compare_digest(expect, sealed.mac):
+        raise IntegrityError(f"MAC mismatch for tensor '{sealed.name}'")
+
+
+def ciphertext_page_bytes(sealed: SealedTensor) -> bytes:
+    """Serialize blocked ciphertext to the linear RFC 8439 byte stream.
+
+    ``[16, N].T.reshape(-1)`` is a pure permutation (linear word i is
+    keystream word i%16 of counter block i//16), so the pool can hold the
+    ciphertext *bit-for-bit* in the plaintext layout and the in-kernel
+    keystream XOR (generated linearly per page) lines up word-for-word.
+    """
+    lin = np.asarray(sealed.ciphertext).T.reshape(-1)
+    return lin.astype("<u4").tobytes()[:sealed.n_bytes]
 
 
 def unseal_tensor(key: SealingKey, sealed: SealedTensor) -> jax.Array:

@@ -111,5 +111,13 @@ def mha_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, bq: int = 128,
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
     bq_ = min(bq, s)
     bkv_ = min(bkv, s)
+    # non-block-multiple sequence: zero-pad to a common block multiple. The
+    # kernel's causal mask sends every padded kv position (k_pos >= s >
+    # q_pos for all real rows) to NEG_INF, and padded query rows are
+    # sliced away below, so padding is invisible to the result.
+    s_pad = s + (-s) % int(np.lcm(bq_, bkv_))
+    if s_pad != s:
+        widths = ((0, 0), (0, s_pad - s), (0, 0))
+        qf, kf, vf = (jnp.pad(a, widths) for a in (qf, kf, vf))
     out = flash_attention(qf, kf, vf, bq=bq_, bkv=bkv_, interpret=INTERPRET)
-    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return out[:, :s].reshape(b, h, s, d).transpose(0, 2, 1, 3)

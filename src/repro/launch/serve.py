@@ -56,7 +56,8 @@ import numpy as np
 from repro.configs import get_config, list_configs, smoke_config
 from repro.core import RooflineTerms, TrustDomain
 from repro.core.overheads import (STEP_COMPUTE_FRACTION,
-                                  STEP_MEMORY_FRACTION, measured_link_tax)
+                                  STEP_MEMORY_FRACTION, fused_unseal_savings,
+                                  measured_link_tax)
 from repro.launch.mesh import ensure_host_devices
 from repro.models import build_model
 from repro.runtime import (Engine, FramePolicy, GenerationRequest,
@@ -98,6 +99,7 @@ def engine_kwargs(args):
                 num_pages=args.num_pages,
                 prefix_sharing=args.prefix_sharing,
                 kv_alloc=args.kv_alloc,
+                kv_decode=args.kv_decode,
                 continuous_batching=args.continuous_batching,
                 step_tokens=args.step_tokens,
                 prefill_plan=args.prefill_plan,
@@ -235,6 +237,12 @@ def main():
                     help="paged page-allocation mode: worst-case admission "
                          "reservations or vLLM-style step-time grants with "
                          "capacity preemption")
+    ap.add_argument("--kv-decode", default="gather",
+                    choices=["gather", "kernel"],
+                    help="paged decode path: per-step dense gather "
+                         "(reference) or the table-walking Pallas "
+                         "paged-attention kernel with fused in-kernel "
+                         "page unseal")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     metavar="K",
                     help="give every generated prompt the same K-token head "
@@ -358,6 +366,14 @@ def main():
         print(f"continuous batching: step budget "
               f"{engine._step_tokens} tokens, "
               f"{stats.backfilled_requests} backfilled admissions")
+    if args.kv_backend == "paged":
+        print(f"kv decode: mode={engine.kv.decode_mode} | fused-unseal "
+              f"{engine.kv.fused_restore_pages} pages / "
+              f"{engine.kv.fused_restore_bytes} B admitted as ciphertext")
+        _, savings_line = fused_unseal_savings(
+            engine.kv.fused_restore_pages, engine.kv.fused_restore_bytes,
+            args.tee)
+        print(savings_line)
     if getattr(engine.kv, "supports_sharing", False):
         print(f"prefix sharing: {stats.shared_pages} shared-page maps, "
               f"{stats.cow_copies} CoW copies, "

@@ -101,8 +101,8 @@ from repro.models.model import Model
 from repro.runtime import sampling
 from repro.runtime.api import (FINISH_ABORTED, GenerationRequest,
                                RequestOutput)
-from repro.runtime.kvcache import (KVBackend, SlotState, make_backend,
-                                   next_pow2, tail_blob_names)
+from repro.runtime.kvcache import (KVBackend, SlotState, host_upload,
+                                   make_backend, next_pow2, tail_blob_names)
 from repro.runtime.plan import (ComputePlan, PrefillOnlyPlan, ShardedPlan,
                                 SingleDevicePlan)
 from repro.runtime.scheduler import Request, Scheduler, ServeStats
@@ -188,6 +188,7 @@ class Engine:
                  num_pages: Optional[int] = None,
                  prefix_sharing: bool = False,
                  kv_alloc: Optional[str] = None,
+                 kv_decode: str = "gather",
                  mesh: Optional[str] = None,
                  plan: Optional[ComputePlan] = None,
                  admission_order: str = "slack",
@@ -220,6 +221,13 @@ class Engine:
         preemption when the pool runs dry; implied by ``prefix_sharing``).
         Decoded outputs are byte-identical across all of these — only
         memory, sealing traffic, and scheduling change.
+
+        ``kv_decode`` (paged only) selects the decode attention path:
+        ``"gather"`` (default) rematerializes the dense KV view per step;
+        ``"kernel"`` runs the table-walking Pallas paged-attention kernel
+        (streams valid pages only, decrypts fused-unseal restored pages
+        in-VMEM). Kernel outputs are numerically close, not byte-identical
+        — see the :mod:`repro.runtime.kvcache` docstring.
 
         ``mesh`` spans the engine across devices: ``"dp=4"`` shards the
         batch (and FSDP-places params) over 4 devices, ``"dp=4,tp=2"`` adds
@@ -291,7 +299,7 @@ class Engine:
                                           page_size=page_size,
                                           num_pages=num_pages, plan=self.plan,
                                           prefix_sharing=prefix_sharing,
-                                          alloc=kv_alloc)
+                                          alloc=kv_alloc, decode=kv_decode)
         self._active_mask = np.zeros(max_slots, bool)
         self._last_token = np.zeros(max_slots, np.int32)
         self._preempted: List[PreemptedRequest] = []
@@ -563,8 +571,8 @@ class Engine:
         actually restricts (both are static pytree differences, so the
         nucleus sort and the sampling math compile only when used)."""
         s = self.slots
-        rep = jnp.asarray(s.rep_pen) if s.any_rep_pen else None
-        pres = jnp.asarray(s.presence) if s.any_presence else None
+        rep = host_upload(s.rep_pen) if s.any_rep_pen else None
+        pres = host_upload(s.presence) if s.any_presence else None
         if rep is None and pres is None:
             # no live penalties: drop the device mirror and its queue (also
             # on the all-greedy path below — _emit_token must not keep
@@ -582,10 +590,10 @@ class Engine:
             bias = self._bias_device()
         if not s.any_sampled:
             return None, 0
-        top_p = jnp.asarray(s.top_p) if s.any_top_p else None
+        top_p = host_upload(s.top_p) if s.any_top_p else None
         state = sampling.SamplingState(
-            jnp.asarray(s.temp), jnp.asarray(s.top_k), jnp.asarray(s.key),
-            jnp.asarray(steps), top_p=top_p, rep_pen=rep, presence=pres,
+            host_upload(s.temp), host_upload(s.top_k), host_upload(s.key),
+            host_upload(steps), top_p=top_p, rep_pen=rep, presence=pres,
             hist=hist, bias=bias)
         return state, self._static_kmax()
 
@@ -599,12 +607,12 @@ class Engine:
         ints per step instead of [slots, vocab]."""
         if (self._hist_dev is None
                 or self._hist_dev_version != self.slots.hist_version):
-            self._hist_dev = jnp.asarray(self.slots.hist)
+            self._hist_dev = host_upload(self.slots.hist)
             self._hist_dev_version = self.slots.hist_version
             self._hist_pending.clear()
         elif self._hist_pending:
-            rows = jnp.asarray([s for s, _ in self._hist_pending], jnp.int32)
-            toks = jnp.asarray([t for _, t in self._hist_pending], jnp.int32)
+            rows = host_upload([s for s, _ in self._hist_pending], jnp.int32)
+            toks = host_upload([t for _, t in self._hist_pending], jnp.int32)
             self._hist_dev = self._hist_dev.at[rows, toks].add(1)
             self._hist_pending.clear()
         return self._hist_dev
@@ -616,7 +624,7 @@ class Engine:
         biased request bumps ``bias_version``)."""
         if (self._bias_dev is None
                 or self._bias_dev_version != self.slots.bias_version):
-            self._bias_dev = jnp.asarray(self.slots.bias)
+            self._bias_dev = host_upload(self.slots.bias)
             self._bias_dev_version = self.slots.bias_version
         return self._bias_dev
 
@@ -777,7 +785,7 @@ class Engine:
             chunk = req.prompt[:bucket]
             tokens[i, bucket - len(chunk):] = chunk   # left-pad short prompts
         fresh = self.kv.fresh_prefill_cache(rows)
-        logits, prefilled = self._prefill_fn(self.params, jnp.asarray(tokens),
+        logits, prefilled = self._prefill_fn(self.params, host_upload(tokens),
                                              fresh)
         first_np = self._first_tokens(logits, group, rows)
 
@@ -832,10 +840,10 @@ class Engine:
                     bias[i, int(tok)] = np.float32(val)
         kmax = int(top_k.max())
         state = sampling.SamplingState(
-            jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(key),
+            host_upload(temp), host_upload(top_k), host_upload(key),
             jnp.zeros(rows, jnp.int32),
-            top_p=jnp.asarray(top_p) if (top_p < 1.0).any() else None,
-            bias=jnp.asarray(bias) if bias is not None else None)
+            top_p=host_upload(top_p) if (top_p < 1.0).any() else None,
+            bias=host_upload(bias) if bias is not None else None)
         return np.asarray(sampling.sample(
             logits, state, kmax=min(next_pow2(kmax), self._vocab) if kmax else 0))
 
@@ -858,13 +866,13 @@ class Engine:
             # on the result only when it crosses to the decode plan.
             fresh = self.model.init_cache(1, self.max_len)
             logits, cache = self._prefill_stream_fn(
-                self.prefill_params, jnp.asarray(tokens), fresh)
+                self.prefill_params, host_upload(tokens), fresh)
             req.phase = "prefill"
             self._inflight[slot] = InflightPrefill(req, slot, bucket,
                                                    logits, cache)
             return
         fresh = self.kv.fresh_prefill_cache(1)
-        logits, prefilled = self._prefill_fn(self.params, jnp.asarray(tokens),
+        logits, prefilled = self._prefill_fn(self.params, host_upload(tokens),
                                              fresh)
         first_np = self._first_tokens(logits, [req], 1)
         keys = [req.page_keys] if self.kv.supports_sharing else None

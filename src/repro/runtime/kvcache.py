@@ -83,6 +83,27 @@ dry the engine frees capacity by evict-by-slack *capacity preemption*
 whole-slot seal). ``alloc="reserve"`` (the default without sharing) keeps
 the PR-3 worst-case reservations, under which appends can never fail.
 
+**Gather vs kernel decode** (``Engine(kv_backend="paged",
+kv_decode="gather"|"kernel")``; paged only). The default ``gather`` path
+rematerializes each slot's full dense KV view per decode step (``jnp.take``
+over the page table) and runs the model's stock ``decode_step`` — simple,
+mesh-capable, and the differential reference. ``kernel`` replaces the
+gather+SDPA with :mod:`repro.kernels.paged_attention`: a Pallas kernel that
+walks the page table directly, streaming only each slot's *valid* pages
+from the pool into VMEM with online softmax — per-step HBM traffic drops
+from O(max_pages·page_size) rematerialized to O(context) streamed, so the
+advantage grows with context length (the gather's rematerialization
+dominates from roughly 512 tokens of context upward; at short contexts the
+two are within noise). The kernel path additionally unlocks the
+*fused-unseal restore*: sealed full pages restore as ciphertext bits and
+decrypt in-VMEM against per-page nonces during attention
+(``paged_attention_unseal``), so restored KV plaintext never round-trips
+HBM. Kernel outputs are numerically close to gather (f32 online softmax),
+not bitwise; decoded tokens agree at the bench operating points and the
+differential harness pins a tight tolerance. Constraints: dense attention
+family only (uniform attn+swiglu blocks), single-device plans (use
+``gather`` on meshes).
+
 **Sharded** (:class:`ShardedKVBackend`, implied by ``Engine(mesh=...)``)
 is not a third layout — it wraps either of the above when the engine spans
 a mesh (:class:`~repro.runtime.plan.ShardedPlan`). When to *shard* the
@@ -308,6 +329,26 @@ def next_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def host_upload(x, dtype=None) -> jax.Array:
+    """Host->device upload that always *copies* host-owned buffers.
+
+    ``jnp.asarray`` on a numpy array may zero-copy it into the computation
+    when its malloc'd address happens to satisfy the runtime's alignment
+    bound. Whether that happens varies per allocation, and XLA:CPU kernels
+    pick alignment-dependent code paths with different FMA grouping — so
+    the same engine scenario can produce last-ulp logit differences from
+    run to run, flipping near-tie sampled tokens (observed as bimodal
+    outputs in the 8-device parity tests). Copying into a runtime-allocated
+    buffer pins every upload to one alignment class, restoring the engine's
+    byte-identical-replay contract. The arrays on these paths are small
+    (slot tables, token columns, page indices), so the copy is noise next
+    to the step itself; weights and KV pools never go through here.
+    """
+    if isinstance(x, jax.Array):
+        return x if dtype is None else jnp.asarray(x, dtype)
+    return jnp.array(np.ascontiguousarray(x), dtype)
 
 
 def _is_pos(path) -> bool:
@@ -548,11 +589,11 @@ class SlotDenseBackend(KVBackend):
                        written_len: int, page_keys=None) -> None:
         # one donated scatter for the whole group (not k full-cache copies)
         self.cache = insert_rows(self.cache, prefilled,
-                                 jnp.asarray(slots, jnp.int32))
+                                 host_upload(slots, jnp.int32))
 
     def decode(self, params, tokens, state, kmax, write_slots) -> np.ndarray:
         next_tokens, self.cache = self._decode_fn(
-            params, jnp.asarray(tokens[:, None]), self.cache, state, kmax)
+            params, host_upload(tokens[:, None]), self.cache, state, kmax)
         return np.asarray(next_tokens)
 
     def cache_nbytes(self) -> int:
@@ -654,23 +695,24 @@ def make_backend(kind: str, model, *, max_slots: int, max_len: int,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  plan: Optional[ComputePlan] = None,
                  prefix_sharing: bool = False,
-                 alloc: Optional[str] = None) -> KVBackend:
+                 alloc: Optional[str] = None,
+                 decode: str = "gather") -> KVBackend:
     """Factory behind ``Engine(kv_backend=...)``. With a sharded ``plan``
     the chosen layout is built on the mesh and wrapped for per-shard
-    sealing. ``prefix_sharing``/``alloc`` are paged-only (see the module
-    docstring's prefix-sharing section)."""
+    sealing. ``prefix_sharing``/``alloc``/``decode`` are paged-only (see
+    the module docstring's prefix-sharing and decode-mode sections)."""
     if kind == "slot":
-        if prefix_sharing or alloc is not None:
-            raise ValueError("prefix_sharing / kv_alloc need "
+        if prefix_sharing or alloc is not None or decode != "gather":
+            raise ValueError("prefix_sharing / kv_alloc / kv_decode need "
                              "kv_backend='paged' (the dense slot layout has "
-                             "no pages to share or grant)")
+                             "no pages to share, grant, or table-walk)")
         kv: KVBackend = SlotDenseBackend(model, max_slots, max_len, plan)
     elif kind == "paged":
         from repro.runtime.paged import PagedKVBackend
         kv = PagedKVBackend(model, max_slots, max_len,
                             page_size=page_size, num_pages=num_pages,
                             plan=plan, prefix_sharing=prefix_sharing,
-                            alloc=alloc)
+                            alloc=alloc, decode=decode)
     else:
         raise ValueError(
             f"unknown kv backend {kind!r} (want 'slot' or 'paged')")

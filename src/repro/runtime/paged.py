@@ -54,6 +54,25 @@ once, under its content-derived name (same content => same nonce => the
 identical ciphertext, so repeated parking can never pair one nonce with two
 plaintexts). ``seal_tail_pages``/``restore_tail_pages`` support partial
 eviction of the (always private) tail.
+
+Decode modes (``decode=``). ``"gather"`` (default) is the dense-view path
+above — bit-identical to slot-dense, any model family, any plan.
+``"kernel"`` replaces the gather with ``kernels/paged_attention.py``: a
+Pallas kernel walks the page table directly and streams KV pages into
+VMEM, so per-step KV traffic is O(tokens attended), not O(max_len) dense
+rematerialization. Kernel mode additionally keeps eligible restored pages
+*ciphertext-resident*: a whole-slot restore MAC-checks each full private
+page (``sealing.verify_mac``) and places the ciphertext bits straight into
+the pool with a per-page crypt sidecar (nonce + live flag); the decode
+kernel regenerates the ChaCha20 keystream in-VMEM and decrypts on the way
+into the attention dot, so the restore never round-trips plaintext KV
+through HBM. Any host-side consumer of a ciphertext page (seal, park,
+page copy, partial eviction) first calls ``_materialize_page`` — pages a
+slot appends into are always plaintext (appends target the partial tail,
+which restores through the host path). Kernel mode requires a dense
+attention family, a non-sharded plan, and (for the ciphertext-resident
+part) a pool dtype/page size the in-kernel XOR supports; ineligible
+configs still get the kernel attention path with host-decrypt restores.
 """
 
 from __future__ import annotations
@@ -67,9 +86,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sealing import (IntegrityError, SealedTensor, SealingKey,
-                                seal_tensor, unseal_tensor)
+                                ciphertext_page_bytes, nonce_words_for,
+                                seal_tensor, unseal_tensor, verify_mac)
+from repro.kernels.ops import INTERPRET
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_unseal,
+                                           supports_fused_unseal)
+from repro.kernels.ref import chacha20_keystream_bytes_ref
 from repro.runtime import sampling
-from repro.runtime.kvcache import KVBackend, next_pow2
+from repro.runtime.kvcache import KVBackend, host_upload, next_pow2
 from repro.runtime.plan import ComputePlan
 
 Cache = Any
@@ -128,8 +153,12 @@ class PagedKVBackend(KVBackend):
     def __init__(self, model, max_slots: int, max_len: int, *,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  plan: Optional[ComputePlan] = None,
-                 prefix_sharing: bool = False, alloc: Optional[str] = None):
+                 prefix_sharing: bool = False, alloc: Optional[str] = None,
+                 decode: str = "gather"):
         super().__init__(model, max_slots, max_len, plan)
+        if decode not in ("gather", "kernel"):
+            raise ValueError(f"decode must be 'gather' or 'kernel', "
+                             f"got {decode!r}")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if max_len % page_size != 0:
@@ -253,8 +282,26 @@ class PagedKVBackend(KVBackend):
                 scatter, blocks, new_cache)
             return toks, new_blocks
 
-        self._decode_fn = self.plan.compile_decode(
-            _decode, donate_argnums=(2,), static_argnums=(8,))
+        # fused-unseal (ciphertext-resident restore) state. Present in both
+        # modes so accounting/stats code stays unconditional: _cipher_pages
+        # is the set of physical pages whose pool bits are ciphertext,
+        # _crypt maps each paged leaf to its [num_pages+1, 4] uint32 sidecar
+        # (nonce words 0-2, live flag word 3), _crypt_key is the key every
+        # resident ciphertext page was sealed under.
+        self.decode_mode = decode
+        self._cipher_pages: set = set()
+        self._crypt: Dict[str, np.ndarray] = {}
+        self._crypt_key: Optional[SealingKey] = None
+        self.supports_fused = False
+        self._fused_bpp = 0
+        self.fused_restore_pages = 0
+        self.fused_restore_bytes = 0
+
+        if decode == "kernel":
+            self._init_kernel_decode(model)
+        else:
+            self._decode_fn = self.plan.compile_decode(
+                _decode, donate_argnums=(2,), static_argnums=(8,))
 
         def _splice(blocks, prefilled, page_rows, page_ord, phys,
                     dense_rows, dense_slots):
@@ -279,6 +326,122 @@ class PagedKVBackend(KVBackend):
 
         self._copy_page_fn = self.plan.compile(_copy_page,
                                                donate_argnums=(0,))
+
+    # -- kernel decode mode ---------------------------------------------------
+    def _init_kernel_decode(self, model) -> None:
+        """Build the table-walking Pallas decode path (decode='kernel').
+
+        The closure mirrors the dense family's ``decode_step`` math exactly
+        (rmsnorm -> _qkv with RoPE -> attention -> wo -> rmsnorm -> swiglu,
+        layer scan with the pool slices as carry) but replaces
+        gather + sdpa with ``kernels/paged_attention.py`` reading the page
+        table directly; when ciphertext-resident pages exist the fused
+        variant decrypts them in-kernel against the crypt sidecars.
+        """
+        from repro.models import layers as model_layers
+        from repro.models.transformer import _attn_cfg
+        if self.plan.is_sharded:
+            raise ValueError(
+                "decode='kernel' requires a single-device plan (the paged-"
+                "attention kernel reads the local pool; use decode='gather' "
+                "on meshes)")
+        impl = getattr(model, "_impl", model)   # Model facade -> DecoderLM
+        blocks_desc = getattr(impl, "blocks", None)
+        if (not blocks_desc or len(blocks_desc) != 1
+                or blocks_desc[0][2] != [("attn", "swiglu")]):
+            raise ValueError(
+                f"decode='kernel' supports the dense attention family only "
+                f"(one uniform attn+swiglu block); {model.cfg.name} has "
+                f"{blocks_desc!r} — use decode='gather'")
+        block_name = blocks_desc[0][0]
+        self._k_path = next(p for p in self._paged_paths
+                            if p.endswith("['k']"))
+        self._v_path = next(p for p in self._paged_paths
+                            if p.endswith("['v']"))
+
+        # per-leaf page geometry + fused-unseal eligibility: pages must
+        # cover whole ChaCha20 blocks and bitcast to uint words in-kernel,
+        # and every leaf must share one blocks-per-page (k and v do).
+        shapes: Dict[str, Tuple[tuple, Any]] = {}
+
+        def grab(path, leaf):
+            if _keystr(path) in self._paged_paths:
+                shapes[_keystr(path)] = (leaf.shape, leaf.dtype)
+            return leaf
+        jax.tree_util.tree_map_with_path(grab, self.blocks)
+        self._page_shape = {p: (s[0], self.page_size) + tuple(s[3:])
+                            for p, (s, _) in shapes.items()}
+        self._page_dtype = {p: d for p, (_, d) in shapes.items()}
+        page_bytes = {p: int(np.prod(s[2:])) * np.dtype(d).itemsize
+                      for p, (s, d) in shapes.items()}
+        self.supports_fused = (
+            len(set(page_bytes.values())) == 1
+            and all(supports_fused_unseal(d, page_bytes[p])
+                    for p, (_, d) in shapes.items()))
+        self._fused_bpp = (next(iter(page_bytes.values())) // 64
+                           if self.supports_fused else 0)
+        for p in self._paged_paths:
+            self._crypt[p] = np.zeros((self.num_pages + 1, 4), np.uint32)
+
+        cfg = model.cfg
+        acfg = _attn_cfg(cfg)
+        bpp = self._fused_bpp
+        mlayers = model_layers
+
+        def _decode_kernel(params, tokens, blocks, table, pos, write_phys,
+                           write_off, k_crypt, v_crypt, key_words, state,
+                           kmax, use_cipher):
+            x = impl._embed(params, tokens)            # [b, 1, d]
+            positions = pos[:, None]
+            valid = pos + 1
+            slot0 = blocks[block_name]["slot_0"]
+            kp, vp = slot0["k"], slot0["v"]
+
+            def body(carry, lp):
+                x, kp, vp, li = carry
+                sl = lp["slot_0"]
+                h = mlayers.rmsnorm(sl["pre_norm"], x, cfg.norm_eps)
+                q, k, v = mlayers._qkv(sl["attn"], acfg, h, positions)
+                kl = jax.lax.dynamic_index_in_dim(kp, li, 0, keepdims=False)
+                vl = jax.lax.dynamic_index_in_dim(vp, li, 0, keepdims=False)
+                # append this step's k/v before attending (idle rows route
+                # to the null page), exactly like the gather path's
+                # write-then-attend
+                kl = kl.at[write_phys, write_off].set(
+                    k[:, 0].astype(kl.dtype))
+                vl = vl.at[write_phys, write_off].set(
+                    v[:, 0].astype(vl.dtype))
+                if use_cipher:
+                    out = paged_attention_unseal(
+                        q[:, 0], kl, vl, table, valid, li, key_words,
+                        k_crypt, v_crypt, blocks_per_page=bpp,
+                        interpret=INTERPRET)
+                else:
+                    out = paged_attention(q[:, 0], kl, vl, table, valid,
+                                          interpret=INTERPRET)
+                x = x + jnp.einsum("bshk,hkd->bsd",
+                                   out.astype(q.dtype)[:, None],
+                                   sl["attn"]["wo"])
+                h = mlayers.rmsnorm(sl["post_norm"], x, cfg.norm_eps)
+                x = x + mlayers.swiglu(sl["ffn"], h)
+                kp = jax.lax.dynamic_update_index_in_dim(kp, kl, li, 0)
+                vp = jax.lax.dynamic_update_index_in_dim(vp, vl, li, 0)
+                return (x, kp, vp, li + 1), None
+
+            (x, kp, vp, _), _ = jax.lax.scan(
+                body, (x, kp, vp, jnp.int32(0)), params[block_name])
+            logits = impl._unembed(params, x)[:, 0]
+            if state is None:
+                toks = sampling.greedy(logits)
+            else:
+                toks = sampling.sample(logits, state, kmax=kmax)
+            new_blocks = dict(blocks)
+            new_blocks[block_name] = dict(blocks[block_name])
+            new_blocks[block_name]["slot_0"] = dict(slot0, k=kp, v=vp)
+            return toks, new_blocks
+
+        self._decode_fn = self.plan.compile_decode(
+            _decode_kernel, donate_argnums=(2,), static_argnums=(11, 12))
 
     # -- page accounting ------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -354,6 +517,7 @@ class PagedKVBackend(KVBackend):
         taken, self._free_pages = self._free_pages[:n], self._free_pages[n:]
         for p in taken:
             self._page_ref[p] = 1
+            self._clear_crypt(p)
         return taken
 
     def _drop_ref(self, phys: int) -> None:
@@ -365,6 +529,7 @@ class PagedKVBackend(KVBackend):
         assert self._page_ref[phys] >= 0, "double-free — refcount bug"
         if self._page_ref[phys] == 0:
             self._unregister(phys)
+            self._clear_crypt(phys)
             self._free_pages.append(phys)
 
     def _unregister(self, phys: int) -> None:
@@ -484,9 +649,9 @@ class PagedKVBackend(KVBackend):
         prefilled.pop("pos")
         self.blocks = self._splice_fn(
             self.blocks, prefilled,
-            jnp.asarray(src_rows, jnp.int32), jnp.asarray(page_ord, jnp.int32),
-            jnp.asarray(phys, jnp.int32), jnp.asarray(dense_rows, jnp.int32),
-            jnp.asarray(dense_slots, jnp.int32))
+            host_upload(src_rows, jnp.int32), host_upload(page_ord, jnp.int32),
+            host_upload(phys, jnp.int32), host_upload(dense_rows, jnp.int32),
+            host_upload(dense_slots, jnp.int32))
 
     def step_page_need(self, slot: int) -> int:
         """Physical pages decode() will take for this slot's next append:
@@ -530,6 +695,11 @@ class PagedKVBackend(KVBackend):
                 # sole live user about to diverge: the page leaves the
                 # index (its registered content is about to change)
                 self._unregister(p)
+        # backstop: an append must never land in ciphertext. Restore only
+        # admits FULL pages as ciphertext-resident (the next append maps a
+        # fresh page), so this fires only if that invariant ever breaks.
+        if p in self._cipher_pages:
+            self._materialize_page(p)
         return p, int(self.pos[slot]) % self.page_size
 
     def decode(self, params, tokens, state, kmax,
@@ -538,10 +708,22 @@ class PagedKVBackend(KVBackend):
         write_off = np.zeros(self.max_slots, np.int32)
         for s in write_slots:
             write_phys[s], write_off[s] = self._prepare_write(s)
-        next_tokens, self.blocks = self._decode_fn(
-            params, jnp.asarray(tokens[:, None]), self.blocks,
-            jnp.asarray(self.table), jnp.asarray(self.pos),
-            jnp.asarray(write_phys), jnp.asarray(write_off), state, kmax)
+        if self.decode_mode == "kernel":
+            use_cipher = bool(self._cipher_pages)
+            key_words = (self._crypt_key.key_words if use_cipher
+                         else jnp.zeros(8, jnp.uint32))
+            next_tokens, self.blocks = self._decode_fn(
+                params, host_upload(tokens[:, None]), self.blocks,
+                host_upload(self.table), host_upload(self.pos),
+                host_upload(write_phys), host_upload(write_off),
+                host_upload(self._crypt[self._k_path]),
+                host_upload(self._crypt[self._v_path]),
+                key_words, state, kmax, use_cipher)
+        else:
+            next_tokens, self.blocks = self._decode_fn(
+                params, host_upload(tokens[:, None]), self.blocks,
+                host_upload(self.table), host_upload(self.pos),
+                host_upload(write_phys), host_upload(write_off), state, kmax)
         for s in write_slots:
             self.pos[s] += 1
         return np.asarray(next_tokens)
@@ -550,11 +732,72 @@ class PagedKVBackend(KVBackend):
         return sum(l.size * l.dtype.itemsize
                    for l in jax.tree.leaves(self.blocks))
 
+    # -- ciphertext-resident pages (fused-unseal restore path) ----------------
+    def _admit_cipher_page(self, key: SealingKey, phys: int,
+                           blobs: Dict[str, SealedTensor]
+                           ) -> Dict[str, np.ndarray]:
+        """Admit a MAC-verified sealed page into the pool as raw ciphertext
+        bits (the linear RFC 8439 stream bit-cast into the page's plaintext
+        layout) and arm its crypt sidecar rows (nonce words + live flag) so
+        the fused decode kernel decrypts it in VMEM on every read."""
+        writes: Dict[str, np.ndarray] = {}
+        for kpath, st in blobs.items():
+            raw = ciphertext_page_bytes(st)
+            writes[kpath] = np.frombuffer(
+                raw, self._page_dtype[kpath]).reshape(self._page_shape[kpath])
+            self._crypt[kpath][phys, :3] = nonce_words_for(key, st.name)
+            self._crypt[kpath][phys, 3] = 1
+        self._cipher_pages.add(int(phys))
+        self.fused_restore_pages += 1
+        self.fused_restore_bytes += sum(st.n_bytes for st in blobs.values())
+        return writes
+
+    def _clear_crypt(self, phys: int) -> None:
+        if phys in self._cipher_pages:
+            self._cipher_pages.discard(phys)
+            for kpath in self._crypt:
+                self._crypt[kpath][phys] = 0
+
+    def _materialize_page(self, phys: int) -> None:
+        """Host-decrypt a ciphertext-resident page in place (XOR with the
+        reference keystream regenerated from the crypt sidecar) so host
+        consumers — seal, park, copy, append — see plaintext. The decode
+        kernel's per-page counter for layer l starts at l*blocks_per_page,
+        which is exactly the linear stream from counter 0, so one
+        contiguous keystream covers all L layers of the blob."""
+        if phys not in self._cipher_pages:
+            return
+        pages = self._page_arrays([phys], materialize=False)
+        writes: Dict[str, np.ndarray] = {}
+        nb = 0
+        for kpath, arr in pages.items():
+            page = np.ascontiguousarray(arr[:, 0])
+            nonce = self._crypt[kpath][phys, :3].tobytes()
+            ks = chacha20_keystream_bytes_ref(
+                self._crypt_key.key, nonce, page.nbytes)
+            plain = np.bitwise_xor(
+                page.reshape(-1).view(np.uint8),
+                np.frombuffer(ks, np.uint8)).view(page.dtype)
+            writes[kpath] = plain.reshape(page.shape)
+            nb += page.nbytes
+        self._clear_crypt(phys)
+        self._scatter_pages({phys: writes})
+        self._events.append(("materialize", nb, len(writes)))
+
     # -- sealing --------------------------------------------------------------
-    def _page_arrays(self, phys: Sequence[int]) -> Dict[str, np.ndarray]:
+    def _page_arrays(self, phys: Sequence[int], *,
+                     materialize: bool = True) -> Dict[str, np.ndarray]:
         """Fetch the given physical pages of every paged leaf:
-        keystr -> [L, n, page_size, ...]."""
-        idx = jnp.asarray(list(phys), jnp.int32)
+        keystr -> [L, n, page_size, ...].
+
+        By default any ciphertext-resident page among ``phys`` is
+        materialized (host-decrypted in place) first, so every host
+        consumer — seal, park, copy — sees plaintext bits.
+        """
+        if materialize and self._cipher_pages:
+            for p in phys:
+                self._materialize_page(int(p))
+        idx = host_upload(list(phys), jnp.int32)
         out = {}
 
         def pull(path, leaf):
@@ -651,14 +894,41 @@ class PagedKVBackend(KVBackend):
             keys = [cat[16 * i:16 * (i + 1)] for i in range(n_shared)]
         shared_set = set(shared_ords)
         private_ords = [j for j in range(n_alloc) if j not in shared_set]
-        # phase 1: decrypt (and thereby MAC-verify) everything this restore
-        # will need — resident re-links included get no blob to verify (the
-        # live pool IS the authority), parked pages are verified here.
-        private_pages = {
-            j: {kpath: np.asarray(unseal_tensor(
-                    key, sealed[f"{prefix}{kpath}/p{j}{suffix}"]))
-                for kpath in self._paged_paths}
-            for j in private_ords}
+        # fused-unseal eligibility (decode='kernel' on a fused-capable
+        # pool): FULL private pages are MAC-gated here but admitted as
+        # ciphertext — the decode kernel regenerates the keystream per page
+        # and XORs in VMEM, so their plaintext never round-trips HBM. The
+        # partial tail page stays on the host path (the next append writes
+        # into it and appends must land in plaintext).
+        fused_set = (
+            {j for j in private_ords if (j + 1) * self.page_size <= pos}
+            if self.decode_mode == "kernel" and self.supports_fused
+            else set())
+        if fused_set:
+            if (self._crypt_key is not None and self._cipher_pages
+                    and self._crypt_key.key != key.key):
+                # one keystream key rides the decode step: flush residents
+                # sealed under the previous key before switching
+                for p in list(self._cipher_pages):
+                    self._materialize_page(p)
+            self._crypt_key = key
+        # phase 1: MAC-verify everything this restore will need — fused
+        # pages without decrypting (verify_mac), host-path pages by
+        # decrypting; resident re-links get no blob to verify (the live
+        # pool IS the authority), parked pages are verified below.
+        fused_blobs: Dict[int, Dict[str, SealedTensor]] = {}
+        private_pages: Dict[int, Dict[str, np.ndarray]] = {}
+        for j in private_ords:
+            blobs = {kpath: sealed[f"{prefix}{kpath}/p{j}{suffix}"]
+                     for kpath in self._paged_paths}
+            if j in fused_set:
+                for st in blobs.values():
+                    verify_mac(key, st)
+                fused_blobs[j] = blobs
+            else:
+                private_pages[j] = {
+                    kpath: np.asarray(unseal_tensor(key, st))
+                    for kpath, st in blobs.items()}
         plans: List[Tuple[str, int, bytes, Optional[Dict[str, np.ndarray]]]] = []
         for j, k in zip(shared_ords, keys):
             if k in self._index:
@@ -691,7 +961,10 @@ class PagedKVBackend(KVBackend):
         for j in private_ords:
             p = next(it)
             self.table[slot, j] = p
-            writes[p] = private_pages[j]
+            if j in fused_set:
+                writes[p] = self._admit_cipher_page(key, p, fused_blobs[j])
+            else:
+                writes[p] = private_pages[j]
         # NOTE: sealed references are NOT consumed here — a whole-slot
         # restore may still fail after this commit (the engine grafts
         # sealed-while-paused tail blobs afterwards), and an under-counted
@@ -727,7 +1000,7 @@ class PagedKVBackend(KVBackend):
             return
         phys = list(writes)
         pad = next_pow2(len(phys))
-        idx = jnp.asarray(phys + [phys[-1]] * (pad - len(phys)), jnp.int32)
+        idx = host_upload(phys + [phys[-1]] * (pad - len(phys)), jnp.int32)
 
         def put(path, leaf):
             kpath = _keystr(path)
@@ -736,7 +1009,7 @@ class PagedKVBackend(KVBackend):
             pages = np.stack([writes[p][kpath] for p in phys]
                              + [writes[phys[-1]][kpath]] * (pad - len(phys)),
                              axis=1)
-            return _set_pages(leaf, idx, jnp.asarray(pages))
+            return _set_pages(leaf, idx, host_upload(pages))
         self.blocks = jax.tree_util.tree_map_with_path(put, self.blocks)
 
     def _put_dense_rows(self, slot: int,
@@ -750,7 +1023,7 @@ class PagedKVBackend(KVBackend):
             row = rows.get(_keystr(path))
             if row is None:
                 return leaf
-            return _set_row(leaf, jnp.int32(slot), jnp.asarray(row))
+            return _set_row(leaf, jnp.int32(slot), host_upload(row))
         self.blocks = jax.tree_util.tree_map_with_path(put, self.blocks)
 
     def discard_sealed(self, key: SealingKey, sealed: Dict[str, SealedTensor],

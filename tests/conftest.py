@@ -58,6 +58,11 @@ CANONICAL_CONFIGS = {
     "paged": dict(kv_backend="paged", page_size=8),
     "paged-sharing": dict(kv_backend="paged", page_size=8,
                           prefix_sharing=True),
+    # table-walking Pallas decode kernel: attention is numerically close
+    # to the gather reference (f32 online softmax), not bitwise — decoded
+    # tokens must still agree at the canonical operating point.
+    "paged-kernel": dict(kv_backend="paged", page_size=8,
+                         kv_decode="kernel"),
     "sharded-dp2": dict(kv_backend="slot", mesh="dp=2"),
     # two-phase serving: step-level continuous batching (single plan,
     # per-step token budget) and disaggregated prefill (dedicated prefill
