@@ -58,6 +58,25 @@ SHARED_MAPS=$(sed -n 's/.*prefix sharing: \([0-9]*\) shared-page maps.*/\1/p' /t
     || { echo "sharing did not reduce sealed bytes (${SEALED_ON:-0} vs $SEALED_OFF)"; exit 1; }
 echo "prefix-sharing smoke OK: $SHARED_MAPS shared maps, sealed ${SEALED_ON:-0}B < ${SEALED_OFF}B"
 
+# page-store smoke: two epochs of the same recurring-prefix mix through the
+# persistent sealed-page store. The store line must show nonzero hits and
+# the second (warm) epoch must write strictly fewer pages than the first —
+# recurring full pages restore from retained ciphertext instead of
+# re-prefilling.
+python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \
+    --requests 4 --max-new-tokens 6 --slots 2 --max-len 64 \
+    --prefill-len 16 --prefill-buckets 16 --kv-backend paged --page-size 8 \
+    --shared-prefix-len 16 --page-store --store-budget-pages 16 \
+    --epochs 2 --seed 5 --sample-temp 0.7 | tee /tmp/ci_store_smoke.out
+STORE_HITS=$(sed -n 's/^store hits: \([0-9]*\) \/.*/\1/p' /tmp/ci_store_smoke.out)
+PAGES_E0=$(sed -n 's/^epoch 0: \([0-9]*\) pages written.*/\1/p' /tmp/ci_store_smoke.out)
+PAGES_E1=$(sed -n 's/^epoch 1: \([0-9]*\) pages written.*/\1/p' /tmp/ci_store_smoke.out)
+[ -n "$STORE_HITS" ] && [ "$STORE_HITS" -gt 0 ] \
+    || { echo "page-store run reported no store hits"; exit 1; }
+[ -n "$PAGES_E0" ] && [ -n "$PAGES_E1" ] && [ "$PAGES_E1" -lt "$PAGES_E0" ] \
+    || { echo "warm epoch did not write fewer pages (${PAGES_E1:-?} vs ${PAGES_E0:-?})"; exit 1; }
+echo "page-store smoke OK: $STORE_HITS store hits, warm ${PAGES_E1} < cold ${PAGES_E0} pages written"
+
 # continuous-batching smoke: step-level admission with a per-step token
 # budget through the same pipeline; must report its budget/backfill line
 python -m repro.launch.serve --arch deepseek-7b --smoke --tee tdx \

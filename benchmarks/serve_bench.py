@@ -50,6 +50,13 @@ modes, a strictly lower TTFT p99 for continuous batching, and nonzero
 sealed handoff bytes for the two-plan mode, then writes every mode's
 serving metrics to ``BENCH_serve.json``.
 
+The page-store sweep serves a recurring-prompt mix (a RAG-style shared head
+with distinct tails) for two epochs on one engine carrying a persistent
+sealed-page store: the cold epoch publishes full pages at release, the warm
+epoch restores them content-addressed (MAC-verified) — asserting a nonzero
+warm hit rate, strictly fewer pages written, byte-identical tokens, and the
+``overheads``-priced restore-vs-recompute breakeven.
+
 The mesh sweep (``--mesh dp=2`` or ``dp=2,tp=2``; relaunches itself with
 forced host devices when needed) serves the same seeded workload on a
 single device and on a mesh-spanning engine, asserts byte-identical
@@ -661,6 +668,106 @@ def fleet_sweep(model, params, vocab, *, tee: str, requests: int,
           f"{kill_row['migrated_bytes']}B migrated; rows -> {json_out}")
 
 
+def page_store_sweep(model, params, vocab, *, tee: str, json_out: str):
+    """Cold-start RAG workload through the persistent sealed-page store: a
+    recurring-prompt mix (one long shared head — the RAG context — plus
+    distinct tails) served twice on one engine. The cold epoch prefills and
+    publishes every full page at release; the warm epoch finds them
+    content-addressed in the store and restores MAC-verified ciphertext
+    instead of writing fresh pages. Asserts a nonzero warm hit rate,
+    strictly fewer pages written warm, byte-identical decoded tokens, and
+    prices the restore-vs-recompute breakeven through the overhead model.
+    Rows merge under the ``page-store`` key of ``json_out``."""
+    from repro.core.overheads import store_restore_savings
+    from repro.runtime.pagestore import SealedPageStore
+
+    max_slots, max_len, bucket, head_len, page_size = 2, 256, 128, 96, 16
+    rng = np.random.default_rng(29)
+    head = rng.integers(1, vocab, size=head_len).astype(np.int32)
+    prompts = [np.concatenate([head, rng.integers(
+                   1, vocab, size=bucket - head_len).astype(np.int32)])
+               for _ in range(4)]
+    store = SealedPageStore(budget_pages=64, policy="cost", profile=tee)
+    td = TrustDomain(tee)
+    eng = Engine(model, params, max_slots=max_slots, max_len=max_len,
+                 trust_domain=td, prefill_buckets=(bucket,),
+                 kv_backend="paged", page_size=page_size,
+                 prefix_sharing=True, page_store=store)
+    print(f"\npage-store sweep (tee={tee}, policy={store.policy}, "
+          f"budget={store.budget_pages} pages): {len(prompts)} recurring "
+          f"{bucket}-token prompts sharing a {head_len}-token head, "
+          f"2 epochs")
+
+    def wave(seed0):
+        return [eng.submit(GenerationRequest(
+                    prompt=p, max_new_tokens=16,
+                    params=SamplingParams(temperature=0.8, top_k=32,
+                                          seed=seed0 + i)))
+                for i, p in enumerate(prompts)]
+
+    # warmup on DISJOINT prompts, twice: the first pass pays the prefill /
+    # decode compiles, the second pays the store-hit restore path's shapes —
+    # without seeding the store with the measured wave's content.
+    warm_prompts = [rng.integers(1, vocab, size=bucket).astype(np.int32)
+                    for _ in range(2)]
+    for _ in range(2):
+        for i, p in enumerate(warm_prompts):
+            eng.submit(GenerationRequest(prompt=p, max_new_tokens=4))
+        eng.run(max_steps=100_000)
+    td.channel.stats.reset()
+
+    rows, outputs = [], []
+    for epoch in ("cold", "warm"):
+        pages0 = eng.kv.pages_written
+        hits0 = eng.kv.store_hits
+        t0 = time.monotonic()
+        reqs = wave(500)
+        eng.run(max_steps=200_000)
+        wall = time.monotonic() - t0
+        assert all(r.finished for r in reqs)
+        stats = stats_from_requests(reqs)
+        pages = eng.kv.pages_written - pages0
+        hits = eng.kv.store_hits - hits0
+        outputs.append([r.output for r in reqs])
+        rows.append(dict(
+            epoch=epoch, tokens=stats.total_tokens,
+            wall_s=round(wall, 3),
+            tokens_per_s=round(stats.throughput_tps, 1),
+            pages_written=pages, store_hits=hits,
+            hit_rate=round(hits / max(hits + pages, 1), 3)))
+        print(f"  {epoch:4s} {stats.total_tokens:5d} tok  {wall:6.2f}s  "
+              f"{stats.throughput_tps:8.1f} tok/s  pages written {pages:3d}"
+              f"  store hits {hits:3d}  hit rate {rows[-1]['hit_rate']:.0%}")
+
+    cold, warm = rows
+    assert outputs[0] == outputs[1], \
+        "the store epoch changed decoded output"
+    assert warm["store_hits"] > 0, \
+        "the warm epoch never hit the store — the tier is dead"
+    assert warm["pages_written"] < cold["pages_written"], \
+        (f"warm epoch must write strictly fewer pages "
+         f"({warm['pages_written']} vs {cold['pages_written']})")
+    assert warm["tokens_per_s"] >= 0.85 * cold["tokens_per_s"], \
+        (f"warm epoch slowed serving down "
+         f"({warm['tokens_per_s']} vs {cold['tokens_per_s']} tok/s)")
+    _, _, line = store_restore_savings(
+        eng.kv.store_restored_pages, eng.kv.store_restored_bytes,
+        eng.kv.store_restored_pages * page_size, tee)
+    print(f"  {line}")
+    report = dict(
+        epochs=rows, policy=store.policy, budget_pages=store.budget_pages,
+        publishes=store.publishes, republish_noops=store.republish_noops,
+        evictions=store.evictions, resident_pages=store.resident_pages,
+        restored_bytes=eng.kv.store_restored_bytes, breakeven=line)
+    path = Path(json_out)
+    data = json.loads(path.read_text()) if path.exists() else {}
+    data["page-store"] = report
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"page-store sweep OK: identical tokens; "
+          f"{cold['pages_written']}→{warm['pages_written']} pages written, "
+          f"warm hit rate {warm['hit_rate']:.0%}; rows -> {json_out}")
+
+
 def mesh_sweep(model, params, vocab, *, mesh: str, tee: str, max_slots: int,
                requests: int):
     """Single-device vs mesh-spanning engine over one seeded workload:
@@ -753,6 +860,10 @@ def main():
     ap.add_argument("--fleet", default="both", choices=["both", "none"],
                     help="fleet sweep: 1 worker vs 2 vs 2+mid-serve kill, "
                          "rows merged into the JSON report ('none' skips)")
+    ap.add_argument("--page-store", default="both", choices=["both", "none"],
+                    help="persistent sealed-page store sweep: cold vs warm "
+                         "epoch of a recurring-prompt mix, rows merged "
+                         "into the JSON report ('none' skips)")
     ap.add_argument("--json-out", default="BENCH_serve.json",
                     help="where the two-phase sweep writes its per-mode "
                          "serving metrics")
@@ -812,6 +923,10 @@ def main():
         fleet_sweep(model, params, cfg.vocab_size,
                     tee=args.tee if args.tee != "none" else "cgpu",
                     requests=min(args.requests, 8), json_out=args.json_out)
+    if args.page_store != "none":
+        page_store_sweep(model, params, cfg.vocab_size,
+                         tee=args.tee if args.tee != "none" else "cgpu",
+                         json_out=args.json_out)
     if args.mesh is not None:
         mesh_sweep(model, params, cfg.vocab_size, mesh=args.mesh,
                    tee=args.tee, max_slots=args.max_slots,

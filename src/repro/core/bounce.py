@@ -50,6 +50,13 @@ class ChannelStats:
     collective_steps: int = 0
     collective_bytes: int = 0
     collective_s: float = 0.0
+    # persistent sealed-page store (prefix-cache tier): hits re-enter the
+    # domain as content-named ciphertext (also counted in restore_*, the
+    # boundary they cross); evictions are host-side forgetting — no
+    # crossing, tracked for the retention experiments.
+    store_hits: int = 0
+    store_restored_bytes: int = 0
+    store_evictions: int = 0
 
     @property
     def crossings_per_token(self) -> float:
@@ -72,6 +79,8 @@ class ChannelStats:
         self.restore_events = self.restore_bytes = 0
         self.collective_steps = self.collective_bytes = 0
         self.collective_s = 0.0
+        self.store_hits = self.store_restored_bytes = 0
+        self.store_evictions = 0
 
 
 @dataclasses.dataclass

@@ -174,6 +174,29 @@ class TrustDomain:
         self.channel.stats.restore_bytes += int(n_bytes)
         self._log("restore_kv", f"{n_tensors} tensors {n_bytes}B {detail}".strip())
 
+    def record_store_hit(self, n_bytes: int, n_tensors: int,
+                         detail: str = "") -> None:
+        """Account one persistent-store restore: content-named ciphertext
+        re-entered the domain instead of the prefill recomputing it —
+        priced as a restore crossing (restore_events/bytes) plus the store
+        counters the hit-rate and breakeven reports read."""
+        self.channel.stats.restore_events += 1
+        self.channel.stats.restore_bytes += int(n_bytes)
+        self.channel.stats.store_hits += 1
+        self.channel.stats.store_restored_bytes += int(n_bytes)
+        self._log("store_hit",
+                  f"{n_tensors} tensors {n_bytes}B {detail}".strip())
+
+    def record_store_evict(self, n_bytes: int, n_tensors: int,
+                           detail: str = "") -> None:
+        """Account one store retention eviction. No boundary crossing —
+        the host simply forgets ciphertext it was caching — so only the
+        store counter moves (plus an audit line: what the retention policy
+        sheds is part of the deployment's measurable behavior)."""
+        self.channel.stats.store_evictions += 1
+        self._log("store_evict",
+                  f"{n_tensors} tensors {n_bytes}B {detail}".strip())
+
     def record_collective(self, n_bytes: int, seconds: float,
                           steps: int = 1) -> None:
         """Account ``steps`` decode steps' cross-device collective traffic

@@ -238,6 +238,61 @@ def fused_unseal_savings(fused_pages: int, fused_bytes: int,
     return brk, line
 
 
+# standing per-token prefill compute estimate for the store pricer when the
+# caller has no measurement (seconds per prompt token, batch-1 CPU-class
+# decode hardware; benches override it with (cold prefill wall / tokens)).
+# One definition — serve.py and the retention policy must price recompute
+# from the same constant.
+PREFILL_TOKEN_COMPUTE_S = 2e-5
+
+
+def store_restore_savings(pages: int, stored_bytes: int, tokens: int,
+                          profile: str | TEEProfile,
+                          *, prefill_token_s: Optional[float] = None
+                          ) -> "tuple[Optional[OverheadBreakdown], Optional[OverheadBreakdown], str]":
+    """Price a sealed-page-store hit both ways: restore vs recompute.
+
+    A store hit moves ``stored_bytes`` of content-named ciphertext back
+    across the TEE boundary (one boundary event per page, a decrypt pass
+    through encrypted memory) instead of re-running the prefill that
+    produced those ``tokens`` positions. Both sides are priced through
+    :func:`predict` so the breakeven lands in the same currency — and
+    under the same taxes — as every other number this module emits:
+
+    * restore: a page-sized memory term per page (``steps=pages`` so
+      ``fixed_boundary_s`` lands once per restored page, like
+      :func:`fused_unseal_savings`), zero compute;
+    * recompute: ``tokens * prefill_token_s`` of compute plus the single
+      KV write-out the prefill performs (the restore path writes the same
+      plaintext into the pool, so only the boundary/decrypt side differs).
+
+    Returns (restore, recompute, report line); (None, None, line) when
+    nothing was restored. The retention policy's cost score and the
+    serve/bench report lines both come from here.
+    """
+    from repro.roofline.analysis import HBM_BW   # lazy: core <-/-> roofline
+    if pages <= 0 or stored_bytes <= 0:
+        return None, None, ("store restore-vs-recompute: none "
+                            "(no store-restored pages)")
+    per_tok = PREFILL_TOKEN_COMPUTE_S if prefill_token_s is None \
+        else float(prefill_token_s)
+    per_page = stored_bytes / pages
+    restore = predict(RooflineTerms(compute_s=0.0,
+                                    memory_s=2 * per_page / HBM_BW),
+                      profile, steps=pages)
+    recompute = predict(RooflineTerms(compute_s=per_tok * tokens,
+                                      memory_s=stored_bytes / HBM_BW),
+                        profile)
+    net = recompute.t_tee_s - restore.t_tee_s
+    verdict = "store wins" if net > 0 else "recompute wins"
+    line = (f"store restore-vs-recompute ({restore.profile}): {pages} pages / "
+            f"{stored_bytes} B sealed across the boundary vs {tokens} prefill "
+            f"tokens recomputed -> restore {restore.t_tee_s * 1e6:.1f}us vs "
+            f"recompute {recompute.t_tee_s * 1e6:.1f}us "
+            f"({verdict}, net {abs(net) * 1e6:.1f}us)")
+    return restore, recompute, line
+
+
 def sweep_batch(profile: str, compute_per_token_s: float, memory_s: float,
                 batches: list[int]) -> Dict[int, float]:
     """Paper Fig 9/11 shape: overhead vs batch size. Compute scales with

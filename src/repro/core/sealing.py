@@ -81,6 +81,17 @@ def nonce_words_for(key: SealingKey, name: str) -> np.ndarray:
     return np.frombuffer(_nonce_for(key, name), np.uint32)
 
 
+def shared_page_name(content_key: bytes, kpath: str) -> str:
+    """The canonical sealed-tensor name for content-addressed KV pages
+    (shared-page parking and the persistent page store). Derived from the
+    page's content key alone, so identical content always seals under the
+    same name — and therefore the same nonce AND the same plaintext, the
+    pairing that makes a deterministic nonce safe to mint repeatedly: a
+    re-seal of the same content can never put two plaintexts under one
+    (key, nonce)."""
+    return f"kvshared/{content_key.hex()}{kpath}"
+
+
 @dataclasses.dataclass
 class SealedTensor:
     name: str

@@ -221,7 +221,9 @@ class Orchestrator:
         """Summed boundary counters across every worker's TrustDomain."""
         totals = {"messages_in": 0, "messages_out": 0, "tokens_out": 0,
                   "seal_events": 0, "seal_bytes": 0,
-                  "restore_events": 0, "restore_bytes": 0}
+                  "restore_events": 0, "restore_bytes": 0,
+                  "store_hits": 0, "store_restored_bytes": 0,
+                  "store_evictions": 0}
         for w in self.workers.values():
             ch = w.td.channel.stats
             for k in totals:

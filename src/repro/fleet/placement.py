@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List
 
+import numpy as np
+
 from repro.fleet.worker import EngineWorker
 from repro.runtime.api import GenerationRequest
 
@@ -36,8 +38,35 @@ def tenant_affinity(workers: List[EngineWorker],
     return least_loaded(workers, gen)
 
 
+def store_affinity(workers: List[EngineWorker],
+                   gen: GenerationRequest) -> EngineWorker:
+    """Prefer the worker whose content surfaces — live page index plus
+    persistent sealed-page store — already hold the most pages of this
+    prompt: routing a recurring prompt back to the worker that published
+    it converts a cold prefill into MAC-verified store restores. The
+    router sees only content-key residency counts (the same cumulative
+    hashes the index uses), never page data. Falls back to least-loaded on
+    an all-cold prompt or between equally-warm workers."""
+    def coverage(w: EngineWorker) -> int:
+        kv = getattr(w.engine, "kv", None)
+        if kv is None or not getattr(kv, "supports_sharing", False):
+            return 0
+        prompt = np.asarray(gen.prompt, np.int32)
+        keys = kv.page_keys(prompt, len(prompt))
+        if not keys:
+            return 0
+        return kv.resident_pages(keys) + kv.store_resident_pages(keys)
+    cover = {w.name: coverage(w) for w in workers}
+    best = max(cover.values())
+    if best > 0:
+        return least_loaded([w for w in workers if cover[w.name] == best],
+                            gen)
+    return least_loaded(workers, gen)
+
+
 PLACEMENTS: Dict[str, Callable[[List[EngineWorker], GenerationRequest],
                                EngineWorker]] = {
     "least_loaded": least_loaded,
     "tenant_affinity": tenant_affinity,
+    "store_affinity": store_affinity,
 }

@@ -24,6 +24,13 @@ a real all-gather on the serving mesh, not the closed-form estimate.
 workload a common K-token opening) turns on content-indexed shared prompt
 pages with copy-on-write and on-demand page allocation, and reports the
 shared-page map / CoW counters next to the sealed-traffic line.
+``--page-store`` (implies ``--prefix-sharing``) retains content-named
+sealed pages past the last live/parked reference in a persistent
+prefix-cache tier (``--store-budget-pages N`` bounds it, ``--store-policy
+lru|cost`` picks the retention scoring); with ``--epochs E`` the launcher
+replays the same workload E times so a recurring-prompt mix shows the
+second epoch hitting the store instead of re-prefilling, and the report
+prices the restore-vs-recompute breakeven.
 ``--continuous-batching`` (optionally ``--step-tokens N``) interleaves
 prefill admissions into decode steps under a per-step token budget instead
 of filling a bucket first; ``--prefill-plan dedicated`` disaggregates
@@ -57,7 +64,7 @@ from repro.configs import get_config, list_configs, smoke_config
 from repro.core import RooflineTerms, TrustDomain
 from repro.core.overheads import (STEP_COMPUTE_FRACTION,
                                   STEP_MEMORY_FRACTION, fused_unseal_savings,
-                                  measured_link_tax)
+                                  measured_link_tax, store_restore_savings)
 from repro.launch.mesh import ensure_host_devices
 from repro.models import build_model
 from repro.runtime import (Engine, FramePolicy, GenerationRequest,
@@ -105,7 +112,10 @@ def engine_kwargs(args):
                 prefill_plan=args.prefill_plan,
                 handoff_batch=args.handoff_batch,
                 reject_infeasible=args.reject_infeasible,
-                step_time_hint_s=args.step_time_hint_s)
+                step_time_hint_s=args.step_time_hint_s,
+                page_store=(args.store_policy if args.page_store else None),
+                store_budget_pages=(args.store_budget_pages
+                                    if args.page_store else None))
 
 
 def build_requests(args, cfg, tenants: int = 0):
@@ -193,6 +203,10 @@ def serve_fleet(args, cfg, model, params):
           f"{tot['tokens_out']} tokens, "
           f"{tot['seal_events']} seals / {tot['seal_bytes']} B out, "
           f"{tot['restore_events']} restores / {tot['restore_bytes']} B back")
+    if tot["store_hits"] or tot["store_evictions"]:
+        print(f"fleet store: {tot['store_hits']} hits / "
+              f"{tot['store_restored_bytes']} B restored / "
+              f"{tot['store_evictions']} evictions")
 
 
 def main():
@@ -243,6 +257,24 @@ def main():
                          "(reference) or the table-walking Pallas "
                          "paged-attention kernel with fused in-kernel "
                          "page unseal")
+    ap.add_argument("--page-store", action="store_true",
+                    help="retain content-named sealed pages past the last "
+                         "reference in a persistent prefix-cache tier "
+                         "(implies --prefix-sharing); recurring prompts "
+                         "restore MAC-verified pages instead of "
+                         "re-prefilling")
+    ap.add_argument("--store-budget-pages", type=int, default=None,
+                    metavar="N",
+                    help="page-store retention budget in pages "
+                         "(default: unbounded)")
+    ap.add_argument("--store-policy", default="lru",
+                    choices=["lru", "cost"],
+                    help="page-store retention policy: least-recently-used "
+                         "or the restore-vs-recompute priced scoring")
+    ap.add_argument("--epochs", type=int, default=1,
+                    help="replay the generated workload this many times "
+                         "(a recurring-prompt mix: epoch 2+ hits the "
+                         "page store)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     metavar="K",
                     help="give every generated prompt the same K-token head "
@@ -281,7 +313,8 @@ def main():
                     help="fleet mode: round-robin requests over M tenant "
                          "key domains")
     ap.add_argument("--placement", default="least_loaded",
-                    choices=["least_loaded", "tenant_affinity"],
+                    choices=["least_loaded", "tenant_affinity",
+                             "store_affinity"],
                     help="fleet placement policy")
     ap.add_argument("--kill-worker-at", type=int, default=None, metavar="STEP",
                     help="fleet mode: kill the busiest worker at this step; "
@@ -289,6 +322,9 @@ def main():
     args = ap.parse_args()
     args.step_time_hint_s = (None if args.step_time_hint_ms is None
                              else args.step_time_hint_ms * 1e-3)
+    if args.page_store:
+        # the store is the tier behind the content index — it needs page keys
+        args.prefix_sharing = True
 
     if args.workers and args.mesh is not None:
         raise SystemExit("--workers (fleet mode) and --mesh are mutually "
@@ -330,9 +366,18 @@ def main():
     if args.mesh is not None:
         print(f"[mesh] engine spans {engine.plan.describe()}")
     t0 = time.monotonic()
-    for gen in build_requests(args, cfg):
-        engine.submit(gen)
-    stats = engine.run()
+    for epoch in range(max(args.epochs, 1)):
+        pages0 = getattr(engine.kv, "pages_written", 0)
+        hits0 = getattr(engine.kv, "store_hits", 0)
+        for gen in build_requests(args, cfg):
+            engine.submit(gen)
+        stats = engine.run()
+        if args.epochs > 1:
+            print(f"epoch {epoch}: "
+                  f"{getattr(engine.kv, 'pages_written', 0) - pages0} "
+                  f"pages written, "
+                  f"{getattr(engine.kv, 'store_hits', 0) - hits0} "
+                  f"store hits")
     wall = time.monotonic() - t0
 
     print(f"served {stats.total_requests} requests / {stats.total_tokens} "
@@ -379,6 +424,20 @@ def main():
               f"{stats.cow_copies} CoW copies, "
               f"{engine.kv.pages_written} pages written "
               f"[alloc={'ondemand' if engine.kv.on_demand else 'reserve'}]")
+    store = getattr(engine.kv, "page_store", None)
+    if store is not None:
+        print(f"store hits: {engine.kv.store_hits} / "
+              f"{engine.kv.store_restored_bytes} B restored / "
+              f"{store.publishes} publishes "
+              f"({store.republish_noops} republish no-ops) / "
+              f"{store.evictions} evictions / "
+              f"{store.resident_pages} resident pages "
+              f"[policy={store.policy}, budget={store.budget_pages}]")
+        profile = args.tee if td.confidential else "cgpu"
+        _, _, line = store_restore_savings(
+            engine.kv.store_restored_pages, engine.kv.store_restored_bytes,
+            engine.kv.store_restored_pages * engine.kv.page_size, profile)
+        print(line)
     if args.mesh is not None:
         # measured-vs-modeled encrypted-interconnect (link_tax) comparison:
         # same roofline terms, collective time once from the closed form

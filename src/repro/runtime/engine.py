@@ -189,6 +189,8 @@ class Engine:
                  prefix_sharing: bool = False,
                  kv_alloc: Optional[str] = None,
                  kv_decode: str = "gather",
+                 page_store: Any = None,
+                 store_budget_pages: Optional[int] = None,
                  mesh: Optional[str] = None,
                  plan: Optional[ComputePlan] = None,
                  admission_order: str = "slack",
@@ -221,6 +223,20 @@ class Engine:
         preemption when the pool runs dry; implied by ``prefix_sharing``).
         Decoded outputs are byte-identical across all of these — only
         memory, sealing traffic, and scheduling change.
+
+        ``page_store`` (paged + sharing only) attaches the persistent
+        content-addressed sealed-page store — the prefix-cache tier that
+        retains content-named page ciphertext after the last live/sealed
+        reference drops (:mod:`repro.runtime.pagestore`). Pass ``True`` or
+        a policy name (``"lru"``/``"cost"``), or a ready
+        :class:`~repro.runtime.pagestore.SealedPageStore` instance (which
+        may be shared between engines — entries are namespaced per sealing
+        key, so sharing the object never shares ciphertext across trust
+        domains). ``store_budget_pages`` bounds store residency; prefill
+        misses restore MAC-verified store pages instead of recomputing,
+        admission discounts store-resident prefixes via
+        ``effective_kv_need``, and hits/evictions land in
+        ``TrustDomain``/``ServeStats`` accounting.
 
         ``kv_decode`` (paged only) selects the decode attention path:
         ``"gather"`` (default) rematerializes the dense KV view per step;
@@ -299,7 +315,13 @@ class Engine:
                                           page_size=page_size,
                                           num_pages=num_pages, plan=self.plan,
                                           prefix_sharing=prefix_sharing,
-                                          alloc=kv_alloc, decode=kv_decode)
+                                          alloc=kv_alloc, decode=kv_decode,
+                                          page_store=page_store,
+                                          store_budget_pages=store_budget_pages)
+        if getattr(self.kv, "page_store", None) is not None:
+            # fix the store's key domain to this engine's trust domain so
+            # lookups/publishes run before any seal ever caches a key
+            self.kv.bind_store_key(self.td.sealing_key)
         self._active_mask = np.zeros(max_slots, bool)
         self._last_token = np.zeros(max_slots, np.int32)
         self._preempted: List[PreemptedRequest] = []
@@ -1115,12 +1137,18 @@ class Engine:
     def _drain_kv_events(self) -> None:
         """Account boundary traffic the backend generated on its own:
         shared-page parking (a last live reference dropped while sealed
-        references remain — the page crosses out once, content-named) and
+        references remain — the page crosses out once, content-named),
         re-materialization (the first restore that needed it brings it
-        back)."""
+        back), and the persistent store's publish/hit/evict traffic."""
         for kind, nb, n in self.kv.drain_events():
             if kind == "park":
                 self.td.record_seal(nb, n, "shared page parked (last ref)")
+            elif kind == "store_publish":
+                self.td.record_seal(nb, n, "page published to sealed store")
+            elif kind == "store_hit":
+                self.td.record_store_hit(nb, n)
+            elif kind == "store_evict":
+                self.td.record_store_evict(nb, n)
             else:
                 self.td.record_restore(nb, n, "shared page rematerialized")
 
@@ -1240,6 +1268,11 @@ class Engine:
         stats = self.scheduler.stats()
         stats.shared_pages = getattr(self.kv, "shared_page_maps", 0)
         stats.cow_copies = getattr(self.kv, "cow_copies", 0)
+        stats.store_hits = getattr(self.kv, "store_hits", 0)
+        stats.store_restored_bytes = getattr(self.kv, "store_restored_bytes", 0)
+        # evictions come from the channel (event-accounted), not the store
+        # object — a store shared between engines counts fleet-wide there
+        stats.store_evictions = self.td.channel.stats.store_evictions
         return stats
 
     # -- sealed KV preemption ----------------------------------------------------

@@ -83,6 +83,33 @@ dry the engine frees capacity by evict-by-slack *capacity preemption*
 whole-slot seal). ``alloc="reserve"`` (the default without sharing) keeps
 the PR-3 worst-case reservations, under which appends can never fail.
 
+**Persistent sealed-page store** (``Engine(kv_backend="paged",
+prefix_sharing=True, page_store=True)``; see
+:mod:`repro.runtime.pagestore`). Plain prefix sharing only helps while
+some live mapping or sealed reference keeps a page alive: when the last
+reference drops, the parked ciphertext dies with it and the next
+recurring prompt re-prefills content the domain already produced and
+named. The store is the tier *behind* the content index that retains
+content-named ciphertext past the last reference: ``insert_prefill``
+misses consult it and restore MAC-verified pages into the pool (mapped
+and refcounted like any shared page), aligned full pages publish to it on
+seal/park/release, and admission discounts store-resident prefixes the
+same way it discounts live ones. When the store beats plain sharing:
+recurring-but-not-overlapping traffic — cold-start RAG contexts, system
+prompts across bursty sessions, tenant scaffolds with idle gaps — where
+requests arrive after their predecessors fully drained, so the live index
+is empty however hot the content. Plain sharing already covers the
+simultaneous case for free; the store adds host memory (budgeted in
+pages: ``store_budget_pages``, LRU or restore-vs-recompute ``cost``
+retention) and one MAC-verified unseal per hit, worth paying exactly when
+the ``overheads.predict``-priced sealed bytes across the boundary
+undercut the prefill compute a hit avoids
+(:func:`repro.core.overheads.store_restore_savings` — serve.py and
+serve_bench.py print the breakeven line). Entries are namespaced per
+sealing-key domain: a fleet tenant's entries fail MAC under any other
+domain and are never even offered cross-tenant (the lookup is a clean
+miss by key-id namespace).
+
 **Gather vs kernel decode** (``Engine(kv_backend="paged",
 kv_decode="gather"|"kernel")``; paged only). The default ``gather`` path
 rematerializes each slot's full dense KV view per decode step (``jnp.take``
@@ -459,6 +486,19 @@ class KVBackend:
         index right now (0 without sharing)."""
         return 0
 
+    # persistent sealed-page store tier (paged + sharing backends only);
+    # None means no store is attached and every store counter stays 0.
+    page_store = None
+    store_hits = 0
+    store_restored_pages = 0
+    store_restored_bytes = 0
+
+    def store_resident_pages(self, page_keys: Optional[Sequence[Any]]
+                             ) -> int:
+        """How many of these content keys the persistent page store could
+        serve beyond the live index (0 without a store)."""
+        return 0
+
     @property
     def free_physical_pages(self) -> int:
         """Free pages an on-demand grant can draw on (page backends only;
@@ -696,23 +736,30 @@ def make_backend(kind: str, model, *, max_slots: int, max_len: int,
                  plan: Optional[ComputePlan] = None,
                  prefix_sharing: bool = False,
                  alloc: Optional[str] = None,
-                 decode: str = "gather") -> KVBackend:
+                 decode: str = "gather",
+                 page_store: Any = None,
+                 store_budget_pages: Optional[int] = None) -> KVBackend:
     """Factory behind ``Engine(kv_backend=...)``. With a sharded ``plan``
     the chosen layout is built on the mesh and wrapped for per-shard
-    sealing. ``prefix_sharing``/``alloc``/``decode`` are paged-only (see
-    the module docstring's prefix-sharing and decode-mode sections)."""
+    sealing. ``prefix_sharing``/``alloc``/``decode``/``page_store`` are
+    paged-only (see the module docstring's prefix-sharing, store-tier, and
+    decode-mode sections)."""
     if kind == "slot":
-        if prefix_sharing or alloc is not None or decode != "gather":
-            raise ValueError("prefix_sharing / kv_alloc / kv_decode need "
-                             "kv_backend='paged' (the dense slot layout has "
-                             "no pages to share, grant, or table-walk)")
+        if (prefix_sharing or alloc is not None or decode != "gather"
+                or page_store or store_budget_pages is not None):
+            raise ValueError("prefix_sharing / kv_alloc / kv_decode / "
+                             "page_store need kv_backend='paged' (the dense "
+                             "slot layout has no pages to share, grant, "
+                             "table-walk, or store)")
         kv: KVBackend = SlotDenseBackend(model, max_slots, max_len, plan)
     elif kind == "paged":
         from repro.runtime.paged import PagedKVBackend
         kv = PagedKVBackend(model, max_slots, max_len,
                             page_size=page_size, num_pages=num_pages,
                             plan=plan, prefix_sharing=prefix_sharing,
-                            alloc=alloc, decode=decode)
+                            alloc=alloc, decode=decode,
+                            page_store=page_store,
+                            store_budget_pages=store_budget_pages)
     else:
         raise ValueError(
             f"unknown kv backend {kind!r} (want 'slot' or 'paged')")

@@ -55,6 +55,21 @@ identical ciphertext, so repeated parking can never pair one nonce with two
 plaintexts). ``seal_tail_pages``/``restore_tail_pages`` support partial
 eviction of the (always private) tail.
 
+Page store (``page_store=``). The persistent tier behind the content index
+(:mod:`repro.runtime.pagestore`): parking's content-named ciphertext, but
+retained past the last live/sealed reference. Aligned FULL pages publish to
+the store whenever their data is already sealed (parking, last-sealed-ref
+discard) or when their last mapping drops unsealed (release, sole-user
+divergence — one fresh seal, under the same canonical name parking uses,
+so the nonce-safety argument is unchanged and re-publishing resident
+content is a membership no-op). ``insert_prefill`` index misses and
+``restore``'s neither-resident-nor-parked case consult the store:
+a hit MAC-verifies and decrypts the blobs *before* any page or refcount
+moves, then maps the restored page exactly like a shared one. Store
+residency also discounts ``admission_check``'s effective need (the live
+index's discount, extended one tier down); entries are namespaced per
+sealing-key domain, so another tenant's lookups are clean misses.
+
 Decode modes (``decode=``). ``"gather"`` (default) is the dense-view path
 above — bit-identical to slot-dense, any model family, any plan.
 ``"kernel"`` replaces the gather with ``kernels/paged_attention.py``: a
@@ -87,7 +102,8 @@ import numpy as np
 
 from repro.core.sealing import (IntegrityError, SealedTensor, SealingKey,
                                 ciphertext_page_bytes, nonce_words_for,
-                                seal_tensor, unseal_tensor, verify_mac)
+                                seal_tensor, shared_page_name, unseal_tensor,
+                                verify_mac)
 from repro.kernels.ops import INTERPRET
 from repro.kernels.paged_attention import (paged_attention,
                                            paged_attention_unseal,
@@ -154,7 +170,8 @@ class PagedKVBackend(KVBackend):
                  page_size: int = 16, num_pages: Optional[int] = None,
                  plan: Optional[ComputePlan] = None,
                  prefix_sharing: bool = False, alloc: Optional[str] = None,
-                 decode: str = "gather"):
+                 decode: str = "gather", page_store: Any = None,
+                 store_budget_pages: Optional[int] = None):
         super().__init__(model, max_slots, max_len, plan)
         if decode not in ("gather", "kernel"):
             raise ValueError(f"decode must be 'gather' or 'kernel', "
@@ -177,6 +194,33 @@ class PagedKVBackend(KVBackend):
         self.on_demand = alloc == "ondemand"
         self.prefix_sharing = prefix_sharing
         self.supports_sharing = prefix_sharing
+        # persistent sealed-page store (the prefix-cache tier). Accepts a
+        # ready SealedPageStore (possibly shared between backends), True, or
+        # a policy name; store_budget_pages alone implies an LRU store.
+        if page_store is False:
+            page_store = None
+        if page_store is None and store_budget_pages is not None:
+            page_store = "lru"
+        if page_store is not None and not prefix_sharing:
+            raise ValueError(
+                "page_store requires prefix_sharing=True (the store is the "
+                "tier behind the content index — without page keys there is "
+                "nothing to address it by)")
+        if page_store is True:
+            page_store = "lru"
+        if isinstance(page_store, str):
+            from repro.runtime.pagestore import SealedPageStore
+            page_store = SealedPageStore(budget_pages=store_budget_pages,
+                                         policy=page_store)
+        elif page_store is not None and store_budget_pages is not None:
+            raise ValueError(
+                "store_budget_pages configures a store the backend "
+                "constructs; a ready SealedPageStore carries its own budget")
+        self.page_store = page_store
+        self.store_key: Optional[SealingKey] = None
+        self.store_hits = 0             # pages served from the store
+        self.store_restored_pages = 0
+        self.store_restored_bytes = 0
         self.page_size = page_size
         self.max_pages = max_len // page_size
         if num_pages is None:
@@ -234,6 +278,12 @@ class PagedKVBackend(KVBackend):
         self._page_key: Dict[int, bytes] = {}
         self._sealed_refs: Dict[bytes, int] = {}
         self._parked: Dict[bytes, Dict[str, SealedTensor]] = {}
+        # content keys whose page only part-fills (registered past
+        # written_len): never published to the store — store entries are
+        # aligned FULL pages only. Partialness is a content property (the
+        # chain hash covers the same truncated token run), so the flag is
+        # stable across engines sharing a store.
+        self._partial_keys: set = set()
         self._seal_key_cache: Optional[SealingKey] = None
         self._events: List[Tuple[str, int, int]] = []  # (kind, nbytes, n)
         self.shared_page_maps = 0     # mappings served by an index hit
@@ -478,10 +528,28 @@ class PagedKVBackend(KVBackend):
                                 self._key_salt)
 
     def resident_pages(self, page_keys: Optional[Sequence[bytes]]) -> int:
-        """How many of these content keys are resident in the index now."""
+        """How many of these content keys are resident in the LIVE index
+        now. Deliberately excludes store residency: admission's page
+        promises (:meth:`Engine._admit_need`) size physical takes from this
+        count, and a store hit still takes a fresh physical page — only the
+        *pricing* discount (:meth:`admission_check`) may see the store."""
         if not page_keys:
             return 0
         return sum(1 for k in page_keys if k in self._index)
+
+    def store_resident_pages(self, page_keys: Optional[Sequence[bytes]]
+                             ) -> int:
+        """How many of these content keys the persistent store could serve
+        beyond the live index — the admission discount's second tier (and
+        the fleet's store-affinity placement signal)."""
+        if not page_keys or self.page_store is None:
+            return 0
+        skey = self.store_key or self._seal_key_cache
+        if skey is None:
+            return 0
+        return sum(1 for k in page_keys
+                   if k not in self._index
+                   and self.page_store.contains(skey, k))
 
     def admission_check(self, need: int, page_keys: Optional[Sequence[bytes]]
                         = None) -> Tuple[bool, int]:
@@ -493,8 +561,12 @@ class PagedKVBackend(KVBackend):
         (``need`` minus resident shared positions): the unit admission
         charges against the pool, which is what lets a RAG request whose
         context prefix is resident admit alongside traffic that would
-        otherwise have reserved the pool away."""
-        resident = self.resident_pages(page_keys)
+        otherwise have reserved the pool away. Store-resident prefixes
+        discount the same way — a store hit skips the prefill recompute,
+        which is the cost effective demand prices — even though the
+        restored page still occupies a fresh physical page."""
+        resident = (self.resident_pages(page_keys)
+                    + self.store_resident_pages(page_keys))
         eff = max(1, int(need) - resident * self.page_size)
         return need <= self.request_capacity, eff
 
@@ -532,27 +604,72 @@ class PagedKVBackend(KVBackend):
             self._clear_crypt(phys)
             self._free_pages.append(phys)
 
+    def bind_store_key(self, key: SealingKey) -> None:
+        """Fix the key domain this backend's store traffic lives under (the
+        engine binds its TrustDomain sealing key at construction). Store
+        entries are namespaced by key id, so two engines sharing one store
+        object can never be offered each other's ciphertext — a cross-
+        domain lookup is a clean miss, and the independent per-domain MAC
+        key would reject the blob even if it were offered."""
+        self.store_key = key
+
+    def _content_key(self) -> Optional[SealingKey]:
+        """The key content-named blobs (parking AND the store) seal under:
+        the bound store key when present, else the last key seen — one
+        selection for both tiers, so parked blobs and store entries are
+        always interchangeable ciphertext."""
+        return self.store_key or self._seal_key_cache
+
+    def _seal_content_page(self, key: SealingKey, key_bytes: bytes,
+                           phys: int) -> Dict[str, SealedTensor]:
+        """Seal one resident page under its canonical content-derived name
+        (same content => same name => same nonce AND plaintext)."""
+        pages = self._page_arrays([phys])
+        return {kpath: seal_tensor(key, shared_page_name(key_bytes, kpath),
+                                   arr[:, 0])
+                for kpath, arr in pages.items()}
+
+    def _publish_store(self, skey: SealingKey, key_bytes: bytes,
+                       blobs: Dict[str, SealedTensor]) -> None:
+        """Hand content-named blobs to the persistent store; evictions the
+        budget forces surface as events (no boundary crossing — the host
+        simply forgets ciphertext)."""
+        for e in self.page_store.publish(skey, key_bytes, blobs,
+                                         tokens=self.page_size):
+            self._events.append(("store_evict", e.n_bytes, len(e.blobs)))
+
     def _unregister(self, phys: int) -> None:
         key = self._page_key.pop(phys, None)
-        if key is not None:
-            del self._index[key]
-            if self._sealed_refs.get(key, 0) > 0:
-                self._park(key, phys)
+        if key is None:
+            return
+        del self._index[key]
+        if self._sealed_refs.get(key, 0) > 0:
+            self._park(key, phys)
+        if (self.page_store is not None
+                and key not in self._partial_keys):
+            skey = self._content_key()
+            if skey is not None and not self.page_store.contains(skey, key):
+                # publish the dying page's content: reuse the parked blobs
+                # when parking just sealed them (no second crossing), else
+                # seal once here — a fresh "store_publish" boundary event.
+                blobs = self._parked.get(key)
+                if blobs is None:
+                    blobs = self._seal_content_page(skey, key, phys)
+                    nb = sum(b.n_bytes for b in blobs.values())
+                    self._events.append(("store_publish", nb, len(blobs)))
+                self._publish_store(skey, key, blobs)
 
     def _park(self, key_bytes: bytes, phys: int) -> None:
         """Last reference to a sealed-referenced shared page is dropping:
         move its data across the boundary ONCE, under its content-derived
         name (deterministic: same content => same nonce AND same plaintext,
         so a later identical parking can never violate nonce uniqueness)."""
-        assert self._seal_key_cache is not None, \
+        key = self._content_key()
+        assert key is not None, \
             "sealed refs exist but no sealing key was ever seen"
         if key_bytes in self._parked:
             return
-        pages = self._page_arrays([phys])
-        blobs = {}
-        for kpath, arr in pages.items():
-            name = f"kvshared/{key_bytes.hex()}{kpath}"
-            blobs[kpath] = seal_tensor(self._seal_key_cache, name, arr[:, 0])
+        blobs = self._seal_content_page(key, key_bytes, phys)
         self._parked[key_bytes] = blobs
         nb = sum(b.n_bytes for b in blobs.values())
         self._events.append(("park", nb, len(blobs)))
@@ -603,33 +720,83 @@ class PagedKVBackend(KVBackend):
         k = len(slots)
         rows = prefilled["pos"].shape[0]
         n_pages = self.pages_for(written_len)
-        src_rows, page_ord, phys = [], [], []
+        skey = self._content_key() if self.page_store is not None else None
+        # phase 1: plan every slot's pages with NO state mutation. Index
+        # misses consult the persistent store; a store hit's blobs are
+        # MAC-verified and decrypted HERE, so a tampered store entry fails
+        # the whole group before a single page or refcount moves. `pending`
+        # tracks keys an earlier group member will register at commit —
+        # later members share its page instead of double-registering.
+        plans: List[List[Tuple[str, int, Optional[bytes], Any]]] = []
+        pending: set = set()
         for i, slot in enumerate(slots):
             keys = page_keys[i] if page_keys else None
-            misses = []
+            plan = []
             for j in range(n_pages):
                 key = keys[j] if keys else None
-                hit = self._index.get(key) if key is not None else None
-                if hit is not None:
-                    # shared: map the resident page, write nothing
+                if key is not None and (key in self._index
+                                        or key in pending):
+                    plan.append(("hit", j, key, None))
+                    continue
+                if key is not None and skey is not None:
+                    blobs = self.page_store.lookup(skey, key)
+                    if blobs is not None:
+                        plain = {kpath: np.asarray(unseal_tensor(skey, st))
+                                 for kpath, st in blobs.items()}
+                        nb = sum(st.n_bytes for st in blobs.values())
+                        plan.append(("store", j, key, (plain, nb)))
+                        pending.add(key)
+                        continue
+                plan.append(("miss", j, key, None))
+                if key is not None:
+                    pending.add(key)
+            plans.append(plan)
+        # phase 2: commit — map hits, take pages for store hits and misses.
+        src_rows, page_ord, phys = [], [], []
+        store_writes: Dict[int, Dict[str, np.ndarray]] = {}
+        for i, slot in enumerate(slots):
+            store_js = [pl for pl in plans[i] if pl[0] == "store"]
+            misses = [pl for pl in plans[i] if pl[0] == "miss"]
+            # one batched take per slot (not one free-list reslice per page)
+            taken = self._take_pages(len(store_js) + len(misses))
+            for pl in plans[i]:
+                kind, j, key = pl[0], pl[1], pl[2]
+                if kind == "hit":
+                    # shared: map the resident page, write nothing (keys
+                    # pending at plan time committed in an earlier slot)
+                    hit = self._index[key]
                     self._page_ref[hit] += 1
                     self.table[slot, j] = hit
                     self.shared_page_maps += 1
-                else:
-                    misses.append((j, key))
-            # one batched take per slot (not one free-list reslice per page)
-            for (j, key), p in zip(misses, self._take_pages(len(misses))):
-                self.table[slot, j] = p
-                if key is not None:
+                elif kind == "store":
+                    plain, nb = pl[3]
+                    p = taken.pop(0)
+                    self.table[slot, j] = p
                     self._index[key] = p
                     self._page_key[p] = key
-                src_rows.append(i)
-                page_ord.append(j)
-                phys.append(p)
+                    store_writes[p] = plain
+                    self.store_hits += 1
+                    self.store_restored_pages += 1
+                    self.store_restored_bytes += nb
+                    self._events.append(("store_hit", nb, len(plain)))
+                else:
+                    p = taken.pop(0)
+                    self.table[slot, j] = p
+                    if key is not None:
+                        self._index[key] = p
+                        self._page_key[p] = key
+                        if (j + 1) * self.page_size > written_len:
+                            self._partial_keys.add(key)
+                    src_rows.append(i)
+                    page_ord.append(j)
+                    phys.append(p)
             self._alloc[slot] = n_pages
             self.pos[slot] = written_len
             self._promised_total -= int(self._promised[slot])
             self._promised[slot] = 0
+        # store-restored pages are intentionally NOT pages_written: that
+        # counter is the prefill-write cost the warm epoch is supposed to
+        # shrink (store_restored_pages counts the restores).
         self.pages_written += len(phys)
         if not phys:
             # every page of every group member was an index hit: route one
@@ -652,6 +819,8 @@ class PagedKVBackend(KVBackend):
             host_upload(src_rows, jnp.int32), host_upload(page_ord, jnp.int32),
             host_upload(phys, jnp.int32), host_upload(dense_rows, jnp.int32),
             host_upload(dense_slots, jnp.int32))
+        if store_writes:
+            self._scatter_pages(store_writes)
 
     def step_page_need(self, slot: int) -> int:
         """Physical pages decode() will take for this slot's next append:
@@ -929,7 +1098,7 @@ class PagedKVBackend(KVBackend):
                 private_pages[j] = {
                     kpath: np.asarray(unseal_tensor(key, st))
                     for kpath, st in blobs.items()}
-        plans: List[Tuple[str, int, bytes, Optional[Dict[str, np.ndarray]]]] = []
+        plans: List[Tuple[str, int, bytes, Any]] = []
         for j, k in zip(shared_ords, keys):
             if k in self._index:
                 plans.append(("relink", j, k, None))
@@ -937,10 +1106,21 @@ class PagedKVBackend(KVBackend):
                 blobs = {kpath: np.asarray(unseal_tensor(key, st))
                          for kpath, st in self._parked[k].items()}
                 plans.append(("remat", j, k, blobs))
+            elif (self.page_store is not None
+                  and self.page_store.contains(key, k)):
+                # third tier: the persistent store outlived the parked blob
+                # (e.g. a deadline abort discarded the last sealed ref).
+                # MAC-gate here, in phase 1, like everything else.
+                stored = self.page_store.lookup(key, k)
+                blobs = {kpath: np.asarray(unseal_tensor(key, st))
+                         for kpath, st in stored.items()}
+                nb = sum(st.n_bytes for st in stored.values())
+                plans.append(("storehit", j, k, (blobs, nb)))
             else:
                 raise IntegrityError(
-                    f"shared page (ordinal {j}) is neither resident nor "
-                    f"parked — sealed state references lost content")
+                    f"shared page (ordinal {j}) is neither resident, "
+                    f"parked, nor store-resident — sealed state references "
+                    f"lost content")
         dense_rows = {}
 
         def pull_names(path, leaf):
@@ -954,7 +1134,8 @@ class PagedKVBackend(KVBackend):
         # phase 2: commit — map, write, and account.
         assert self.on_demand or n_alloc <= int(self._reserved[slot]), \
             "restore into a smaller reservation — accounting bug"
-        n_fresh = len(private_ords) + sum(1 for p in plans if p[0] == "remat")
+        n_fresh = len(private_ords) + sum(1 for p in plans
+                                          if p[0] in ("remat", "storehit"))
         taken = self._take_pages(n_fresh)
         it = iter(taken)
         writes: Dict[int, Dict[str, np.ndarray]] = {}
@@ -978,6 +1159,17 @@ class PagedKVBackend(KVBackend):
                 self._page_ref[p] += 1
                 self.table[slot, j] = p
                 self.shared_page_maps += 1
+            elif kind == "storehit":
+                plain, nb = blobs
+                p = next(it)
+                self.table[slot, j] = p
+                self._index[k] = p
+                self._page_key[p] = k
+                writes[p] = plain
+                self.store_hits += 1
+                self.store_restored_pages += 1
+                self.store_restored_bytes += nb
+                self._events.append(("store_hit", nb, len(plain)))
             else:
                 p = next(it)
                 self.table[slot, j] = p
@@ -989,7 +1181,11 @@ class PagedKVBackend(KVBackend):
                                      len(self._parked[k])))
         self._alloc[slot] = n_alloc
         self.pos[slot] = pos
-        self.pages_written += len(writes)
+        # store-restored pages stay out of pages_written (same counter
+        # contract as insert_prefill: pages_written is prefill/seal-path
+        # write cost, store_restored_pages counts the restores)
+        self.pages_written += len(writes) - sum(1 for p in plans
+                                                if p[0] == "storehit")
         self._scatter_pages(writes)
         self._put_dense_rows(slot, dense_rows)
 
@@ -1043,7 +1239,19 @@ class PagedKVBackend(KVBackend):
                 self._sealed_refs[k] -= 1
                 if self._sealed_refs[k] <= 0:
                     del self._sealed_refs[k]
-                    self._parked.pop(k, None)
+                    blobs = self._parked.pop(k, None)
+                    # store retention: a deadline abort dropping the last
+                    # sealed reference must not take the content with it
+                    # when a store tier exists — admission may already have
+                    # discounted a waiting request against this key. The
+                    # dying parked blob IS the store's canonical ciphertext
+                    # (same name, same key), so hand it over — a membership
+                    # no-op when the release path already published it.
+                    if (blobs is not None and self.page_store is not None
+                            and k not in self._partial_keys):
+                        skey = self._content_key()
+                        if skey is not None:
+                            self._publish_store(skey, k, blobs)
 
     # -- partial eviction -----------------------------------------------------
     def evictable_tail_pages(self, slot: int) -> int:

@@ -202,6 +202,9 @@ class ServeStats:
     migrated_bytes: int = 0        # ciphertext bytes those migrations carried
     shared_pages: int = 0          # page mappings served by the prefix index
     cow_copies: int = 0            # shared tail pages copied on first write
+    store_hits: int = 0            # pages restored from the sealed store
+    store_restored_bytes: int = 0  # ciphertext bytes those hits moved back
+    store_evictions: int = 0       # store pages shed by retention policy
     wall_s: float = 0.0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     ttft_s: List[float] = dataclasses.field(default_factory=list)

@@ -73,6 +73,12 @@ CANONICAL_CONFIGS = {
     "slot-2plan": dict(kv_backend="slot", prefill_plan="dedicated"),
     "paged-2plan": dict(kv_backend="paged", page_size=8,
                         prefill_plan="dedicated"),
+    # persistent sealed-page store behind the content index: released
+    # full pages are retained as ciphertext and recurring prompts restore
+    # them (MAC-verified) instead of re-prefilling — same byte-identity
+    # contract across preemption and rerun.
+    "paged-store": dict(kv_backend="paged", page_size=8,
+                        prefix_sharing=True, page_store=True),
 }
 
 # engine shape shared by every configuration (2 slots => the high wave must
@@ -223,6 +229,10 @@ def check_pool_invariants(kv) -> None:
     for key in inner._parked:
         assert inner._sealed_refs.get(key, 0) > 0, \
             "parked ciphertext outlived every sealed reference"
+    store = getattr(inner, "page_store", None)
+    if store is not None and store.budget_pages is not None:
+        assert store.resident_pages <= store.budget_pages, \
+            "sealed-page store exceeded its retention budget"
     if not inner.on_demand:
         reserved = int(inner._reserved.sum())
         assert inner._reserve_free + reserved == inner.num_pages, \

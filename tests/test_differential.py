@@ -225,12 +225,12 @@ def sharer(seed, n=10, prio=0):
         params=SamplingParams(temperature=0.9, top_k=16, seed=seed))
 
 
-def seal_both_sharers(model, params):
+def seal_both_sharers(model, params, **kw):
     """Two requests sharing their whole prompt page, both sealed out: the
     first seal leaves the page resident (the mate still maps it), the
     second drops the last live reference and parks the page content-named.
     Returns (engine, [(sealed, req), ...], parked key)."""
-    eng = make_sharing_engine(model, params)
+    eng = make_sharing_engine(model, params, **kw)
     a, b = eng.submit(sharer(1)), eng.submit(sharer(2))
     for _ in range(2):
         eng.step()
@@ -328,6 +328,148 @@ class TestSharedPageAdversarial:
                 eng.td.sealing_key, sealed,
                 f"kvslot/{req.stream_id}/{req.seal_epoch - 1}")
         assert not eng.kv._sealed_refs and not eng.kv._parked
+        check_pool_invariants(eng.kv)
+
+    def test_store_publish_on_release_then_hit_is_byte_identical(
+            self, small_model):
+        """The persistent-store happy path: a finished request's full prompt
+        page is published (ciphertext, content-named) when its last
+        reference drops, and an identical later request restores it from
+        the store — MAC-verified — producing byte-identical output."""
+        cfg, model, params = small_model
+        eng = make_sharing_engine(model, params, page_store=True)
+        store = eng.kv.page_store
+        a = eng.submit(sharer(1))
+        eng.run()
+        assert store.publishes >= 1, "release must publish the full page"
+        assert eng.kv.store_hits == 0
+        b = eng.submit(sharer(1))
+        eng.run()
+        assert eng.kv.store_hits >= 1, "recurring prompt must hit the store"
+        assert b.output == a.output
+        ref = Engine(model, params, max_slots=1, max_len=64,
+                     prefill_len=8).generate(sharer(1)).tokens
+        assert a.output == ref
+        check_pool_invariants(eng.kv)
+
+    def test_tampered_store_ciphertext_fails_every_consumer_without_leak(
+            self, small_model):
+        """Flip one ciphertext bit of a store-resident page: every consumer
+        restoring through it must fail with an integrity error — raised
+        before a single pool page is taken, so nothing leaks."""
+        cfg, model, params = small_model
+        from repro.runtime.pagestore import SealedPageStore
+        store = SealedPageStore()
+        td = TrustDomain("tdx")
+        eng = make_sharing_engine(model, params, page_store=store,
+                                  trust_domain=td)
+        eng.submit(sharer(1))
+        eng.run()
+        entry = next(iter(store._domains[td.sealing_key.key_id()].values()))
+        blob = next(iter(entry.blobs.values()))
+        ct = np.asarray(blob.ciphertext).copy()
+        ct[0, 0] ^= 1
+        blob.ciphertext = jax.numpy.asarray(ct)
+        for seed in (5, 6):
+            consumer = make_sharing_engine(
+                model, params, page_store=store,
+                trust_domain=TrustDomain("tdx", sealing_key=td.sealing_key))
+            consumer.submit(sharer(seed))
+            with pytest.raises(IntegrityError):
+                consumer.run()
+            assert consumer.kv.free_physical_pages == consumer.kv.num_pages
+            check_pool_invariants(consumer.kv)
+
+    def test_cross_tenant_store_lookup_is_a_clean_miss(self, small_model):
+        """Two engines with distinct sealing keys share ONE store object:
+        tenant B's lookup of content tenant A published is a clean miss —
+        never a MAC failure — because entries are namespaced per key
+        domain; and A's blobs fail MAC under B's key if offered directly."""
+        cfg, model, params = small_model
+        from repro.core.sealing import unseal_tensor
+        from repro.runtime.pagestore import SealedPageStore
+        store = SealedPageStore()
+        eng_a = make_sharing_engine(model, params, page_store=store)
+        eng_b = make_sharing_engine(model, params, page_store=store)
+        a = eng_a.submit(sharer(1))
+        eng_a.run()
+        assert store.publishes >= 1
+        b = eng_b.submit(sharer(1))
+        eng_b.run()                       # must not raise: miss, not MAC fail
+        assert eng_b.kv.store_hits == 0
+        assert store.misses >= 1
+        assert b.output == a.output       # seeded: same bytes either way
+        # the domains are cryptographically separate, not just namespaced:
+        entry = next(iter(
+            store._domains[eng_a.td.sealing_key.key_id()].values()))
+        blob = next(iter(entry.blobs.values()))
+        with pytest.raises(IntegrityError):
+            unseal_tensor(eng_b.td.sealing_key, blob)
+        check_pool_invariants(eng_a.kv)
+        check_pool_invariants(eng_b.kv)
+
+    def test_republishing_identical_content_mints_no_new_nonce(
+            self, small_model):
+        """Serving the same prompt twice re-releases the same full page:
+        the second release must not re-seal or re-publish — the store entry
+        count, its ciphertext bytes, and the audit log's store-publish
+        lines all stay exactly as the first release left them."""
+        cfg, model, params = small_model
+        td = TrustDomain("tdx")
+        eng = make_sharing_engine(model, params, page_store=True,
+                                  trust_domain=td)
+        store = eng.kv.page_store
+        eng.submit(sharer(1))
+        eng.run()
+        dom = store._domains[td.sealing_key.key_id()]
+        cts = {k: {n: bytes(np.asarray(st.ciphertext).tobytes())
+                   for n, st in e.blobs.items()} for k, e in dom.items()}
+        pubs, noops = store.publishes, store.republish_noops
+        audit_pubs = sum(1 for e in td.audit if e.kind == "seal_kv"
+                         and "store" in e.detail)
+        eng.submit(sharer(1))
+        eng.run()
+        assert eng.kv.store_hits >= 1
+        assert store.publishes == pubs, "identical content re-published"
+        assert store.republish_noops == noops   # skipped pre-publish, not in it
+        assert sum(1 for e in td.audit if e.kind == "seal_kv"
+                   and "store" in e.detail) == audit_pubs, \
+            "second release sealed a store blob it already holds"
+        for k, e in store._domains[td.sealing_key.key_id()].items():
+            assert k in cts and cts[k] == {
+                n: bytes(np.asarray(st.ciphertext).tobytes())
+                for n, st in e.blobs.items()}, \
+                f"nonce {k.hex()} re-minted with fresh ciphertext"
+
+    def test_discard_sealed_publishes_then_store_serves_waiters(
+            self, small_model):
+        """The deadline-abort path (discard_sealed) eagerly releases parked
+        refs — but a store-retained page must survive that release while
+        admission counts it toward a waiting request's discount, and a
+        fresh identical request must then serve from the store."""
+        cfg, model, params = small_model
+        eng, sealed_reqs, key = seal_both_sharers(model, params,
+                                                  page_store=True)
+        store = eng.kv.page_store
+        assert store.contains(eng.td.sealing_key, key), \
+            "parking the last live ref must also publish the full page"
+        for sealed, req in sealed_reqs:
+            eng.kv.discard_sealed(
+                eng.td.sealing_key, sealed,
+                f"kvslot/{req.stream_id}/{req.seal_epoch - 1}")
+        assert not eng.kv._sealed_refs and not eng.kv._parked
+        assert store.contains(eng.td.sealing_key, key), \
+            "discard_sealed must not take the store entry down with the park"
+        keys = eng.kv.page_keys(PROMPT, len(PROMPT))
+        assert eng.kv.store_resident_pages(keys) == 1
+        assert eng.kv.resident_pages(keys) == 0
+        hits0 = eng.kv.store_hits
+        c = eng.submit(sharer(3))
+        eng.run()
+        assert eng.kv.store_hits > hits0
+        ref = Engine(model, params, max_slots=1, max_len=64,
+                     prefill_len=8).generate(sharer(3)).tokens
+        assert c.output == ref
         check_pool_invariants(eng.kv)
 
     def test_park_rematerialize_round_trip_is_exact(self, small_model):

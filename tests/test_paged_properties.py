@@ -85,6 +85,81 @@ def _assert_pristine(kv):
     assert not kv._parked and not kv._sealed_refs
 
 
+# four DISTINCT full-page contents for the store properties (the pool
+# patterns above mostly collide on purpose; here eviction needs variety)
+STORE_PATTERNS = [P8, P8 + 8, P8 + 16, P8 + 24]
+
+
+@pytest.fixture(scope="module")
+def store_engine(model_params):
+    """Tight pool AND tight store: 4 recurring distinct pages over a
+    2-page retention budget force publish/hit/evict churn on top of the
+    park/remat churn the small pool already drives."""
+    model, params = model_params
+    return make_sharing_engine(model, params, max_slots=3,
+                               prefill_buckets=(4, 8), num_pages=8,
+                               page_store=True, store_budget_pages=2)
+
+
+class TestPageStoreProperties:
+    @given(plan=st.lists(
+        st.tuples(st.integers(0, 3),      # which distinct full-page prompt
+                  st.integers(1, 5),      # max_new_tokens
+                  st.integers(0, 5),      # priority (forces park/remat)
+                  st.integers(0, 2)),     # engine steps after submit
+        min_size=1, max_size=10))
+    @settings(max_examples=12, deadline=None)
+    def test_random_store_churn_never_breaks_budget_or_pool(
+            self, store_engine, plan):
+        """Random publish/hit/evict/park/remat interleavings: the store
+        never exceeds its page budget, the pool never leaks or
+        double-frees, and every example drains back to a pristine pool
+        (store residency, by design, survives the drain)."""
+        eng = store_engine
+        store = eng.kv.page_store
+        for pat, mnt, prio, steps in plan:
+            eng.submit(GenerationRequest(
+                prompt=STORE_PATTERNS[pat].copy(), max_new_tokens=mnt,
+                priority=prio,
+                params=SamplingParams(temperature=0.9, top_k=8,
+                                      seed=pat * 11 + mnt)))
+            for _ in range(steps):
+                eng.step()
+                check_pool_invariants(eng.kv)
+                assert store.resident_pages <= store.budget_pages
+        _drain(eng)
+        _assert_pristine(eng.kv)
+        assert store.resident_pages <= store.budget_pages
+
+    def test_store_hit_restores_published_bytes_exactly(self, store_engine):
+        """Anchor (runs regardless of hypothesis): the plaintext a store
+        hit lands in the pool is byte-identical to what the publisher
+        sealed — through however much churn the store has seen."""
+        from repro.core.sealing import unseal_tensor
+        eng = store_engine
+        store = eng.kv.page_store
+        skey = eng.td.sealing_key
+        eng.generate(GenerationRequest(
+            prompt=P8.copy(), max_new_tokens=4,
+            params=SamplingParams(temperature=0.9, top_k=8, seed=77)))
+        (key,) = eng.kv.page_keys(P8, len(P8))
+        assert store.contains(skey, key)
+        expected = {kp: np.asarray(unseal_tensor(skey, blob))
+                    for kp, blob in store.lookup(skey, key).items()}
+        eng.submit(GenerationRequest(
+            prompt=P8.copy(), max_new_tokens=4,
+            params=SamplingParams(temperature=0.9, top_k=8, seed=78)))
+        eng.step()
+        hits0 = eng.kv.store_hits
+        assert hits0 >= 1
+        phys = eng.kv._index[key]
+        pages = eng.kv._page_arrays([phys])
+        for kp, want in expected.items():
+            np.testing.assert_array_equal(np.asarray(pages[kp][:, 0]), want)
+        _drain(eng)
+        _assert_pristine(eng.kv)
+
+
 class TestPoolInvariantProperties:
     @given(plan=st.lists(
         st.tuples(st.integers(0, 3),      # prompt pattern

@@ -1,0 +1,177 @@
+"""Unit tests for the persistent content-addressed sealed-page store.
+
+No engine here: these drive :class:`repro.runtime.pagestore.SealedPageStore`
+directly with hand-sealed blobs — the retention policies, the per-key-domain
+namespacing, the republish no-op contract, and the restore-vs-recompute
+pricing the cost policy scores with. The engine-integrated behavior
+(publish on release, MAC-gated restore, admission discounts) lives in
+tests/test_differential.py and tests/test_paged_properties.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.overheads import store_restore_savings
+from repro.core.sealing import (IntegrityError, SealingKey, seal_tensor,
+                                shared_page_name, unseal_tensor)
+from repro.runtime.pagestore import (POLICIES, SealedPageStore, StoreEntry,
+                                     _cost, _lru)
+
+KEY_A = SealingKey.generate(b"tenant-a")
+KEY_B = SealingKey.generate(b"tenant-b")
+
+
+def ck(i: int) -> bytes:
+    """A distinct 16-byte content key (what prefix_page_keys mints)."""
+    return bytes([i]) * 16
+
+
+def blobs_for(key: SealingKey, content_key: bytes, fill: float = 1.0):
+    """One sealed page under the canonical content-derived name — the same
+    (name => nonce) binding the paged backend publishes with."""
+    data = np.full((4, 8), fill, np.float32)
+    return {kp: seal_tensor(key, shared_page_name(content_key, kp), data)
+            for kp in ("/l0/k", "/l0/v")}
+
+
+class TestStoreBasics:
+    def test_publish_contains_lookup_roundtrip(self):
+        store = SealedPageStore()
+        blobs = blobs_for(KEY_A, ck(1), fill=3.0)
+        assert store.publish(KEY_A, ck(1), blobs, tokens=8) == []
+        assert store.contains(KEY_A, ck(1))
+        got = store.lookup(KEY_A, ck(1))
+        assert got is blobs
+        for kp, st in got.items():
+            np.testing.assert_array_equal(
+                np.asarray(unseal_tensor(KEY_A, st)),
+                np.full((4, 8), 3.0, np.float32))
+        assert store.hits == 1 and store.misses == 0
+        assert store.resident_pages == 1
+
+    def test_lookup_miss_counts_and_returns_none(self):
+        store = SealedPageStore()
+        assert store.lookup(KEY_A, ck(9)) is None
+        assert store.misses == 1 and store.hits == 0
+
+    def test_republish_is_a_membership_noop(self):
+        """Same content key, same domain: the second publish must not
+        replace the entry, mint ciphertext, or count as a publish — the
+        content-derived name guarantees the bytes are already identical."""
+        store = SealedPageStore()
+        blobs = blobs_for(KEY_A, ck(1))
+        store.publish(KEY_A, ck(1), blobs, tokens=8)
+        again = blobs_for(KEY_A, ck(1))   # byte-identical by construction
+        assert store.publish(KEY_A, ck(1), again, tokens=8) == []
+        assert store.publishes == 1
+        assert store.republish_noops == 1
+        assert store.lookup(KEY_A, ck(1)) is blobs   # original retained
+        # and the caller's re-sealed blobs really were byte-identical:
+        for kp in blobs:
+            assert bytes(np.asarray(blobs[kp].ciphertext).tobytes()) == \
+                bytes(np.asarray(again[kp].ciphertext).tobytes())
+
+    def test_rejects_unknown_policy_and_negative_budget(self):
+        with pytest.raises(ValueError, match="unknown store policy"):
+            SealedPageStore(policy="fifo")
+        with pytest.raises(ValueError, match=">= 0"):
+            SealedPageStore(budget_pages=-1)
+        assert sorted(POLICIES) == ["cost", "lru"]
+
+
+class TestRetention:
+    def test_lru_evicts_least_recently_touched(self):
+        store = SealedPageStore(budget_pages=2, policy="lru")
+        store.publish(KEY_A, ck(1), blobs_for(KEY_A, ck(1)), tokens=8)
+        store.publish(KEY_A, ck(2), blobs_for(KEY_A, ck(2)), tokens=8)
+        store.lookup(KEY_A, ck(1))        # touch 1: now 2 is the LRU victim
+        evicted = store.publish(KEY_A, ck(3), blobs_for(KEY_A, ck(3)),
+                                tokens=8)
+        assert [e.content_key for e in evicted] == [ck(2)]
+        assert store.contains(KEY_A, ck(1))
+        assert not store.contains(KEY_A, ck(2))
+        assert store.evictions == 1 and store.evicted_bytes > 0
+        assert store.resident_pages == 2
+
+    def test_cost_policy_sheds_cheap_to_recompute_first(self):
+        """An entry whose prefill is free to redo (tokens=0) scores below
+        one whose hit saves real recompute — recency does not save it."""
+        store = SealedPageStore(budget_pages=2, policy="cost")
+        store.publish(KEY_A, ck(1), blobs_for(KEY_A, ck(1)), tokens=64)
+        store.publish(KEY_A, ck(2), blobs_for(KEY_A, ck(2)), tokens=0)
+        evicted = store.publish(KEY_A, ck(3), blobs_for(KEY_A, ck(3)),
+                                tokens=64)
+        assert [e.content_key for e in evicted] == [ck(2)], \
+            "the worthless (recompute-wins) entry must be the first victim"
+        assert store.contains(KEY_A, ck(1))
+
+    def test_cost_chooser_weights_observed_hits(self):
+        """Directly on the chooser: a lower-saving entry that keeps hitting
+        outranks a higher-saving entry that never does."""
+        hot = StoreEntry(ck(1), "d", {}, 1024, 8, hits=9, stamp=1,
+                         net_saving_s=1e-4)
+        cold = StoreEntry(ck(2), "d", {}, 1024, 64, hits=0, stamp=2,
+                          net_saving_s=5e-4)
+        assert _cost([hot, cold]) is cold     # (0+1)*5e-4 < (9+1)*1e-4
+        assert _lru([hot, cold]) is hot       # recency alone says otherwise
+        fresh = StoreEntry(ck(3), "d", {}, 1024, 64, hits=0, stamp=3,
+                           net_saving_s=5e-4)
+        assert _cost([cold, fresh]) is cold   # equal score: stamp breaks tie
+
+    def test_publish_prices_a_positive_saving_for_real_pages(self):
+        store = SealedPageStore(policy="cost", profile="tdx")
+        store.publish(KEY_A, ck(1), blobs_for(KEY_A, ck(1)), tokens=64)
+        entry = next(iter(store._domains[KEY_A.key_id()].values()))
+        assert entry.net_saving_s > 0, \
+            "64 prefill tokens must out-cost restoring one sealed page"
+
+
+class TestDomainIsolation:
+    def test_other_domain_is_a_clean_miss_not_a_mac_failure(self):
+        store = SealedPageStore()
+        store.publish(KEY_A, ck(1), blobs_for(KEY_A, ck(1)), tokens=8)
+        assert not store.contains(KEY_B, ck(1))
+        assert store.lookup(KEY_B, ck(1)) is None
+        assert store.misses == 1
+        # and even an offered blob fails MAC under the other domain's key
+        blob = next(iter(store.lookup(KEY_A, ck(1)).values()))
+        with pytest.raises(IntegrityError):
+            unseal_tensor(KEY_B, blob)
+
+    def test_budget_spans_domains_but_entries_do_not(self):
+        store = SealedPageStore(budget_pages=2)
+        store.publish(KEY_A, ck(1), blobs_for(KEY_A, ck(1)), tokens=8)
+        store.publish(KEY_B, ck(1), blobs_for(KEY_B, ck(1)), tokens=8)
+        assert store.resident_pages == 2      # same content key, two domains
+        assert store.resident_count(KEY_A, [ck(1), ck(2)]) == 1
+        evicted = store.publish(KEY_A, ck(2), blobs_for(KEY_A, ck(2)),
+                                tokens=8)
+        assert len(evicted) == 1              # global budget crosses domains
+        assert store.resident_pages == 2
+        assert "domains" in store.describe()
+
+
+class TestRestoreVsRecomputePricing:
+    def test_zero_pages_is_the_none_line(self):
+        restore, recompute, line = store_restore_savings(0, 0, 0, "tdx")
+        assert restore is None and recompute is None
+        assert "none" in line
+
+    def test_priced_line_carries_both_sides(self):
+        restore, recompute, line = store_restore_savings(
+            4, 65536, 256, "tdx")
+        assert restore is not None and recompute is not None
+        assert restore.t_tee_s > 0 and recompute.t_tee_s > 0
+        assert "4 pages" in line and "256 prefill tokens" in line
+        assert ("store wins" in line) == \
+            (recompute.t_tee_s > restore.t_tee_s)
+
+    def test_breakeven_flips_with_prefill_cost(self):
+        """The verdict is a real breakeven, not a constant: make recompute
+        nearly free and restore must lose; make it expensive and win."""
+        _, _, cheap = store_restore_savings(4, 65536, 4, "tdx",
+                                            prefill_token_s=1e-9)
+        _, _, dear = store_restore_savings(4, 65536, 4096, "tdx",
+                                           prefill_token_s=1e-3)
+        assert "recompute wins" in cheap
+        assert "store wins" in dear
